@@ -1,0 +1,58 @@
+"""Benchmark 2 — server aggregation efficiency (paper §II.D efficiency
+
+claims): Algorithm-2 weighted aggregation throughput, jit-tree path vs the
+Pallas kernel path (interpret mode on CPU; the BlockSpec tiling is the TPU
+deliverable), across model sizes from the case-study LSTM to LLM shards.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.fedavg_agg.ops import aggregate_flat
+from repro.kernels.fedavg_agg.ref import agg_ref
+
+
+def _time(fn, *args, iters=5):
+    jax.block_until_ready(fn(*args))            # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run(sizes=(200_000, 2_000_000, 20_000_000), n_models=2):
+    rows = []
+    rng = np.random.default_rng(0)
+    ref_jit = jax.jit(agg_ref)
+    for t in sizes:
+        x = jnp.asarray(rng.standard_normal((n_models, t)), jnp.float32)
+        w = jnp.asarray(rng.dirichlet(np.ones(n_models)), jnp.float32)
+        us_ref = _time(ref_jit, x, w)
+        us_kernel = _time(lambda a, b: aggregate_flat(a, b), x, w)
+        gbps = (n_models + 1) * t * 4 / (us_ref / 1e6) / 1e9
+        rows.append({
+            "params": t,
+            "jit_us": us_ref,
+            "pallas_interpret_us": us_kernel,
+            "jit_effective_GBps": gbps,
+        })
+    return rows
+
+
+def csv_rows(rows):
+    out = []
+    for r in rows:
+        out.append((f"aggregation_{r['params']}", r["jit_us"],
+                    f"GBps={r['jit_effective_GBps']:.1f};"
+                    f"pallas_interpret_us={r['pallas_interpret_us']:.0f}"))
+    return out
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

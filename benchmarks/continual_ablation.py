@@ -1,0 +1,99 @@
+"""Benchmark 6 — paper §II.E: catastrophic-forgetting mitigation ablation.
+
+A client trains on task A (south-facing site), then continues on task B
+(east-facing site, other region) with and without the L2-anchor/EWC
+regularizer.  Reported: task-A error after B-training (anchored vs not)
+and the parameter drift from the task-A anchor.
+
+HONEST FINDING (see EXPERIMENTS.md §Repro note): on this synthetic fleet
+cross-site training transfers *positively* (weather-forecast features
+dominate, so task B improves the shared weather->power mapping) — the
+paper's forgetting pathology does not manifest at this scale.  The EWC
+*mechanism* is still validated: the anchored run's parameter drift is
+roughly half the plain run's (plus closed-form/gradient unit tests in
+tests/test_continual.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.solar_lstm import SolarLSTMConfig
+from repro.core.continual import make_anchor
+from repro.data.solar import SiteSpec, SolarDataGenerator
+from repro.data.windows import batch_iter, make_windows, split_windows
+from repro.models.lstm import SolarForecaster
+from repro.training.fed_solar import make_solar_fns
+from repro.training.metrics import summarize_errors
+
+
+def run(seed: int = 0, hidden: int = 64, epochs_a: int = 8, epochs_b: int = 8,
+        lam: float = 5.0):
+    # conflicting tasks: A = south-facing Vienna site, B = east-facing site
+    # in another region (different daily production shape — B-training
+    # genuinely rotates the model away from A's behaviour)
+    site_a = SiteSpec("abl-south", lat=48.2, lon=16.4, azimuth=180.0,
+                      tilt=30.0, kwp=10.0, region=0)
+    site_b = SiteSpec("abl-east", lat=50.1, lon=14.4, azimuth=95.0,
+                      tilt=35.0, kwp=10.0, region=1)
+    gen = SolarDataGenerator(n_days=45, seed=seed, start_day=100)
+    wa = make_windows(gen.generate_site(site_a))
+    wb = make_windows(gen.generate_site(site_b))
+    tr_a, te_a = split_windows(wa, 0.8)
+    tr_b, _ = split_windows(wb, 0.8)
+
+    cfg = SolarLSTMConfig(hidden_size=hidden)
+    fc = SolarForecaster(cfg)
+    sgd_step, predict = make_solar_fns(fc, lr=1e-2)
+
+    def train(params, windows, epochs, anchor_params, lam_):
+        rng = np.random.default_rng(seed + 7)
+        for _ in range(epochs):
+            for b in batch_iter(windows, 8, rng):
+                jb = {k: jnp.asarray(v) for k, v in b.items()
+                      if k in ("history", "forecast", "target")}
+                params, _ = sgd_step(params, jb, anchor_params,
+                                     jnp.float32(lam_))
+        return params
+
+    def err_on(params, te):
+        preds = np.asarray(predict(params, jnp.asarray(te["history"]),
+                                   jnp.asarray(te["forecast"])))
+        return summarize_errors(preds, te["target"], te["minute"])[
+            "mean_error_power"]
+
+    p0 = fc.init(jax.random.key(seed))
+    p_a = train(p0, tr_a, epochs_a, None, 0.0)
+    err_a_before = err_on(p_a, te_a)
+
+    p_plain = train(p_a, tr_b, epochs_b, None, 0.0)
+    p_ewc = train(p_a, tr_b, epochs_b, make_anchor(p_a).anchor, lam)
+
+    def drift(p):
+        return float(np.sqrt(sum(
+            np.sum((np.asarray(x, np.float64) - np.asarray(y, np.float64)) ** 2)
+            for x, y in zip(jax.tree.leaves(p), jax.tree.leaves(p_a)))))
+
+    return {
+        "task_a_error_after_a": err_a_before,
+        "task_a_error_after_b_plain": err_on(p_plain, te_a),
+        "task_a_error_after_b_ewc": err_on(p_ewc, te_a),
+        "forgetting_plain_pp": err_on(p_plain, te_a) - err_a_before,
+        "forgetting_ewc_pp": err_on(p_ewc, te_a) - err_a_before,
+        "param_drift_plain": drift(p_plain),
+        "param_drift_ewc": drift(p_ewc),
+        "lam": lam,
+    }
+
+
+def csv_rows(rep):
+    return [("continual_ewc", 0.0,
+             f"forgetting_plain={rep['forgetting_plain_pp']:+.2f}pp;"
+             f"forgetting_ewc={rep['forgetting_ewc_pp']:+.2f}pp;"
+             f"drift_ratio={rep['param_drift_ewc'] / max(rep['param_drift_plain'], 1e-9):.2f}")]
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,66 @@
+"""Benchmark 4 — harness §Roofline: reads the dry-run artifact JSONL and
+
+prints the per-(arch x shape x mesh) roofline table (three terms, dominant
+bottleneck, MODEL_FLOPS ratio).  Produced by:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out artifacts/dryrun.jsonl
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+ARTIFACT = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                        "dryrun.jsonl")
+
+
+def load(path=ARTIFACT):
+    if not os.path.exists(path):
+        return []
+    recs = []
+    with open(path) as f:
+        for line in f:
+            recs.append(json.loads(line))
+    # newest record per (arch, shape, mesh) wins
+    dedup = {}
+    for r in recs:
+        dedup[(r["arch"], r["shape"], r.get("mesh", "?"))] = r
+    return list(dedup.values())
+
+
+def print_table(recs):
+    ok = [r for r in recs if r["status"] == "ok"]
+    sk = [r for r in recs if r["status"] == "skipped"]
+    print(f"\nRoofline table ({len(ok)} compiled, {len(sk)} skipped)")
+    hdr = (f"{'arch':18s} {'shape':12s} {'mesh':8s} {'compute_s':>10s} "
+           f"{'memory_s':>10s} {'collect_s':>10s} {'dominant':>10s} "
+           f"{'useful%':>8s}")
+    print(hdr)
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        t = r["roofline"]
+        ratio = r.get("useful_flops_ratio") or 0
+        print(f"{r['arch']:18s} {r['shape']:12s} {r['mesh']:8s} "
+              f"{t['compute_s']:10.3g} {t['memory_s']:10.3g} "
+              f"{t['collective_s']:10.3g} {t['dominant']:>10s} "
+              f"{100 * ratio:7.1f}%")
+    for r in sk:
+        print(f"{r['arch']:18s} {r['shape']:12s} {r.get('mesh', ''):8s} "
+              f"SKIPPED: {r['reason']}")
+
+
+def csv_rows(recs):
+    rows = []
+    for r in recs:
+        if r["status"] != "ok":
+            continue
+        t = r["roofline"]
+        step_us = max(t["compute_s"], t["memory_s"], t["collective_s"]) * 1e6
+        rows.append((f"dryrun_{r['arch']}_{r['shape']}_{r['mesh']}", step_us,
+                     f"dominant={t['dominant']};"
+                     f"useful={100 * (r.get('useful_flops_ratio') or 0):.0f}%"))
+    return rows
+
+
+if __name__ == "__main__":
+    print_table(load())

@@ -1,0 +1,77 @@
+"""Benchmark entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  table2_run              Table II (model performance comparison)
+  indep_*                 §IV.E population-independent analysis
+  clustering              Fig. 2 pre-training clustering
+  aggregation_*           §II.D server aggregation efficiency
+  fed_round_*             Algorithm 1 protocol round timing
+  dryrun_*                harness §Roofline rows (if artifacts exist)
+
+Environment knobs: REPRO_BENCH_FAST=1 shrinks the Table-II run for CI.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+
+def main() -> None:
+    fast = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
+    rows: list[tuple] = []
+
+    # ---- Table II + §IV.E ---------------------------------------------------
+    from benchmarks import table2
+
+    t2_kwargs = (dict(seeds=(0,), n_sites=6, n_days=40, rounds=2) if fast
+                 else dict(seeds=(0, 1, 2), n_sites=9, n_days=60, rounds=3))
+    res = table2.run(**t2_kwargs)
+    table2.print_table(res)
+    rows += table2.csv_rows(res)
+    for col, d in res["independent"].items():
+        rows.append((f"indep_{col}", 0.0,
+                     f"degradation={d['degradation_pp']:+.2f}pp"))
+
+    # ---- clustering (Fig. 2) ------------------------------------------------
+    from benchmarks import clustering_report
+
+    crep = clustering_report.run()
+    rows += clustering_report.csv_rows(crep)
+
+    # ---- aggregation efficiency (§II.D) ------------------------------------
+    from benchmarks import aggregation_throughput
+
+    sizes = (200_000, 2_000_000) if fast else (200_000, 2_000_000, 20_000_000)
+    arep = aggregation_throughput.run(sizes=sizes)
+    rows += aggregation_throughput.csv_rows(arep)
+
+    # ---- protocol round timing (Algorithm 1) --------------------------------
+    from benchmarks import protocol_timing
+
+    prep = protocol_timing.run(fast=fast)
+    rows += protocol_timing.csv_rows(prep)
+
+    # ---- continual-learning ablation (§II.E) --------------------------------
+    from benchmarks import continual_ablation
+
+    crep2 = continual_ablation.run(epochs_a=4 if fast else 8,
+                                   epochs_b=4 if fast else 8)
+    rows += continual_ablation.csv_rows(crep2)
+
+    # ---- roofline table (if dry-run artifacts exist) ------------------------
+    from benchmarks import roofline_report
+
+    recs = roofline_report.load()
+    if recs:
+        roofline_report.print_table(recs)
+        rows += roofline_report.csv_rows(recs)
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

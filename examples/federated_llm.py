@@ -1,0 +1,82 @@
+"""FedCCL over assigned LLM architectures: demonstrates that the paper's
+
+technique is model-agnostic — the same three-tier protocol federates a
+dense, an MoE and an SSM architecture (reduced variants on CPU), with the
+EWC continual-learning anchor active and the Pallas aggregation kernel on
+the server path.
+
+    PYTHONPATH=src python examples/federated_llm.py [--arch mamba2-370m]
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced_for_smoke
+from repro.core.fedccl import ClusterSpaceConfig, FedCCL, FedCCLConfig
+from repro.core.protocol import ClientSpec
+from repro.data.lm_synth import lm_batch
+from repro.models.model import build_model
+from repro.optim.optimizers import adamw
+from repro.training.train_step import TrainState, build_train_step
+
+
+def federate(arch: str, n_orgs: int = 4, rounds: int = 2):
+    cfg = reduced_for_smoke(get_config(arch))
+    model = build_model(cfg)
+    opt = adamw(2e-3)
+    step = jax.jit(build_train_step(model, cfg, opt))
+    eval_batch = lm_batch(np.random.default_rng(99), 4, 32, cfg.vocab_size)
+    eval_jb = {k: jnp.asarray(v) for k, v in eval_batch.items()}
+
+    from repro.training.train_step import build_eval_step
+
+    eval_step = jax.jit(build_eval_step(model, cfg))
+
+    def train_fn(params, dataset, rng, anchor):
+        state = TrainState(params, opt.init(params))
+        for _ in range(3):
+            b = lm_batch(rng, 4, 32, cfg.vocab_size, structure=1.0)
+            state, _ = step(state, {k: jnp.asarray(v) for k, v in b.items()})
+        return state.params, 12, 1
+
+    init_params = model.init(jax.random.key(0))
+    loss0 = float(eval_step(init_params, eval_jb)["loss"])
+
+    fed = FedCCL(FedCCLConfig(
+        spaces=(ClusterSpaceConfig("loc", eps=150.0, min_samples=2,
+                                   metric="haversine"),),
+        ewc_lambda=0.01, use_pallas_agg=True, seed=0),
+        init_params, train_fn)
+
+    rng = np.random.default_rng(0)
+    centers = [(48.2, 16.4), (52.5, 13.4)]
+    specs = [ClientSpec(f"org{i}",
+                        {"loc": np.array(centers[i % 2])
+                         + rng.normal(0, 0.1, 2)}, None)
+             for i in range(n_orgs)]
+    fed.setup(specs)
+    stats = fed.run(rounds=rounds)
+    loss1 = float(eval_step(fed.store.params("global"), eval_jb)["loss"])
+    print(f"{arch:20s} eval loss {loss0:.3f} -> {loss1:.3f}  "
+          f"updates={stats['updates']} "
+          f"staleness={stats['mean_staleness']:.2f} "
+          f"fast_path={stats['fast_path_frac']:.2f}")
+    assert loss1 < loss0, "federated training should reduce eval loss"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="single arch id; default: one per family")
+    args = ap.parse_args()
+    archs = ([args.arch] if args.arch
+             else ["gemma-2b", "deepseek-moe-16b", "mamba2-370m"])
+    for arch in archs:
+        federate(arch)
+
+
+if __name__ == "__main__":
+    main()

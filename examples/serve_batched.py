@@ -1,0 +1,50 @@
+"""Batched serving example: KV-cached decode across architecture families
+
+(dense GQA cache, MoE + MLA latent cache, SSM constant state, hybrid
+RG-LRU + rolling local window) — the serving-side counterpart of the
+decode dry-runs.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced_for_smoke
+from repro.models.model import build_model
+from repro.serving.engine import ServeEngine
+
+ARCHS = ["gemma-2b", "deepseek-v3-671b", "mamba2-370m", "recurrentgemma-9b"]
+
+
+def main():
+    rng = np.random.default_rng(0)
+    for arch in ARCHS:
+        cfg = reduced_for_smoke(get_config(arch))
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        engine = ServeEngine(model, params, max_len=96)
+        prompts = rng.integers(0, cfg.vocab_size, (4, 12)).astype(np.int32)
+        t0 = time.time()
+        out = engine.generate(prompts, 48)
+        dt = time.time() - t0
+        print(f"{arch:20s} generated {out.shape[0]}x{out.shape[1]} tokens "
+              f"in {dt:5.2f}s ({out.shape[0] * out.shape[1] / dt:6.1f} tok/s) "
+              f"sample: {out[0, :8].tolist()}")
+
+    # continuous batching: requests of different lengths share one decode
+    # loop, each sequence at its own KV-cache offset (pos is a vector)
+    cfg = reduced_for_smoke(get_config("gemma-2b"))
+    model = build_model(cfg)
+    engine = ServeEngine(model, model.init(jax.random.key(0)), max_len=96)
+    reqs = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+            for n in (5, 11, 23)]
+    out = engine.generate_ragged(reqs, 16)
+    print(f"continuous-batching   3 ragged requests (len 5/11/23) -> "
+          f"{out.shape[1]} new tokens each; sample: {out[:, :6].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.checkpoint.msgpack_ckpt import load_pytree, save_pytree, save_store, load_store

@@ -1,0 +1,91 @@
+"""Checkpointing: msgpack-serialized pytrees (no orbax in this env).
+
+Arrays are stored as (dtype, shape, raw bytes); nested dicts/lists/scalars
+pass through.  ``save_store``/``load_store`` persist a full FedCCL
+ModelStore (global + every cluster model + metadata) so a server can
+restart without losing federation progress.
+"""
+
+from __future__ import annotations
+
+import os
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+_EXT_ARRAY = 1
+
+
+def _default(obj):
+    if isinstance(obj, (jnp.ndarray, np.ndarray)):
+        arr = np.asarray(obj)
+        payload = msgpack.packb(
+            (str(arr.dtype), list(arr.shape), arr.tobytes()), use_bin_type=True)
+        return msgpack.ExtType(_EXT_ARRAY, payload)
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    raise TypeError(f"cannot serialize {type(obj)}")
+
+
+def _ext_hook(code, data):
+    if code == _EXT_ARRAY:
+        dtype, shape, raw = msgpack.unpackb(data, raw=False)
+        if dtype == "bfloat16":
+            arr = np.frombuffer(raw, np.uint16).view(jnp.bfloat16).reshape(shape)
+        else:
+            arr = np.frombuffer(raw, dtype).reshape(shape)
+        return jnp.asarray(arr)
+    return msgpack.ExtType(code, data)
+
+
+def save_pytree(path, tree):
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(msgpack.packb(tree, default=_default, use_bin_type=True))
+
+
+def load_pytree(path):
+    with open(path, "rb") as f:
+        return msgpack.unpackb(f.read(), ext_hook=_ext_hook, raw=False,
+                               strict_map_key=False)
+
+
+# ---------------------------------------------------------------- ModelStore
+
+
+def save_store(path, store):
+    from repro.core.store import GLOBAL_KEY
+
+    blob = {}
+    for key in [GLOBAL_KEY] + store.keys():
+        params = store._records[key].params
+        meta = store._records[key].meta
+        blob[key] = {
+            "params": params,
+            "meta": {"samples_learned": meta.samples_learned,
+                     "epochs_learned": meta.epochs_learned,
+                     "round": meta.round},
+        }
+    save_pytree(path, blob)
+
+
+def load_store(path, agg_cfg=None):
+    from repro.core.aggregation import AggregationConfig, ModelMeta
+    from repro.core.store import GLOBAL_KEY, ModelRecord, ModelStore
+
+    blob = load_pytree(path)
+    store = ModelStore(blob[GLOBAL_KEY]["params"],
+                       agg_cfg=agg_cfg or AggregationConfig())
+    for key, rec in blob.items():
+        meta = ModelMeta(**{k: int(v) for k, v in rec["meta"].items()})
+        if key == GLOBAL_KEY:
+            store._records[GLOBAL_KEY].meta = meta
+        else:
+            store._records[key] = ModelRecord(rec["params"], meta)
+    return store

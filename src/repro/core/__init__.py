@@ -1,0 +1,5 @@
+from repro.core.aggregation import AggregationConfig, ModelMeta, UpdateDelta, aggregate_models
+from repro.core.clustering import DBSCAN, IncrementalDBSCAN, haversine_km
+from repro.core.continual import EWCState, ewc_penalty, fisher_diag_update
+from repro.core.fedccl import FedCCL, FedCCLConfig
+from repro.core.store import ModelRecord, ModelStore

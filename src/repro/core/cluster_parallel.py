@@ -1,0 +1,81 @@
+"""Cluster-parallel training — FedCCL's cluster tier mapped onto the pod axis.
+
+The paper's server trains K cluster models from asynchronous client
+updates.  At datacenter scale the same computation becomes *synchronous
+within a round*: each pod (mesh axis "pod") owns one cluster model and its
+clients' shards; one jitted step trains every cluster model simultaneously
+(vmap over the stacked cluster axis, sharded over "pod"), and the global
+model is the sample-weighted FedAvg across the cluster axis — which XLA
+lowers to a psum over "pod", i.e. Algorithm 2 as a collective schedule
+instead of an RPC pattern (DESIGN.md §3).
+
+The asynchronous protocol (core.protocol / runtimes) remains the
+deployment-faithful path; this module is the beyond-paper throughput path
+when clusters are co-scheduled on one TPU fleet.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.optim.optimizers import Optimizer
+from repro.sharding.logical import Rules, constrain
+from repro.training.train_step import TrainState, build_train_step
+
+
+class ClusterParallel:
+    """K cluster models trained in lock-step, one per pod slice."""
+
+    def __init__(self, model, cfg: ModelConfig, optimizer: Optimizer,
+                 n_clusters: int, *, rules: Optional[Rules] = None,
+                 grad_clip: float = 1.0, n_microbatches: Optional[int] = None):
+        self.model = model
+        self.cfg = cfg
+        self.optimizer = optimizer
+        self.n_clusters = n_clusters
+        self.rules = rules
+        self._inner = build_train_step(model, cfg, optimizer, rules=rules,
+                                       grad_clip=grad_clip,
+                                       n_microbatches=n_microbatches)
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> TrainState:
+        """Stacked state: every leaf gains a leading (K,) cluster axis.
+        All clusters start from the same global initialization (the paper
+        seeds cluster models from the global model)."""
+        params = self.model.init(key)
+        opt_state = self.optimizer.init(params)
+        stack = lambda x: jnp.broadcast_to(x[None], (self.n_clusters,) + x.shape)
+        return TrainState(jax.tree.map(stack, params),
+                          jax.tree.map(stack, opt_state))
+
+    # ------------------------------------------------------------------ step
+    def step(self, state: TrainState, batches: dict):
+        """batches: every leaf (K, B_per_cluster, ...).  One synchronous
+        FedCCL round for all K cluster models."""
+        new_state, metrics = jax.vmap(self._inner)(state, batches)
+        return new_state, metrics          # metrics leaves: (K,)
+
+    # ------------------------------------------------------------ global tier
+    def global_params(self, state: TrainState, sample_counts):
+        """Algorithm-2 sample-weighted FedAvg across the cluster axis —
+        the global-model tier.  Lowers to a psum over "pod" under the
+        multi-pod mesh."""
+        w = jnp.asarray(sample_counts, jnp.float32)
+        w = w / jnp.maximum(w.sum(), 1e-9)
+
+        def avg(x):
+            xf = x.astype(jnp.float32)
+            return jnp.tensordot(w, xf, axes=(0, 0)).astype(x.dtype)
+
+        return jax.tree.map(avg, state.params)
+
+    def broadcast_global(self, state: TrainState, global_params) -> TrainState:
+        """Optional periodic re-sync: reseed every cluster model from the
+        global model (the continual 'pull' toward shared knowledge)."""
+        stack = lambda x: jnp.broadcast_to(x[None], (self.n_clusters,) + x.shape)
+        return TrainState(jax.tree.map(stack, global_params), state.opt_state)

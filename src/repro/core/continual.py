@@ -1,0 +1,72 @@
+"""Continual learning (paper §II.E): L2-anchor / EWC regularization.
+
+The paper cites Kirkpatrick et al. (EWC) and describes an L2 penalty that
+keeps "important parameters" close to previously-learned values:
+
+    L_total = L_task + (lambda/2) * sum_i F_i (theta_i - theta*_i)^2
+
+With F_i = 1 this is plain L2-SP; with F_i = running Fisher diagonal it is
+online EWC.  ``repro.kernels.ewc_update`` provides the fused Pallas twin of
+the penalty+gradient computation.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class EWCState:
+    anchor: object                    # theta* — params after previous task
+    fisher: Optional[object] = None   # diagonal Fisher; None -> L2-SP (F=1)
+    lam: float = 1.0
+
+
+def ewc_penalty(params, state: EWCState):
+    """Scalar penalty (lambda/2) * sum F (theta - theta*)^2."""
+
+    def leaf(p, a, f):
+        d = p.astype(jnp.float32) - a.astype(jnp.float32)
+        if f is not None:
+            d2 = f.astype(jnp.float32) * d * d
+        else:
+            d2 = d * d
+        return jnp.sum(d2)
+
+    if state.fisher is None:
+        terms = jax.tree.map(lambda p, a: leaf(p, a, None), params, state.anchor)
+    else:
+        terms = jax.tree.map(leaf, params, state.anchor, state.fisher)
+    return 0.5 * state.lam * sum(jax.tree.leaves(terms))
+
+
+def ewc_penalty_and_grad(params, state: EWCState):
+    """Closed-form penalty gradient: lambda * F * (theta - theta*).
+    (No autodiff needed — used to fuse into the optimizer update.)"""
+
+    def gleaf(p, a, f):
+        d = p.astype(jnp.float32) - a.astype(jnp.float32)
+        g = state.lam * (f.astype(jnp.float32) * d if f is not None else d)
+        return g.astype(p.dtype)
+
+    if state.fisher is None:
+        grads = jax.tree.map(lambda p, a: gleaf(p, a, None), params, state.anchor)
+    else:
+        grads = jax.tree.map(gleaf, params, state.anchor, state.fisher)
+    return ewc_penalty(params, state), grads
+
+
+def fisher_diag_update(fisher, grads, decay: float = 0.95):
+    """Online diagonal-Fisher estimate from task gradients (EMA of g^2)."""
+    sq = jax.tree.map(lambda g: jnp.square(g.astype(jnp.float32)), grads)
+    if fisher is None:
+        return sq
+    return jax.tree.map(lambda f, s: decay * f + (1 - decay) * s, fisher, sq)
+
+
+def make_anchor(params, fisher=None, lam: float = 1.0) -> EWCState:
+    return EWCState(anchor=jax.tree.map(lambda x: x, params), fisher=fisher, lam=lam)

@@ -1,0 +1,110 @@
+"""FedCCL facade: wires clustering, store, protocol, continual learning and
+
+a runtime into one object — the library's main entry point.
+
+    fed = FedCCL(FedCCLConfig(...), init_params, train_fn)
+    fed.setup(client_specs)          # pre-training DBSCAN clustering
+    fed.run(rounds=5)                # async training (simulated or threaded)
+    keys, params = fed.join(new_spec)  # Predict & Evolve for a new client
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.aggregation import AggregationConfig
+from repro.core.clustering import IncrementalDBSCAN
+from repro.core.predict_evolve import ClusterSpace, PredictEvolve
+from repro.core.protocol import Client, ClientSpec
+from repro.core.runtime_sim import AsyncSimRuntime
+from repro.core.runtime_threaded import AsyncThreadedRuntime
+from repro.core.store import ModelStore
+
+
+@dataclass(frozen=True)
+class ClusterSpaceConfig:
+    name: str                       # must match a static_features key
+    eps: float
+    min_samples: int = 3
+    metric: str = "euclidean"
+
+
+@dataclass(frozen=True)
+class FedCCLConfig:
+    spaces: tuple = (
+        ClusterSpaceConfig("loc", eps=150.0, min_samples=3, metric="haversine"),
+        ClusterSpaceConfig("ori", eps=25.0, min_samples=3, metric="cyclic"),
+    )
+    ewc_lambda: float = 0.0          # continual-learning anchor strength
+    runtime: str = "sim"             # "sim" | "threaded"
+    seed: int = 0
+    dropout_prob: float = 0.0        # client-unavailability resilience knob
+    use_pallas_agg: bool = False
+
+
+class FedCCL:
+    def __init__(self, cfg: FedCCLConfig, init_params, train_fn):
+        self.cfg = cfg
+        self.train_fn = train_fn
+        self.store = ModelStore(
+            init_params,
+            agg_cfg=AggregationConfig(use_pallas=cfg.use_pallas_agg))
+        self.spaces = [
+            ClusterSpace(s.name, IncrementalDBSCAN(s.eps, s.min_samples, s.metric))
+            for s in cfg.spaces]
+        self.pe = PredictEvolve(self.spaces, self.store)
+        self.clients: list[Client] = []
+        self._init_params = init_params
+        self._runtime = None
+
+    # ----------------------------------------------------------------- setup
+    def setup(self, specs: list[ClientSpec]) -> dict[str, list[str]]:
+        assignments = self.pe.bootstrap(specs)
+        for i, spec in enumerate(specs):
+            c = Client(spec=spec,
+                       cluster_keys=assignments[spec.client_id],
+                       train_fn=self.train_fn,
+                       ewc_lambda=self.cfg.ewc_lambda,
+                       rng=np.random.default_rng(self.cfg.seed + 1000 + i))
+            c.local_params = self._init_params
+            self.clients.append(c)
+        return assignments
+
+    # ------------------------------------------------------------------- run
+    def run(self, rounds: int = 1):
+        if self.cfg.runtime == "threaded":
+            rt = AsyncThreadedRuntime(self.clients, self.store, rounds)
+            rt.run()
+            self._runtime = rt
+            return {"updates": self.store.n_updates}
+        rt = AsyncSimRuntime(self.clients, self.store, seed=self.cfg.seed,
+                             dropout_prob=self.cfg.dropout_prob)
+        rt.run(rounds)
+        self._runtime = rt
+        return rt.stats()
+
+    # ----------------------------------------------------- Predict & Evolve
+    def join(self, spec: ClientSpec) -> tuple[list[str], object]:
+        """New client: immediate specialized model, then becomes participant."""
+        keys, params = self.pe.join(spec)
+        c = Client(spec=spec, cluster_keys=keys, train_fn=self.train_fn,
+                   ewc_lambda=self.cfg.ewc_lambda,
+                   rng=np.random.default_rng(self.cfg.seed + 5000 + len(self.clients)))
+        c.local_params = params
+        self.clients.append(c)
+        return keys, params
+
+    # ------------------------------------------------------------- inference
+    def model_for(self, client_id: str, level: str = "auto"):
+        client = next(c for c in self.clients if c.spec.client_id == client_id)
+        if level == "local":
+            return client.local_params, "local"
+        if level == "global":
+            return self.store.params("global"), "global"
+        if level.startswith("cluster"):
+            key = level.split(":", 1)[1] if ":" in level else client.cluster_keys[0]
+            return self.store.params("cluster", key), f"cluster:{key}"
+        return self.pe.choose_inference_model(client)

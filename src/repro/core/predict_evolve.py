@@ -1,0 +1,84 @@
+"""Predict & Evolve (paper contribution 2).
+
+"Predict": a newly joining client is assigned to clusters by incremental
+DBSCAN over its *static* characteristics and immediately receives the
+matching specialized model(s) — zero training rounds needed.
+
+"Evolve": once the client starts contributing data it becomes a normal
+protocol participant, refining the cluster models it belongs to.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core.clustering import NOISE, IncrementalDBSCAN
+from repro.core.protocol import Client, ClientSpec
+from repro.core.store import ModelStore
+
+
+@dataclass
+class ClusterSpace:
+    """One clustering namespace, e.g. 'loc' (haversine over lat/lon) or
+    'ori' (cyclic over azimuth)."""
+
+    name: str
+    clusterer: IncrementalDBSCAN
+
+    def key(self, label: int) -> Optional[str]:
+        return None if label == NOISE else f"{self.name}:{label}"
+
+
+class PredictEvolve:
+    def __init__(self, spaces: list[ClusterSpace], store: ModelStore):
+        self.spaces = spaces
+        self.store = store
+
+    # ------------------------------------------------------------- bootstrap
+    def bootstrap(self, specs: list[ClientSpec]) -> dict[str, list[str]]:
+        """Pre-training clustering over the initial population (paper §II.B).
+        Returns client_id -> cluster keys."""
+        assignments: dict[str, list[str]] = {s.client_id: [] for s in specs}
+        for space in self.spaces:
+            for spec in specs:
+                label = space.clusterer.insert(
+                    np.asarray(spec.static_features[space.name], np.float64))
+                # labels can merge/shift as later points arrive; re-read after
+            # final labels after all inserts
+            for i, spec in enumerate(specs):
+                label = int(space.clusterer.labels[i])
+                key = space.key(label)
+                if key is not None:
+                    assignments[spec.client_id].append(key)
+                    self.store.ensure_cluster(key)
+        return assignments
+
+    # ------------------------------------------------------------ new client
+    def join(self, spec: ClientSpec) -> tuple[list[str], object]:
+        """Predict phase: assign clusters, hand back the best model snapshot
+        (first cluster model if any, else global)."""
+        keys = []
+        for space in self.spaces:
+            label = space.clusterer.insert(
+                np.asarray(spec.static_features[space.name], np.float64))
+            key = space.key(label)
+            if key is not None:
+                keys.append(key)
+                self.store.ensure_cluster(key)
+        if keys:
+            params, _ = self.store.request_model("cluster", keys[0])
+        else:
+            params, _ = self.store.request_model("global")
+        return keys, params
+
+    def choose_inference_model(self, client: Client):
+        """Paper §VI open question — we implement the pragmatic default:
+        prefer the first cluster model, else global."""
+        if client.cluster_keys:
+            params, _ = self.store.request_model("cluster", client.cluster_keys[0])
+            return params, f"cluster:{client.cluster_keys[0]}"
+        params, _ = self.store.request_model("global")
+        return params, "global"

@@ -1,0 +1,53 @@
+"""Real-thread asynchronous runtime: clients as threads against the locked
+
+ModelStore — the closest in-process analogue of the paper's deployment
+(independent edge clients + central server with per-model locks).  Used by
+one integration test and the threaded example; the deterministic sim is the
+default for experiments.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Optional
+
+from repro.core.protocol import Client
+from repro.core.store import ModelStore
+
+
+class AsyncThreadedRuntime:
+    def __init__(self, clients: list[Client], store: ModelStore,
+                 rounds_per_client: int = 2, stagger: float = 0.0):
+        self.clients = clients
+        self.store = store
+        self.rounds = rounds_per_client
+        self.stagger = stagger
+        self.errors: list[BaseException] = []
+
+    def _client_loop(self, client: Client, idx: int):
+        try:
+            if self.stagger:
+                time.sleep(self.stagger * idx)
+            for _ in range(self.rounds):
+                client.train_local()
+                for key in client.cluster_keys:
+                    p, m = client.fetch(self.store, "cluster", key)
+                    args = client.train_update(p, m)
+                    client.submit(self.store, "cluster", key, *args)
+                p, m = client.fetch(self.store, "global", None)
+                args = client.train_update(p, m)
+                client.submit(self.store, "global", None, *args)
+        except BaseException as e:  # surfaced by join()
+            self.errors.append(e)
+
+    def run(self):
+        threads = [threading.Thread(target=self._client_loop, args=(c, i),
+                                    name=f"client-{c.spec.client_id}")
+                   for i, c in enumerate(self.clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        if self.errors:
+            raise self.errors[0]

@@ -1,0 +1,110 @@
+"""Three-tier server model store (paper Fig. 1 + Algorithm 1 server side).
+
+Levels: "global" (one model), "cluster" (one per cluster key, keys are
+namespaced e.g. "loc:2" / "ori:1"), and client-side "local" models which
+never touch the server.  ``handle_model_update`` implements the server
+update handler with per-model locking (lines 19-25 of Algorithm 1).
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+
+from repro.core.aggregation import (
+    AggregationConfig,
+    ModelMeta,
+    UpdateDelta,
+    aggregate_models,
+)
+
+GLOBAL_KEY = "__global__"
+
+
+@dataclass
+class ModelRecord:
+    params: object
+    meta: ModelMeta = field(default_factory=ModelMeta)
+    lock: threading.Lock = field(default_factory=threading.Lock)
+
+    def snapshot(self):
+        return self.params, self.meta
+
+
+class ModelStore:
+    """Thread-safe store for global + cluster models."""
+
+    def __init__(self, init_params, cluster_keys=(),
+                 agg_cfg: AggregationConfig = AggregationConfig()):
+        self.agg_cfg = agg_cfg
+        self._records: dict[str, ModelRecord] = {}
+        self._registry_lock = threading.Lock()
+        self._records[GLOBAL_KEY] = ModelRecord(init_params)
+        for key in cluster_keys:
+            self._records[str(key)] = ModelRecord(init_params)
+        # instrumentation
+        self.n_updates = 0
+        self.n_fast_path = 0
+        self.n_lock_waits = 0
+
+    # ------------------------------------------------------------------ keys
+    @staticmethod
+    def _key(level: str, cluster_key: Optional[str]) -> str:
+        if level == "global":
+            return GLOBAL_KEY
+        assert cluster_key is not None, "cluster level requires a key"
+        return str(cluster_key)
+
+    def ensure_cluster(self, cluster_key: str, init_params=None):
+        """Predict & Evolve: a newly formed cluster gets a model seeded from
+        the current global model (immediate specialization base)."""
+        key = str(cluster_key)
+        with self._registry_lock:
+            if key not in self._records:
+                seed = init_params if init_params is not None else \
+                    self._records[GLOBAL_KEY].params
+                self._records[key] = ModelRecord(seed)
+
+    def keys(self):
+        return [k for k in self._records if k != GLOBAL_KEY]
+
+    # -------------------------------------------------------------- protocol
+    def request_model(self, level: str, cluster_key: Optional[str] = None):
+        """RequestModel — snapshot read (no lock needed for consistency; the
+        paper's clients read whatever the latest aggregated state is)."""
+        rec = self._records[self._key(level, cluster_key)]
+        return rec.snapshot()
+
+    def handle_model_update(self, level: str, cluster_key: Optional[str],
+                            updated_params, updated_meta: ModelMeta,
+                            delta: UpdateDelta, *, blocking: bool = True) -> bool:
+        """HandleModelUpdate (Algorithm 1 lines 19-25): lock the one model
+        being updated, aggregate, store, release.  Returns False if
+        ``blocking=False`` and the lock was busy (client retries later)."""
+        rec = self._records[self._key(level, cluster_key)]
+        acquired = rec.lock.acquire(blocking=blocking)
+        if not acquired:
+            self.n_lock_waits += 1
+            return False
+        try:
+            fast = (self.agg_cfg.sequential_fast_path
+                    and updated_meta.round == rec.meta.round + 1)
+            rec.params, rec.meta = aggregate_models(
+                rec.params, rec.meta, updated_params, updated_meta, delta,
+                self.agg_cfg)
+            self.n_updates += 1
+            if fast:
+                self.n_fast_path += 1
+        finally:
+            rec.lock.release()
+        return True
+
+    # ------------------------------------------------------------- inspection
+    def meta(self, level: str, cluster_key: Optional[str] = None) -> ModelMeta:
+        return self._records[self._key(level, cluster_key)].meta
+
+    def params(self, level: str, cluster_key: Optional[str] = None):
+        return self._records[self._key(level, cluster_key)].params

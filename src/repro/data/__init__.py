@@ -1,0 +1,2 @@
+from repro.data.solar import SiteSpec, SolarDataGenerator, generate_fleet
+from repro.data.windows import make_windows

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel package has three modules:
+  <name>.py  — the pl.pallas_call kernel with explicit BlockSpec VMEM tiling
+  ops.py     — the jit'd public wrapper (padding, flattening, dispatch)
+  ref.py     — the pure-jnp oracle the kernel is validated against
+
+Kernels target TPU (MXU/VPU-aligned tiles); on this CPU container they are
+validated with ``interpret=True``.  Set ``REPRO_PALLAS_INTERPRET=0`` on real
+TPU hardware.
+"""
+
+import os
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"

@@ -1,0 +1,1 @@
+from repro.kernels.ewc_update.ops import ewc_penalty_grad_flat

@@ -1,0 +1,1 @@
+from repro.kernels.fedavg_agg.ops import aggregate_flat, aggregate_pytrees

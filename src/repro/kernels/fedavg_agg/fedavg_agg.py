@@ -1,0 +1,48 @@
+"""N-way sample-weighted parameter aggregation kernel (FedCCL server).
+
+The server-side FedAvg step is a pure streaming op: read N parameter
+buffers, emit one convex combination.  Arithmetic intensity is
+~N FLOP / (N+1)*4 bytes < 0.25 FLOP/B — firmly HBM-bandwidth-bound on TPU
+(ridge point ~240 FLOP/B on v5e), so the kernel's only job is to stream
+tiles through VMEM exactly once with no intermediate materialization.
+
+Layout: models stacked (N, T) fp32, weights (N,) in SMEM, grid over T-tiles
+of 8*128*LANES so every block is VPU-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 8 * 128 * 8  # 8192 f32 lanes per block = 32 KiB -> well under VMEM
+
+
+def _agg_kernel(w_ref, x_ref, o_ref):
+    """x_ref: (N, TILE) block; w_ref: (N, 1) weights (SMEM); o_ref: (TILE,)."""
+    n = x_ref.shape[0]
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for i in range(n):                      # N is static (unrolled adds)
+        acc = acc + x_ref[i, :] * w_ref[i, 0]
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def agg_tiled(stacked: jnp.ndarray, weights: jnp.ndarray, *, interpret: bool = True):
+    """stacked: (N, T) f32 with T % TILE == 0; weights: (N,) f32 -> (T,)."""
+    n, t = stacked.shape
+    grid = (t // TILE,)
+    return pl.pallas_call(
+        _agg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),      # weights: replicated block
+            pl.BlockSpec((n, TILE), lambda i: (0, i)),   # model tiles, streamed
+        ],
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((t,), jnp.float32),
+        interpret=interpret,
+    )(weights.reshape(n, 1).astype(jnp.float32), stacked.astype(jnp.float32))

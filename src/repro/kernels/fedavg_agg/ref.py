@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the aggregation kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def agg_ref(stacked: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """stacked: (N, T); weights: (N,) -> (T,) convex combination."""
+    return jnp.einsum("nt,n->t", stacked.astype(jnp.float32),
+                      weights.astype(jnp.float32))
+
+
+def aggregate_pytrees_ref(trees, weights):
+    out = jax.tree.map(lambda x: x.astype(jnp.float32) * weights[0], trees[0])
+    for t, w in zip(trees[1:], weights[1:]):
+        out = jax.tree.map(lambda a, b, w=w: a + b.astype(jnp.float32) * w, out, t)
+    return jax.tree.map(lambda a, t: a.astype(t.dtype), out, trees[0])

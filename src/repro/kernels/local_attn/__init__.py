@@ -1,0 +1,1 @@
+from repro.kernels.local_attn.ops import local_flash_attention

@@ -1,0 +1,29 @@
+"""Oracle: dense masked softmax attention (materializes the score matrix)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0**30
+
+
+def local_attention_ref(q, k, v, *, causal: bool, window: int, scale: float):
+    """q: (B, H, S, D); k/v: (B, KV, T, D) -> (B, H, S, D)."""
+    B, H, S, D = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    g = H // KV
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(T)[None, :]
+    ok = jnp.ones((S, T), bool)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window:
+        ok &= k_pos > q_pos - window
+    s = jnp.where(ok, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", w, v.astype(jnp.float32)).astype(q.dtype)

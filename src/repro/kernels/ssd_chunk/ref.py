@@ -1,0 +1,9 @@
+"""Oracle: the pure-jnp SSD from repro.models.ssm (chunk-size invariant)."""
+
+from __future__ import annotations
+
+from repro.models.ssm import ssd_chunked
+
+
+def ssd_ref(x, dt, A, B, C, chunk, init_state=None):
+    return ssd_chunked(x, dt, A, B, C, chunk, init_state)

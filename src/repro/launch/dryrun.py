@@ -1,0 +1,390 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) combination against the production mesh, with no real allocation
+(ShapeDtypeStruct stand-ins), and extract memory / cost / collective
+numbers for the roofline analysis.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out artifacts/dryrun.jsonl
+  ... add --multi-pod for the 2-pod (512-chip) pass.
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (
+    ALL_ARCHS,
+    INPUT_SHAPES,
+    get_config,
+    shape_is_applicable,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (
+    RooflineTerms,
+    analytic_costs,
+    collective_bytes_from_hlo,
+    model_flops,
+    roofline_terms,
+)
+from repro.models.blocks import stack_layout
+from repro.models.model import build_model
+from repro.optim.optimizers import adamw
+from repro.serving.kv_cache import cache_shapes, cache_specs
+from repro.sharding.logical import logical_to_spec, make_rules, specs_from_schema
+from repro.training.train_step import TrainState, build_train_step
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; never allocated)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg, shape):
+    """Returns (batch_sds, batch_logical) for the given mode."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if cfg.family == "audio":
+        fe = cfg.frontend.embed_dim
+        sds = {
+            "embeds": jax.ShapeDtypeStruct((B, S, fe), jnp.bfloat16),
+            "mask": jax.ShapeDtypeStruct((B, S), jnp.bool_),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+        logical = {
+            "embeds": ("batch", "seq", "frontend_in"),
+            "mask": ("batch", "seq"),
+            "labels": ("batch", "seq"),
+        }
+        return sds, logical
+    if cfg.family == "vlm" and shape.mode != "decode":
+        npatch = cfg.frontend.tokens_per_sample
+        text = S - npatch
+        sds = {
+            "patches": jax.ShapeDtypeStruct((B, npatch, cfg.frontend.embed_dim),
+                                            jnp.bfloat16),
+            "tokens": jax.ShapeDtypeStruct((B, text), i32),
+            "labels": jax.ShapeDtypeStruct((B, text), i32),
+        }
+        logical = {
+            "patches": ("batch", "seq", "frontend_in"),
+            "tokens": ("batch", "seq"),
+            "labels": ("batch", "seq"),
+        }
+        return sds, logical
+    sds = {
+        "tokens": jax.ShapeDtypeStruct((B, S), i32),
+        "labels": jax.ShapeDtypeStruct((B, S), i32),
+    }
+    logical = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+    return sds, logical
+
+
+def _shardings(tree_sds, logical_tree, mesh, rules):
+    return jax.tree.map(
+        lambda s, lg: NamedSharding(mesh, logical_to_spec(lg, rules, s.shape)),
+        tree_sds, logical_tree, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def _spec_shardings(spec_tree, mesh):
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# One dry-run
+# ---------------------------------------------------------------------------
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            remat: str = "full", moment_dtype: str = "float32",
+            mla_absorb: bool = True, donate: bool = True,
+            extra_rules: dict | None = None, n_microbatches: int | None = None,
+            verbose: bool = True) -> dict:
+    shape = INPUT_SHAPES[shape_name]
+    cfg = get_config(arch)
+    ok, reason = shape_is_applicable(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "multi_pod": multi_pod, "remat": remat, "mla_absorb": mla_absorb,
+        "n_microbatches": n_microbatches,
+        "extra_rules": {k: str(v) for k, v in (extra_rules or {}).items()},
+    }
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+
+    if shape.mode == "train" and remat != "none":
+        cfg = cfg.replace(remat=remat)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    overrides = dict(extra_rules or {})
+    if shape.mode == "decode" and shape.global_batch < mesh.shape["data"]:
+        # batch can't shard: spread the KV-cache sequence axis over `data`
+        overrides.setdefault("kv_seq", "data")
+    rules = make_rules(mesh, multi_pod=multi_pod, **overrides)
+
+    model = build_model(cfg)
+    params_sds = model.param_shapes()
+    params_specs = model.param_specs(rules)
+    params_sh = _spec_shardings(params_specs, mesh)
+
+    t0 = time.time()
+    if shape.mode == "train":
+        opt = adamw(3e-4, moment_dtype=jnp.dtype(moment_dtype))
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        opt_sh = {"step": NamedSharding(mesh, P()),
+                  "m": params_sh, "v": params_sh}
+        state_sds = TrainState(params_sds, opt_sds)
+        state_sh = TrainState(params_sh, opt_sh)
+        batch_sds, batch_logical = input_specs(cfg, shape)
+        batch_sh = _shardings(batch_sds, batch_logical, mesh, rules)
+        step = build_train_step(model, cfg, opt, rules=rules,
+                                mla_absorb=mla_absorb,
+                                n_microbatches=n_microbatches)
+        jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                         donate_argnums=(0,) if donate else ())
+        with mesh:
+            lowered = jitted.lower(state_sds, batch_sds)
+            compiled = lowered.compile()
+
+    elif shape.mode == "prefill":
+        batch_sds, batch_logical = input_specs(cfg, shape)
+        batch_sh = _shardings(batch_sds, batch_logical, mesh, rules)
+
+        def prefill(params, batch):
+            kw = {}
+            if cfg.family == "audio":
+                logits, _ = model.forward(params, embeds=batch["embeds"],
+                                          mask=batch["mask"], rules=rules)
+            elif cfg.family == "vlm":
+                logits, _ = model.forward(params, tokens=batch["tokens"],
+                                          embeds=batch["patches"], rules=rules)
+            else:
+                logits, _ = model.forward(params, tokens=batch["tokens"],
+                                          rules=rules, mla_absorb=mla_absorb)
+            return jnp.argmax(logits[:, -1], axis=-1)
+
+        jitted = jax.jit(prefill, in_shardings=(params_sh, batch_sh))
+        with mesh:
+            lowered = jitted.lower(params_sds, batch_sds)
+            compiled = lowered.compile()
+
+    else:  # decode
+        window_override = None
+        if shape.name == "long_500k" and cfg.family in ("dense", "moe", "vlm"):
+            window_override = cfg.long_context_window
+        B, S = shape.global_batch, shape.seq_len
+        caches_sds = cache_shapes(model, B, S, jnp.bfloat16)
+        caches_sh = jax.tree.map(lambda sp: NamedSharding(mesh, sp),
+                                 cache_specs(caches_sds, rules))
+        tok_sds = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        tok_sh = NamedSharding(mesh, logical_to_spec(("batch", "seq"), rules, (B, 1)))
+        pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+        pos_sh = NamedSharding(mesh, P())
+
+        def decode(params, caches, tokens, pos):
+            logits, new_caches = model.decode_step(
+                params, caches, tokens, pos, rules=rules,
+                window_override=window_override, mla_absorb=mla_absorb)
+            return jnp.argmax(logits[:, -1], axis=-1), new_caches
+
+        jitted = jax.jit(decode,
+                         in_shardings=(params_sh, caches_sh, tok_sh, pos_sh),
+                         donate_argnums=(1,) if donate else ())
+        with mesh:
+            lowered = jitted.lower(params_sds, caches_sds, tok_sds, pos_sds)
+            compiled = lowered.compile()
+
+    compile_s = time.time() - t0
+
+    # ---------------- artifact extraction -----------------------------------
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:  # CPU backend may not implement it
+        mem_info = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    scan_trip = max((rep for mode, _, rep in stack_layout(cfg) if mode == "scan"),
+                    default=1)
+    coll = collective_bytes_from_hlo(hlo, scan_trip=scan_trip)
+    n_params = cfg.n_params()
+    n_active = cfg.n_active_params()
+    n_chips = 512 if multi_pod else 256
+    window_override = (cfg.long_context_window
+                       if shape.name == "long_500k"
+                       and cfg.family in ("dense", "moe", "vlm") else None)
+    ana = analytic_costs(cfg, shape, n_chips, dict(mesh.shape),
+                         remat=remat if shape.mode == "train" else "none",
+                         moment_bytes=jnp.dtype(moment_dtype).itemsize,
+                         window_override=window_override,
+                         mla_absorb=mla_absorb)
+    terms = roofline_terms(
+        {"flops": ana["flops_per_dev"], "bytes accessed": ana["bytes_per_dev"]},
+        coll)
+    mf = model_flops(cfg, shape, n_params, n_active)
+
+    rec.update(
+        status="ok",
+        compile_s=round(compile_s, 1),
+        n_params=n_params,
+        n_active_params=n_active,
+        roofline=terms.as_dict(),
+        collectives=coll,
+        memory=mem_info,
+        hlo_raw_cost={"flops_per_dev_body_once": float(cost.get("flops", 0) or 0),
+                      "bytes_per_dev_body_once": float(cost.get("bytes accessed", 0) or 0)},
+        analytic=ana,
+        model_flops_global=mf,
+        useful_flops_ratio=(mf / ana["flops_global"]) if ana["flops_global"] else None,
+    )
+    if verbose:
+        print(json.dumps(rec, indent=None, default=str))
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# Cluster-parallel (FedCCL pod-axis) dry-run: K cluster models trained in one
+# step, cluster axis sharded over "pod", global tier = FedAvg psum over pod.
+# ---------------------------------------------------------------------------
+
+
+def run_cluster_parallel(arch: str, shape_name: str = "train_4k", *,
+                         remat: str = "full", verbose: bool = True) -> dict:
+    from repro.core.cluster_parallel import ClusterParallel
+    from repro.optim.optimizers import adamw
+
+    shape = INPUT_SHAPES[shape_name]
+    assert shape.mode == "train"
+    cfg = get_config(arch).replace(remat=remat)
+    mesh = make_production_mesh(multi_pod=True)
+    K = mesh.shape["pod"]
+    rules = make_rules(mesh)             # inner step: batch->data, FSDP->data
+    model = build_model(cfg)
+    opt = adamw(3e-4)
+    cp = ClusterParallel(model, cfg, opt, n_clusters=K, rules=rules)
+
+    params_sds = model.param_shapes()
+    opt_sds = jax.eval_shape(opt.init, params_sds)
+    stack_sds = lambda t: jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((K,) + s.shape, s.dtype), t)
+    state_sds = TrainState(stack_sds(params_sds), stack_sds(opt_sds))
+
+    params_specs = model.param_specs(rules)
+    add_pod = lambda sp: P(*(("pod",) + tuple(sp)))
+    params_sh = jax.tree.map(lambda sp: NamedSharding(mesh, add_pod(sp)),
+                             params_specs, is_leaf=lambda x: isinstance(x, P))
+    opt_sh = {"step": NamedSharding(mesh, P("pod")),
+              "m": params_sh, "v": params_sh}
+    state_sh = TrainState(params_sh, opt_sh)
+
+    B_cluster = shape.global_batch // K
+    batch_sds, batch_logical = input_specs(
+        cfg, shape.__class__(shape.name, shape.seq_len, B_cluster, "train"))
+    batch_sds = stack_sds(batch_sds)
+    batch_sh = jax.tree.map(
+        lambda s, lg: NamedSharding(
+            mesh, P(*(("pod",) + tuple(logical_to_spec(lg, rules, s.shape[1:]))))),
+        batch_sds, batch_logical,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+    def round_step(state, batch):
+        new_state, metrics = cp.step(state, batch)
+        # global tier: sample-weighted FedAvg across the cluster/pod axis
+        g = cp.global_params(new_state, jnp.ones((K,)))
+        return new_state, metrics, jax.tree.map(lambda x: x.mean(), g)
+
+    t0 = time.time()
+    jitted = jax.jit(round_step, in_shardings=(state_sh, batch_sh),
+                     donate_argnums=(0,))
+    with mesh:
+        lowered = jitted.lower(state_sds, batch_sds)
+        compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    hlo = compiled.as_text()
+    from repro.models.blocks import stack_layout
+
+    scan_trip = max((rep for mode, _, rep in stack_layout(cfg) if mode == "scan"),
+                    default=1)
+    coll = collective_bytes_from_hlo(hlo, scan_trip=scan_trip)
+    rec = {
+        "arch": arch, "shape": shape_name, "mode": "cluster_parallel",
+        "mesh": "2x16x16", "n_clusters": K, "status": "ok",
+        "compile_s": round(compile_s, 1),
+        "collectives": coll,
+    }
+    if verbose:
+        print(json.dumps(rec, default=str))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ALL_ARCHS)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--remat", default="full", choices=["none", "full", "dots_saveable"])
+    ap.add_argument("--moments", default="float32", choices=["float32", "bfloat16"])
+    ap.add_argument("--no-mla-absorb", action="store_true")
+    ap.add_argument("--cluster-parallel", action="store_true",
+                    help="FedCCL pod-axis mode: K cluster models per step")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    if args.cluster_parallel:
+        rec = run_cluster_parallel(args.arch, args.shape or "train_4k",
+                                   remat=args.remat)
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec, default=str) + "\n")
+        return
+
+    combos = ([(a, s) for a in ALL_ARCHS for s in INPUT_SHAPES]
+              if args.all else [(args.arch, args.shape)])
+    records = []
+    for arch, shp in combos:
+        try:
+            rec = run_one(arch, shp, multi_pod=args.multi_pod, remat=args.remat,
+                          moment_dtype=args.moments,
+                          mla_absorb=not args.no_mla_absorb)
+        except Exception as e:
+            rec = {"arch": arch, "shape": shp, "status": "error",
+                   "multi_pod": args.multi_pod,
+                   "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+            print(json.dumps({k: rec[k] for k in ("arch", "shape", "status", "error")}))
+        records.append(rec)
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec, default=str) + "\n")
+    n_ok = sum(r["status"] == "ok" for r in records)
+    n_skip = sum(r["status"] == "skipped" for r in records)
+    print(f"[dryrun] ok={n_ok} skipped={n_skip} "
+          f"error={len(records) - n_ok - n_skip}", file=sys.stderr)
+    if any(r["status"] == "error" for r in records):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Production mesh definition.
+
+Single pod: 256 chips as (data=16, model=16).
+Multi-pod:  512 chips as (pod=2, data=16, model=16) — the pod axis carries
+FedCCL's cluster-parallel dimension (DESIGN.md §3).
+
+Defined as functions so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before any jax initialization).
+"""
+
+from __future__ import annotations
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist (tests / examples on CPU)."""
+    import jax
+
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

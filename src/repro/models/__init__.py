@@ -1,0 +1,4 @@
+from repro.models.model import (
+    LanguageModel,
+    build_model,
+)

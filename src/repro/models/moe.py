@@ -1,0 +1,121 @@
+"""Mixture-of-Experts layer: shared + routed experts, top-k routing with a
+
+capacity-based gather/scatter dispatch (GShard/Switch style).  The expert
+dimension shards over the ``model`` mesh axis (expert parallelism); token
+gather/scatter across that axis is what lowers to all-to-all-shaped
+collectives in the dry-run.
+
+FLOP-proportionality: dispatch computes E × C × d × ff where
+E*C ≈ tokens * top_k * capacity_factor — i.e. proportional to *active*
+compute, not to a dense all-experts pass.  This keeps the roofline's
+MODEL_FLOPS / HLO_FLOPs ratio honest for MoE archs.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import activation
+from repro.models.mlp import mlp_forward, mlp_schema
+from repro.sharding.logical import ParamSpec, constrain
+
+def moe_schema(cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    sch = {
+        "router": ParamSpec((d, m.n_routed_experts), ("embed", "expert"), scale=0.02),
+        "experts": {
+            "w_gate": ParamSpec((m.n_routed_experts, d, m.moe_d_ff), ("expert", "embed", "expert_mlp")),
+            "w_up": ParamSpec((m.n_routed_experts, d, m.moe_d_ff), ("expert", "embed", "expert_mlp")),
+            "w_down": ParamSpec((m.n_routed_experts, m.moe_d_ff, d), ("expert", "expert_mlp", "embed")),
+        },
+    }
+    if m.n_shared_experts:
+        sch["shared"] = mlp_schema(d, m.moe_d_ff * m.n_shared_experts)
+    if m.score_func == "sigmoid":
+        sch["router_bias"] = ParamSpec((m.n_routed_experts,), ("expert",), init="zeros",
+                                       dtype="float32")
+    return sch
+
+
+def _capacity(n_tokens: int, top_k: int, n_experts: int, factor: float) -> int:
+    cap = int(n_tokens * top_k * factor / n_experts)
+    cap = max(cap, top_k, 4)
+    return min(cap, n_tokens)
+
+
+def moe_forward(cfg: ModelConfig, p: dict, x, rules=None):
+    """x: (b, s, d) -> (y, aux_loss)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    T = b * s
+    E, K = m.n_routed_experts, m.top_k
+    C = _capacity(T, K, E, m.capacity_factor)
+
+    xt = x.reshape(T, d)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"].astype(jnp.float32))
+
+    if m.score_func == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+        sel_scores = scores + p["router_bias"]          # aux-loss-free biasing (DSv3)
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+        sel_scores = scores
+
+    top_w, top_e = jax.lax.top_k(sel_scores, K)          # (T, K)
+    gate_w = jnp.take_along_axis(scores, top_e, axis=-1)  # gate from unbiased scores
+    if m.score_func == "sigmoid":
+        gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+    gate_w = gate_w * m.routed_scaling
+
+    # ---- load-balance auxiliary loss (Switch-style) -----------------------
+    flat_e = top_e.reshape(-1)                                     # (T*K,)
+    counts = jnp.zeros((E,), jnp.float32).at[flat_e].add(1.0)
+    tokens_per_expert = counts / (T * K)                           # fraction
+    router_prob = scores.mean(0)
+    aux_loss = m.router_aux_coef * E * jnp.sum(tokens_per_expert * router_prob)
+
+    # ---- capacity-based dispatch ------------------------------------------
+    # rank of each (token, k) inside its expert's buffer, via a stable sort
+    # (O(TK log TK) memory-light; avoids a dense (TK, E) cumsum)
+    flat_w = gate_w.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(T), K)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    group_start = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    rank_sorted = jnp.arange(T * K) - group_start[sorted_e]
+    pos_in_expert = jnp.zeros_like(rank_sorted).at[order].set(rank_sorted)
+    keep = pos_in_expert < C                                       # dropped beyond capacity
+
+    # scatter token ids into (E, C) buffers
+    slot = flat_e * C + jnp.where(keep, pos_in_expert, C)          # overflow -> dump slot
+    dispatch_tok = jnp.zeros((E * C + 1,), jnp.int32).at[slot].set(
+        jnp.where(keep, flat_tok, 0))[:E * C].reshape(E, C)
+    dispatch_valid = jnp.zeros((E * C + 1,), jnp.bool_).at[slot].set(keep)[:E * C].reshape(E, C)
+    dispatch_w = jnp.zeros((E * C + 1,), jnp.float32).at[slot].set(
+        jnp.where(keep, flat_w, 0.0))[:E * C].reshape(E, C)
+
+    xe = jnp.take(xt, dispatch_tok, axis=0)                        # (E, C, d)
+    xe = xe * dispatch_valid[..., None].astype(xe.dtype)
+    xe = constrain(xe, ("expert", "cap", "embed"), rules)
+
+    act = activation(cfg.mlp_activation)
+    ew = p["experts"]
+    h = act(jnp.einsum("ecd,edf->ecf", xe, ew["w_gate"])) * jnp.einsum(
+        "ecd,edf->ecf", xe, ew["w_up"])
+    h = constrain(h, ("expert", "cap", "expert_mlp"), rules)
+    ye = jnp.einsum("ecf,efd->ecd", h, ew["w_down"])               # (E, C, d)
+    ye = ye * dispatch_w[..., None].astype(ye.dtype)
+
+    # scatter-add back to tokens
+    y = jnp.zeros((T, d), ye.dtype).at[dispatch_tok.reshape(-1)].add(
+        ye.reshape(E * C, d) * dispatch_valid.reshape(E * C, 1).astype(ye.dtype))
+
+    if m.n_shared_experts:
+        y = y + mlp_forward(p["shared"], xt[None], cfg.mlp_activation, rules)[0]
+
+    return y.reshape(b, s, d), aux_loss.astype(jnp.float32)

@@ -1,0 +1,104 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t), with
+a_t = exp(-c * softplus(Lambda) * r_t), r/i input-dependent sigmoid gates.
+Full-sequence path uses an associative scan (parallel prefix) — O(log L)
+depth; decode is a single-step update with a constant-size state.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.logical import ParamSpec, constrain
+
+_C = 8.0  # Griffin's gate sharpness constant
+
+
+def _lru_width(cfg: ModelConfig) -> int:
+    return cfg.rglru.lru_width or cfg.d_model
+
+
+def rglru_schema(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    w = _lru_width(cfg)
+    cw = cfg.rglru.conv_width
+    return {
+        "w_x": ParamSpec((d, w), ("embed", "lru")),
+        "w_gate_branch": ParamSpec((d, w), ("embed", "lru")),
+        "conv_w": ParamSpec((cw, w), ("conv", "lru"), scale=0.5),
+        "conv_b": ParamSpec((w,), ("lru",), init="zeros"),
+        "w_a": ParamSpec((w, w), ("lru", "lru"), scale=0.02),
+        "b_a": ParamSpec((w,), ("lru",), init="zeros"),
+        "w_i": ParamSpec((w, w), ("lru", "lru"), scale=0.02),
+        "b_i": ParamSpec((w,), ("lru",), init="zeros"),
+        "lamb": ParamSpec((w,), ("lru",), init="ones", dtype="float32"),
+        "w_out": ParamSpec((w, d), ("lru", "embed")),
+    }
+
+
+def _conv1d(p, x, state=None):
+    w = p["conv_w"].astype(x.dtype)
+    cw = w.shape[0]
+    pad = (jnp.zeros((x.shape[0], cw - 1, x.shape[-1]), x.dtype)
+           if state is None else state.astype(x.dtype))
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(cw))
+    return out + p["conv_b"].astype(out.dtype), xp[:, -(cw - 1):]
+
+
+def _gates(p, x):
+    """a_t (log-space) and gated input."""
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", x, p["w_a"]).astype(jnp.float32)
+                       + p["b_a"])
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", x, p["w_i"]).astype(jnp.float32)
+                       + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["lamb"]) * r                  # (b,s,w) <= 0
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-8)) * (
+        i * x.astype(jnp.float32))
+    return a, gated_x
+
+
+def rglru_forward(cfg: ModelConfig, p: dict, x, *, rules=None,
+                  state: Optional[dict] = None):
+    """x: (b, l, d_model) -> (y, new_state). state = {"conv", "h"}."""
+    b, l, _ = x.shape
+    gate_branch = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate_branch"]),
+                              approximate=True)
+    u = jnp.einsum("bsd,dw->bsw", x, p["w_x"])
+    u = constrain(u, ("batch", "seq", "lru"), rules)
+
+    if state is None:
+        u, _ = _conv1d(p, u)
+        a, gx = _gates(p, u)
+        # associative linear recurrence: pair (a, b) composes as
+        # (a2*a1, a2*b1 + b2)
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+
+        _, h = jax.lax.associative_scan(combine, (a, gx), axis=1)
+        new_state = None
+    else:
+        u, conv_state = _conv1d(p, u, state["conv"])
+        a, gx = _gates(p, u)
+        h = a * state["h"].astype(jnp.float32)[:, None] + gx      # l == 1
+        new_state = {"conv": conv_state, "h": h[:, -1].astype(state["h"].dtype)}
+
+    y = (h.astype(x.dtype)) * gate_branch
+    out = jnp.einsum("bsw,wd->bsd", y, p["w_out"])
+    return constrain(out, ("batch", "seq", "embed"), rules), new_state
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    w = _lru_width(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.rglru.conv_width - 1, w), dtype),
+        "h": jnp.zeros((batch, w), dtype),
+    }

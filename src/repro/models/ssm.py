@@ -1,0 +1,209 @@
+"""Mamba-2 block via State-Space Duality (SSD), arXiv:2405.21060.
+
+Training/prefill uses the chunked SSD algorithm (intra-chunk attention-like
+einsums + inter-chunk recurrence) — O(L * chunk) memory.  Decode keeps a
+constant-size recurrent state per layer: this is what makes ``long_500k``
+trivially sub-quadratic for the SSM family.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+import os as _os
+
+from repro.configs.base import ModelConfig
+from repro.sharding.logical import ParamSpec, constrain
+
+# "jax" (default) or "pallas" — the fused intra-chunk SSD kernel
+# (repro.kernels.ssd_chunk); mamba2 train is HBM-bound in the roofline and
+# the kernel keeps the (l, l) decay matrix VMEM-resident.
+SSD_BACKEND = _os.environ.get("REPRO_SSD_BACKEND", "jax")
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads
+
+
+def ssm_schema(cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, nh = _dims(cfg)
+    g, n = s.n_groups, s.d_state
+    conv_dim = d_inner + 2 * g * n
+    return {
+        # in_proj -> [z (gate), x, B, C, dt]
+        "w_in": ParamSpec((d, 2 * d_inner + 2 * g * n + nh), ("embed", "ssm_inner")),
+        "conv_w": ParamSpec((s.conv_width, conv_dim), ("conv", "ssm_inner"), scale=0.5),
+        "conv_b": ParamSpec((conv_dim,), ("ssm_inner",), init="zeros"),
+        "a_log": ParamSpec((nh,), ("heads",), init="zeros", dtype="float32"),
+        "dt_bias": ParamSpec((nh,), ("heads",), init="zeros", dtype="float32"),
+        "d_skip": ParamSpec((nh,), ("heads",), init="ones", dtype="float32"),
+        "norm": ParamSpec((d_inner,), ("ssm_inner",), init="ones", dtype="float32"),
+        "w_out": ParamSpec((d_inner, d), ("ssm_inner", "embed")),
+    }
+
+
+def _segsum(x):
+    """x: (..., l) -> cumulative-sum differences (..., l, l), lower-tri."""
+    l = x.shape[-1]
+    xc = jnp.cumsum(x, -1)
+    diff = xc[..., :, None] - xc[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _gated_rmsnorm(y, z, scale, eps=1e-6):
+    yf = (y * jax.nn.silu(z)).astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), -1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * scale).astype(y.dtype)
+
+
+def _split_proj(cfg, zxbcdt):
+    s = cfg.ssm
+    d_inner, nh = _dims(cfg)
+    g, n = s.n_groups, s.d_state
+    z, xBC, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * g * n], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(cfg, p, xBC, conv_state=None):
+    """Depthwise causal conv1d over sequence.  Returns (out, new_state)."""
+    s = cfg.ssm
+    w = p["conv_w"].astype(xBC.dtype)                          # (cw, conv_dim)
+    cw = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xBC.shape[0], cw - 1, xBC.shape[-1]), xBC.dtype)
+    else:
+        pad = conv_state.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)                   # (b, l+cw-1, cd)
+    out = sum(xp[:, i:i + xBC.shape[1]] * w[i] for i in range(cw))
+    out = jax.nn.silu(out + p["conv_b"].astype(out.dtype))
+    new_state = xp[:, -(cw - 1):]
+    return out, new_state
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, init_state=None):
+    """SSD chunked scan.  x: (b,l,h,p), dt: (b,l,h), A: (h,),
+    B,C: (b,l,g,n).  Returns (y, final_state (b,h,p,n))."""
+    b, l, h, pdim = x.shape
+    g, n = B.shape[2], B.shape[3]
+    pad = (-l) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    L = l + pad
+    c = L // chunk
+    rep = h // g
+
+    # reshape to chunks
+    xc = x.reshape(b, c, chunk, h, pdim)
+    dtc = dt.reshape(b, c, chunk, h)
+    Bc = B.reshape(b, c, chunk, g, n)
+    Cc = C.reshape(b, c, chunk, g, n)
+    Bh = jnp.repeat(Bc, rep, axis=3)                            # (b,c,l,h,n)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    dA = dtc * A[None, None, None, :]                           # (b,c,l,h)
+    dA_t = dA.transpose(0, 3, 1, 2)                             # (b,h,c,l)
+    dA_cum = jnp.cumsum(dA_t, -1)
+
+    # 1) intra-chunk (diagonal blocks)
+    Lmat = jnp.exp(_segsum(dA_t))                               # (b,h,c,l,l)
+    xdt = xc * dtc[..., None]
+    y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp", Ch, Bh, Lmat, xdt)
+
+    # 2) chunk states
+    decay_states = jnp.exp(dA_cum[..., -1:] - dA_cum)           # (b,h,c,l)
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchpn", Bh, decay_states, xdt)
+
+    # 3) inter-chunk recurrence over c (sequential scan, c is small)
+    chunk_decay = jnp.exp(dA_cum[..., -1])                      # (b,h,c)
+
+    def step(carry, inp):
+        st, dec = inp                                           # (b,h,p,n), (b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                       # emit state *before* chunk
+
+    s0 = jnp.zeros((b, h, pdim, n), x.dtype) if init_state is None else init_state
+    final, prev_states = jax.lax.scan(
+        step, s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)          # (b,c,h,p,n)
+
+    # 4) state -> output contribution
+    state_decay_out = jnp.exp(dA_cum)                           # (b,h,c,l)
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp", Ch, prev_states, state_decay_out)
+
+    y = (y_diag + y_off).reshape(b, L, h, pdim)
+    return y[:, :l], final
+
+
+def ssm_forward(cfg: ModelConfig, p: dict, x, *, rules=None,
+                state: Optional[dict] = None):
+    """Mamba-2 mixer.  state=None: full-sequence (chunked SSD).
+    state given: single-step recurrent decode; returns (y, new_state)."""
+    s = cfg.ssm
+    d_inner, nh = _dims(cfg)
+    g, n = s.n_groups, s.d_state
+    b, l, _ = x.shape
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    zxbcdt = constrain(zxbcdt, ("batch", "seq", "ssm_inner"), rules)
+    z, xBC, dt_raw = _split_proj(cfg, zxbcdt)
+    A = -jnp.exp(p["a_log"])                                    # (h,) negative
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (b,l,h)
+
+    if state is None:
+        xBC, _ = _causal_conv(cfg, p, xBC)
+        xs, B, C = jnp.split(xBC, [d_inner, d_inner + g * n], axis=-1)
+        xh = xs.reshape(b, l, nh, s.head_dim)
+        Bm = B.reshape(b, l, g, n).astype(jnp.float32)
+        Cm = C.reshape(b, l, g, n).astype(jnp.float32)
+        if SSD_BACKEND == "pallas":
+            from repro.kernels.ssd_chunk.ops import ssd_chunked_pallas
+
+            y, _ = ssd_chunked_pallas(xh.astype(jnp.float32), dt, A, Bm, Cm,
+                                      s.chunk_size)
+        else:
+            y, _ = ssd_chunked(xh.astype(jnp.float32), dt, A, Bm, Cm,
+                               s.chunk_size)
+        new_state = None
+    else:
+        xBC, conv_state = _causal_conv(cfg, p, xBC, state["conv"])
+        xs, B, C = jnp.split(xBC, [d_inner, d_inner + g * n], axis=-1)
+        xh = xs.reshape(b, l, nh, s.head_dim).astype(jnp.float32)
+        Bm = B.reshape(b, l, g, n).astype(jnp.float32)
+        Cm = C.reshape(b, l, g, n).astype(jnp.float32)
+        # single-step recurrence (l == 1)
+        dA = jnp.exp(dt[:, 0] * A[None, :])                     # (b,h)
+        Bh = jnp.repeat(Bm[:, 0], nh // g, axis=1)              # (b,h,n)
+        Ch = jnp.repeat(Cm[:, 0], nh // g, axis=1)
+        dBx = jnp.einsum("bh,bhn,bhp->bhpn", dt[:, 0], Bh, xh[:, 0])
+        ssm_state = state["ssm"].astype(jnp.float32) * dA[..., None, None] + dBx
+        y = jnp.einsum("bhpn,bhn->bhp", ssm_state, Ch)[:, None]  # (b,1,h,p)
+        new_state = {"conv": conv_state, "ssm": ssm_state.astype(state["ssm"].dtype)}
+
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, l, d_inner).astype(x.dtype)
+    y = _gated_rmsnorm(y, z, p["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    return constrain(out, ("batch", "seq", "embed"), rules), new_state
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    s = cfg.ssm
+    d_inner, nh = _dims(cfg)
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, nh, s.head_dim, s.d_state), dtype),
+    }

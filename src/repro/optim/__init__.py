@@ -1,0 +1,2 @@
+from repro.optim.optimizers import Optimizer, adamw, sgd
+from repro.optim.schedules import constant, cosine_decay, warmup_cosine

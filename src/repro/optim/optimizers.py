@@ -1,0 +1,94 @@
+"""Optimizers from scratch (no optax in this environment).
+
+API mirrors the optax triple: ``opt.init(params) -> state``;
+``opt.update(grads, state, params) -> (updates, state)``; apply with
+``apply_updates``.  Moment dtype is configurable — bf16 moments halve
+optimizer HBM for the large dry-run configs (see EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+                        params, updates)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def sgd(lr, momentum: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        state = {"step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            state["mu"] = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return state
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                              state["mu"], grads)
+            upd = jax.tree.map(lambda m: -lr_t * m, mu)
+            return upd, {"step": step, "mu": mu}
+        return jax.tree.map(lambda g: -lr_t * g.astype(jnp.float32), grads), {"step": step}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0, moment_dtype=jnp.float32) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, moment_dtype)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(z, params),
+            "v": jax.tree.map(z, params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        m = jax.tree.map(lambda m_, g: (b1 * m_.astype(jnp.float32)
+                                        + (1 - b1) * g.astype(jnp.float32)
+                                        ).astype(moment_dtype), state["m"], grads)
+        v = jax.tree.map(lambda v_, g: (b2 * v_.astype(jnp.float32)
+                                        + (1 - b2) * jnp.square(g.astype(jnp.float32))
+                                        ).astype(moment_dtype), state["v"], grads)
+
+        def upd(m_, v_, p):
+            mh = m_.astype(jnp.float32) / bc1
+            vh = v_.astype(jnp.float32) / bc2
+            u = -lr_t * mh / (jnp.sqrt(vh) + eps)
+            if weight_decay:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u
+
+        updates = jax.tree.map(upd, m, v, params)
+        return updates, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)

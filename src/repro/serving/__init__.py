@@ -1,0 +1,2 @@
+from repro.serving.engine import ServeEngine, build_decode_step
+from repro.serving.kv_cache import cache_shapes

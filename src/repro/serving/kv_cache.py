@@ -1,0 +1,48 @@
+"""Cache shape declarations (ShapeDtypeStruct) for the decode dry-runs and
+
+sharding-spec derivation for cache pytrees.  Specs are keyed off the cache
+leaf *names* (k/v/c_kv/k_rope/conv/ssm/h), which is robust across families;
+a leading scan-layers axis is detected by rank.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.tree_util import DictKey
+
+from repro.configs.base import ModelConfig
+from repro.sharding.logical import Rules, logical_to_spec
+
+# leaf name -> logical axes after the batch axis
+_CACHE_LOGICAL = {
+    "k": ("kv_seq", "kv_heads", "head_dim"),
+    "v": ("kv_seq", "kv_heads", "head_dim"),
+    "c_kv": ("kv_seq", "rank"),
+    "k_rope": ("kv_seq", "head_dim"),
+    "conv": ("state", "ssm_inner"),
+    "ssm": ("heads", "head_dim", "state"),
+    "h": ("lru",),
+}
+
+
+def cache_shapes(model, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree matching model.init_caches (no allocation)."""
+    return jax.eval_shape(lambda: model.init_caches(batch, max_len, dtype))
+
+
+def cache_specs(cache_tree, rules: Rules):
+    """PartitionSpec tree for a cache pytree (shapes or arrays)."""
+
+    def leaf_spec(path, leaf):
+        name = next((p.key for p in reversed(path) if isinstance(p, DictKey)), "")
+        logical = ("batch",) + _CACHE_LOGICAL.get(name, ())
+        shp = tuple(leaf.shape)
+        if len(shp) == len(logical) + 1:
+            logical = ("layers",) + logical       # scanned segment stacking
+        if len(shp) != len(logical):
+            return P()
+        return logical_to_spec(logical, rules, shp)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_tree)

@@ -1,0 +1,14 @@
+from repro.sharding.logical import (
+    DEFAULT_RULES,
+    MULTI_POD_RULES,
+    ParamSpec,
+    Rules,
+    constrain,
+    init_from_schema,
+    logical_to_spec,
+    make_rules,
+    schema_shapes,
+    shardings_from_schema,
+    specs_from_schema,
+    stack_schema,
+)

@@ -1,0 +1,201 @@
+"""Logical-axis sharding (MaxText-style).
+
+Every parameter is declared once in a *schema*: shape + logical axis names +
+init kind.  From the schema we derive (a) initialized params, (b) a
+`PartitionSpec` tree under a rule set mapping logical axes -> mesh axes.
+Rules are shape-aware: a mapping is dropped when the tensor dim is not
+divisible by the mesh-axis size (e.g. kv_heads=2 over model=16 falls back to
+replicated), so every (arch x shape x mesh) combination lowers.
+
+Parameter sharding doubles as FSDP: the "embed" axis of weight matrices maps
+to the "data" mesh axis, so parameters are fully sharded over the whole mesh
+(ZeRO-3 style); XLA SPMD inserts the per-layer all-gathers inside the layer
+scan.  Activations shard batch over "data" — the duplicate-mesh-axis guard
+then auto-drops "embed" for activations.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axis (or tuple of mesh axes, or None)
+_BASE_AXES: dict[str, object] = {
+    "batch": "data",
+    "seq": None,
+    "embed": "data",          # FSDP axis for params; auto-dropped on activations
+    "act_embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "model",
+    "expert_mlp": None,
+    "layers": None,
+    "lru": "model",
+    "ssm_inner": "model",
+    "state": None,
+    "conv": None,
+    "rank": None,
+    "cap": None,
+    "kv_seq": None,
+}
+
+
+@dataclass(frozen=True)
+class Rules:
+    axes: dict
+    sizes: dict               # mesh axis -> size; empty means "don't check"
+
+    def with_overrides(self, **kw) -> "Rules":
+        ax = dict(self.axes)
+        ax.update(kw)
+        return Rules(ax, self.sizes)
+
+
+def make_rules(mesh=None, *, multi_pod: bool = False, **overrides) -> Rules:
+    axes = dict(_BASE_AXES)
+    if multi_pod:
+        axes["batch"] = ("pod", "data")
+        axes["embed"] = ("pod", "data")   # FSDP over the full dcn+ici data extent
+    axes.update(overrides)
+    sizes = dict(mesh.shape) if mesh is not None else {}
+    return Rules(axes, sizes)
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    logical: tuple
+    init: str = "normal"          # normal | zeros | ones | embed
+    scale: Optional[float] = None  # stddev override
+    dtype: Optional[str] = None
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def logical_to_spec(logical: tuple, rules: Rules, shape: Optional[tuple] = None) -> P:
+    mesh_axes = []
+    used: set = set()
+    for i, name in enumerate(logical):
+        ax = rules.axes.get(name) if name is not None else None
+        if ax is not None:
+            flat = (ax,) if isinstance(ax, str) else tuple(ax)
+            # keep only mesh axes not yet used by an earlier tensor dim
+            flat = tuple(a for a in flat if a not in used)
+            if shape is not None and flat:
+                total = 1
+                for a in flat:
+                    total *= rules.sizes.get(a, 1)
+                if total == 0 or shape[i] % max(total, 1) != 0:
+                    flat = ()
+            if flat:
+                used.update(flat)
+                ax = flat[0] if len(flat) == 1 else flat
+            else:
+                ax = None
+        mesh_axes.append(ax)
+    while mesh_axes and mesh_axes[-1] is None:
+        mesh_axes.pop()
+    return P(*mesh_axes)
+
+
+def _path_seed(path: str) -> int:
+    return int.from_bytes(hashlib.blake2b(path.encode(), digest_size=4).digest(), "big")
+
+
+def _init_leaf(ps: ParamSpec, key, default_dtype) -> jnp.ndarray:
+    dtype = ps.dtype or default_dtype
+    shape = ps.shape
+    if ps.init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if ps.init == "ones":
+        return jnp.ones(shape, dtype)
+    if ps.init == "embed":
+        std = ps.scale if ps.scale is not None else 1.0
+        return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+    fan_in = int(np.prod(shape[:-1])) if len(shape) >= 2 else max(1, shape[0] if shape else 1)
+    std = ps.scale if ps.scale is not None else (1.0 / max(1.0, np.sqrt(fan_in)))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def init_from_schema(schema: dict, key, default_dtype=jnp.float32) -> dict:
+    def go(node, prefix):
+        out = {}
+        for k, v in node.items():
+            path = f"{prefix}/{k}" if prefix else k
+            out[k] = (go(v, path) if isinstance(v, dict) else
+                      _init_leaf(v, jax.random.fold_in(key, _path_seed(path)), default_dtype))
+        return out
+
+    return go(schema, "")
+
+
+def schema_shapes(schema: dict, default_dtype=jnp.float32) -> dict:
+    def go(node):
+        return {
+            k: (go(v) if isinstance(v, dict) else
+                jax.ShapeDtypeStruct(v.shape, jnp.dtype(v.dtype or default_dtype)))
+            for k, v in node.items()
+        }
+
+    return go(schema)
+
+
+def specs_from_schema(schema: dict, rules: Rules) -> dict:
+    def go(node):
+        return {
+            k: (go(v) if isinstance(v, dict) else logical_to_spec(v.logical, rules, v.shape))
+            for k, v in node.items()
+        }
+
+    return go(schema)
+
+
+def shardings_from_schema(schema: dict, mesh, rules: Rules) -> dict:
+    def go(node):
+        return {
+            k: (go(v) if isinstance(v, dict) else
+                NamedSharding(mesh, logical_to_spec(v.logical, rules, v.shape)))
+            for k, v in node.items()
+        }
+
+    return go(schema)
+
+
+def stack_schema(schema: dict, n: int) -> dict:
+    """Prepend a scanned 'layers' axis to every leaf (scan-over-layers)."""
+
+    def go(node):
+        return {
+            k: (go(v) if isinstance(v, dict) else
+                ParamSpec((n,) + tuple(v.shape), ("layers",) + tuple(v.logical),
+                          v.init, v.scale, v.dtype))
+            for k, v in node.items()
+        }
+
+    return go(schema)
+
+
+def constrain(x, logical: tuple, rules: Optional[Rules]):
+    """with_sharding_constraint by logical activation axes (no-op w/o rules)."""
+    if rules is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, logical_to_spec(logical, rules, tuple(x.shape)))
+    except (ValueError, RuntimeError):
+        return x
+
+
+# Back-compat aliases used in module __init__ imports.
+DEFAULT_RULES = make_rules()
+MULTI_POD_RULES = make_rules(multi_pod=True)

@@ -1,0 +1,3 @@
+from repro.training.losses import loss_for_batch, softmax_cross_entropy
+from repro.training.metrics import energy_error, power_error, summarize_errors
+from repro.training.train_step import TrainState, build_eval_step, build_train_step

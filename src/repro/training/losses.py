@@ -1,0 +1,70 @@
+"""Loss functions for every architecture family + the solar case study."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+MTP_WEIGHT = 0.3  # DeepSeek-V3 MTP loss coefficient
+
+
+def softmax_cross_entropy(logits, labels, mask=None):
+    """Mean CE in f32.  logits: (..., V); labels: (...) int; mask: (...) bool."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(ce * mask) / jnp.maximum(mask.sum(), 1.0)
+    return ce.mean()
+
+
+def loss_for_batch(model, cfg: ModelConfig, params, batch: dict, rules=None,
+                   mla_absorb: bool = True):
+    """Family-dispatched training loss.  Returns (loss, metrics dict)."""
+    if cfg.family == "audio":
+        logits, aux = model.forward(params, embeds=batch["embeds"],
+                                    mask=batch["mask"], rules=rules)
+        ce = softmax_cross_entropy(logits, batch["labels"], batch["mask"])
+        return ce, {"ce": ce}
+
+    if cfg.family == "vlm":
+        logits, aux = model.forward(params, tokens=batch["tokens"],
+                                    embeds=batch["patches"], rules=rules)
+        n_patch = batch["patches"].shape[1]
+        text_logits = logits[:, n_patch:]
+        ce = softmax_cross_entropy(text_logits, batch["labels"])
+        return ce, {"ce": ce}
+
+    # text decoders (dense / moe / ssm / hybrid)
+    logits, aux = model.forward(params, tokens=batch["tokens"], rules=rules,
+                                mla_absorb=mla_absorb)
+    ce = softmax_cross_entropy(logits, batch["labels"])
+    loss = ce + aux["moe_loss"]
+    metrics = {"ce": ce, "moe_loss": aux["moe_loss"]}
+
+    if cfg.mtp_depth:
+        # predict t_{i+2} from h_i and emb(t_{i+1}); valid for the first s-1
+        # positions (the last lacks a t_{i+2} target)
+        mtp_logits = model.mtp_logits(params, aux["hidden"], batch["labels"],
+                                      rules=rules)
+        mtp_labels = jnp.concatenate(
+            [batch["labels"][:, 1:], batch["labels"][:, -1:]], axis=1)
+        valid = jnp.ones_like(mtp_labels, jnp.bool_).at[:, -1].set(False)
+        mtp_ce = softmax_cross_entropy(mtp_logits, mtp_labels, valid)
+        loss = loss + MTP_WEIGHT * mtp_ce
+        metrics["mtp_ce"] = mtp_ce
+
+    return loss, metrics
+
+
+def solar_loss(forecaster, params, batch: dict):
+    """MSE on normalized production (the paper trains MSE, evaluates MAPE)."""
+    preds = forecaster.forward(params, batch["history"], batch["forecast"])
+    err = preds - batch["target"]
+    return jnp.mean(jnp.square(err)), preds

@@ -1,0 +1,101 @@
+"""pjit-able train / eval steps for the assigned architectures.
+
+``build_train_step`` closes over (model, optimizer, rules) and returns a
+pure function (state, batch) -> (state, metrics) suitable for jax.jit with
+in/out shardings — this is what the multi-pod dry-run lowers.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.continual import EWCState, ewc_penalty
+from repro.optim.optimizers import Optimizer, apply_updates, clip_by_global_norm
+from repro.training.losses import loss_for_batch
+
+
+@dataclass
+class TrainState:
+    params: object
+    opt_state: object
+
+    def tree_flatten(self):
+        return (self.params, self.opt_state), None
+
+    @classmethod
+    def tree_unflatten(cls, _, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    TrainState, TrainState.tree_flatten, TrainState.tree_unflatten)
+
+
+def build_train_step(model, cfg: ModelConfig, optimizer: Optimizer, *,
+                     rules=None, grad_clip: float = 1.0,
+                     ewc: Optional[EWCState] = None,
+                     mla_absorb: bool = True,
+                     n_microbatches: Optional[int] = None):
+    """n_microbatches: gradient accumulation — splits the global batch into
+    n sequential microbatches (lax.scan), dividing activation memory by n
+    at identical math (same loss/grads up to f32 summation order)."""
+
+    def loss_fn(params, batch):
+        loss, metrics = loss_for_batch(model, cfg, params, batch, rules,
+                                       mla_absorb=mla_absorb)
+        if ewc is not None:
+            loss = loss + ewc_penalty(params, ewc)
+        return loss, metrics
+
+    def train_step(state: TrainState, batch: dict):
+        if n_microbatches and n_microbatches > 1:
+            n = n_microbatches
+            micro = jax.tree.map(
+                lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+
+            def acc_step(carry, mb):
+                (loss, metrics), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(state.params, mb)
+                gsum, lsum = carry
+                return (jax.tree.map(jnp.add, gsum,
+                                     jax.tree.map(lambda x: x.astype(jnp.float32), g)),
+                        lsum + loss), metrics
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              state.params)
+            (gsum, lsum), metrics_stack = jax.lax.scan(acc_step, (g0, 0.0), micro)
+            grads = jax.tree.map(lambda g: (g / n).astype(jnp.float32), gsum)
+            loss = lsum / n
+            metrics = jax.tree.map(lambda m: m.mean(), metrics_stack)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state.params, batch)
+
+        if grad_clip:
+            grads, gnorm = clip_by_global_norm(grads, grad_clip)
+            metrics = dict(metrics, grad_norm=gnorm)
+        updates, new_opt = optimizer.update(grads, state.opt_state, state.params)
+        new_params = apply_updates(state.params, updates)
+        metrics = dict(metrics, loss=loss)
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+def build_eval_step(model, cfg: ModelConfig, *, rules=None, mla_absorb=True):
+    def eval_step(params, batch):
+        loss, metrics = loss_for_batch(model, cfg, params, batch, rules,
+                                       mla_absorb=mla_absorb)
+        return dict(metrics, loss=loss)
+
+    return eval_step
+
+
+def init_train_state(model, optimizer: Optimizer, key) -> TrainState:
+    params = model.init(key)
+    return TrainState(params, optimizer.init(params))

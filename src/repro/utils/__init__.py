@@ -1,0 +1,9 @@
+from repro.utils.tree import (
+    flatten_params,
+    param_bytes,
+    param_count,
+    tree_add,
+    tree_scale,
+    tree_weighted_sum,
+    tree_zeros_like,
+)

@@ -1,0 +1,73 @@
+"""Pytree helpers used across the framework (no flax/optax available)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def param_count(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def param_bytes(tree) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_weighted_sum(trees, weights):
+    """sum_i weights[i] * trees[i] — the core FedAvg primitive."""
+    assert len(trees) == len(weights) and trees
+    out = tree_scale(trees[0], weights[0])
+    for t, w in zip(trees[1:], weights[1:]):
+        out = jax.tree.map(lambda a, b, w=w: a + b * w, out, t)
+    return out
+
+
+def tree_dot(a, b):
+    leaves = jax.tree.map(lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b)
+    return sum(jax.tree.leaves(leaves))
+
+
+def global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def flatten_params(tree) -> jnp.ndarray:
+    """Concatenate every leaf into one flat f32 vector (kernel-facing layout)."""
+    return jnp.concatenate([jnp.ravel(x).astype(jnp.float32) for x in jax.tree.leaves(tree)])
+
+
+def unflatten_params(flat, tree_template):
+    leaves, treedef = jax.tree.flatten(tree_template)
+    out, off = [], 0
+    for leaf in leaves:
+        n = int(np.prod(leaf.shape))
+        out.append(jnp.reshape(flat[off:off + n], leaf.shape).astype(leaf.dtype))
+        off += n
+    return jax.tree.unflatten(treedef, out)
+
+
+def tree_allclose(a, b, rtol=1e-5, atol=1e-6) -> bool:
+    oks = jax.tree.map(
+        lambda x, y: bool(np.allclose(np.asarray(x), np.asarray(y), rtol=rtol, atol=atol)), a, b
+    )
+    return all(jax.tree.leaves(oks))

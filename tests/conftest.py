@@ -1,0 +1,30 @@
+"""Shared fixtures.  NOTE: XLA_FLAGS / device-count overrides are
+deliberately NOT set here — only the dry-run uses 512 placeholder devices
+(via its own module prologue); tests must see the real single CPU device.
+"""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def pytest_addoption(parser):
+    parser.addoption("--run-slow", action="store_true", default=False,
+                     help="run slow integration tests")
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: slow integration tests")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--run-slow"):
+        return
+    skip = pytest.mark.skip(reason="needs --run-slow")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)

@@ -1,0 +1,85 @@
+"""Algorithm 2 aggregation properties (+ kernel equivalence)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import (
+    AggregationConfig,
+    ModelMeta,
+    UpdateDelta,
+    aggregate_models,
+    multi_aggregate,
+)
+
+
+def params_of(x):
+    return {"w": jnp.full((3, 4), float(x)), "b": {"v": jnp.full((5,), float(x))}}
+
+
+def test_sequential_fast_path_returns_update_unchanged():
+    base = params_of(0.0)
+    upd = params_of(1.0)
+    out, meta = aggregate_models(
+        base, ModelMeta(100, 1, 5), upd, ModelMeta(50, 2, 6),
+        UpdateDelta(50, 1, 1))
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(upd["w"]))
+    assert meta.round == 6 and meta.samples_learned == 150
+
+
+def test_non_sequential_weighted_average():
+    base = params_of(0.0)
+    upd = params_of(1.0)
+    # base has 300 samples, update 100 -> update weight 0.25
+    out, meta = aggregate_models(
+        base, ModelMeta(300, 3, 5), upd, ModelMeta(100, 1, 9),
+        UpdateDelta(100, 1, 1))
+    np.testing.assert_allclose(np.asarray(out["w"]), 0.25, atol=1e-6)
+    assert meta.samples_learned == 400
+
+
+@settings(max_examples=30, deadline=None)
+@given(sb=st.integers(1, 10_000), su=st.integers(1, 10_000),
+       vb=st.floats(-100, 100), vu=st.floats(-100, 100))
+def test_aggregate_is_convex_combination(sb, su, vb, vu):
+    base, upd = params_of(vb), params_of(vu)
+    out, _ = aggregate_models(base, ModelMeta(sb, 1, 5), upd,
+                              ModelMeta(su, 1, 9), UpdateDelta(su, 1, 1))
+    lo, hi = min(vb, vu), max(vb, vu)
+    w = np.asarray(out["w"])
+    assert (w >= lo - 1e-4).all() and (w <= hi + 1e-4).all()
+    expect = (sb * vb + su * vu) / (sb + su)
+    np.testing.assert_allclose(w, expect, rtol=1e-5, atol=1e-5)
+
+
+def test_fixed_point():
+    """Aggregating a model with itself must be the identity."""
+    p = params_of(3.14)
+    out, _ = aggregate_models(p, ModelMeta(10, 1, 0), p, ModelMeta(10, 1, 5),
+                              UpdateDelta(10, 1, 1))
+    np.testing.assert_allclose(np.asarray(out["w"]), 3.14, rtol=1e-6)
+
+
+def test_multi_aggregate_matches_sequential_weighting():
+    trees = [params_of(v) for v in (0.0, 1.0, 2.0)]
+    out = multi_aggregate(trees, [1, 1, 2])
+    np.testing.assert_allclose(np.asarray(out["w"]), 1.25, atol=1e-6)
+
+
+def test_pallas_path_matches_jit_path():
+    base, upd = params_of(0.5), params_of(2.0)
+    args = (ModelMeta(300, 1, 5), upd, ModelMeta(100, 1, 9),
+            UpdateDelta(100, 1, 1))
+    out_jit, _ = aggregate_models(base, *args, AggregationConfig(use_pallas=False))
+    out_pal, _ = aggregate_models(base, *args, AggregationConfig(use_pallas=True))
+    for a, b in zip(jax.tree.leaves(out_jit), jax.tree.leaves(out_pal)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_metadata_accumulation():
+    m = ModelMeta(0, 0, 0)
+    m = m.accumulate(UpdateDelta(10, 2, 1))
+    m = m.accumulate(UpdateDelta(5, 1, 1))
+    assert (m.samples_learned, m.epochs_learned, m.round) == (15, 3, 2)

@@ -1,0 +1,104 @@
+"""Checkpoint roundtrips + logical-sharding rule derivation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint import load_pytree, load_store, save_pytree, save_store
+from repro.core.aggregation import ModelMeta, UpdateDelta
+from repro.core.store import ModelStore
+from repro.sharding.logical import (
+    ParamSpec,
+    Rules,
+    logical_to_spec,
+    make_rules,
+    specs_from_schema,
+    stack_schema,
+)
+from repro.utils.tree import tree_allclose
+
+
+def test_pytree_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.bfloat16),
+                  "d": jnp.array(7, jnp.int32)},
+            "meta": {"name": "x", "n": 3}}
+    save_pytree(tmp_path / "t.msgpack", tree)
+    back = load_pytree(tmp_path / "t.msgpack")
+    assert tree_allclose({"a": tree["a"], "c": tree["b"]["c"]},
+                         {"a": back["a"], "c": back["b"]["c"]})
+    assert back["meta"]["name"] == "x"
+
+
+def test_store_roundtrip(tmp_path):
+    store = ModelStore({"w": jnp.ones((3,))}, cluster_keys=["loc:0"])
+    store.handle_model_update("cluster", "loc:0", {"w": jnp.full((3,), 2.0)},
+                              ModelMeta(10, 1, 1), UpdateDelta(10, 1, 1))
+    save_store(tmp_path / "s.msgpack", store)
+    back = load_store(tmp_path / "s.msgpack")
+    assert back.meta("cluster", "loc:0").samples_learned == 10
+    np.testing.assert_allclose(np.asarray(back.params("cluster", "loc:0")["w"]),
+                               2.0)
+
+
+# ----------------------------------------------------------------- sharding
+def fake_rules(sizes=None):
+    return Rules(axes=make_rules().axes,
+                 sizes=sizes or {"data": 16, "model": 16})
+
+
+def test_divisibility_guard():
+    rules = fake_rules()
+    # kv_heads=2 not divisible by model=16 -> replicated
+    spec = logical_to_spec(("embed", "kv_heads", "head_dim"), rules,
+                           (4096, 2, 128))
+    assert spec == P("data")
+    # kv_heads=32 divisible -> sharded
+    spec = logical_to_spec(("embed", "kv_heads", "head_dim"), rules,
+                           (4096, 32, 128))
+    assert spec == P("data", "model")
+
+
+def test_duplicate_mesh_axis_dropped():
+    rules = fake_rules()
+    # batch takes "data"; embed (also data-mapped) must fall back to None
+    spec = logical_to_spec(("batch", "seq", "embed"), rules, (256, 4096, 4096))
+    assert spec == P("data")
+
+
+def test_multi_pod_batch_spans_pod_and_data():
+    rules = make_rules(multi_pod=True)
+    rules = Rules(rules.axes, {"pod": 2, "data": 16, "model": 16})
+    spec = logical_to_spec(("batch", "seq"), rules, (256, 4096))
+    assert spec == P(("pod", "data"))
+
+
+def test_stack_schema_adds_layer_axis():
+    sch = {"w": ParamSpec((4, 8), ("embed", "mlp"))}
+    st = stack_schema(sch, 12)
+    assert st["w"].shape == (12, 4, 8)
+    assert st["w"].logical[0] == "layers"
+
+
+def test_specs_from_schema_tree():
+    rules = fake_rules()
+    sch = {"layer": {"w": ParamSpec((64, 32), ("embed", "mlp")),
+                     "scale": ParamSpec((64,), ("embed",))}}
+    specs = specs_from_schema(sch, rules)
+    assert specs["layer"]["w"] == P("data", "model")
+    assert specs["layer"]["scale"] == P("data")
+
+
+def test_cache_specs_by_name():
+    from repro.serving.kv_cache import cache_specs
+
+    rules = Rules(make_rules(kv_seq="data").axes,
+                  {"data": 16, "model": 16})
+    tree = {"seg0": {"b0": {
+        "k": jax.ShapeDtypeStruct((8, 2, 32768, 16, 128), jnp.bfloat16),
+        "v": jax.ShapeDtypeStruct((8, 2, 32768, 16, 128), jnp.bfloat16)}}}
+    specs = cache_specs(tree, rules)
+    # layers, batch(2: not div by 16 -> None), kv_seq->data, kv_heads 16->model
+    assert specs["seg0"]["b0"]["k"] == P(None, None, "data", "model")

@@ -1,0 +1,102 @@
+"""DBSCAN + incremental DBSCAN properties (paper §II.B)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.clustering import (
+    NOISE,
+    DBSCAN,
+    IncrementalDBSCAN,
+    cyclic_deg,
+    haversine_km,
+)
+
+
+def two_blobs(rng, n=10, sep=10.0):
+    a = rng.normal(0, 0.5, (n, 2))
+    b = rng.normal(sep, 0.5, (n, 2))
+    return np.vstack([a, b])
+
+
+def test_dbscan_finds_two_blobs(rng):
+    X = two_blobs(rng)
+    db = DBSCAN(eps=1.5, min_samples=3).fit(X)
+    labels = db.labels_
+    assert db.n_clusters_ == 2
+    assert len(set(labels[:10])) == 1 and len(set(labels[10:])) == 1
+    assert labels[0] != labels[10]
+
+
+def test_dbscan_outliers_are_noise(rng):
+    X = np.vstack([two_blobs(rng), [[100.0, 100.0]]])
+    db = DBSCAN(eps=1.5, min_samples=3).fit(X)
+    assert db.labels_[-1] == NOISE
+
+
+def test_dbscan_assign_new_point(rng):
+    X = two_blobs(rng)
+    db = DBSCAN(eps=1.5, min_samples=3).fit(X)
+    assert db.assign(np.array([0.2, 0.1])) == db.labels_[0]
+    assert db.assign(np.array([10.1, 9.9])) == db.labels_[10]
+    assert db.assign(np.array([50.0, 50.0])) == NOISE
+
+
+def test_haversine_known_distance():
+    vienna = np.array([[48.21, 16.37]])
+    munich = np.array([[48.14, 11.58]])
+    d = haversine_km(vienna, munich)[0, 0]
+    assert 330 < d < 380          # ~355 km
+
+
+def test_cyclic_metric_wraps():
+    assert cyclic_deg(np.array([[350.0]]), np.array([[10.0]]))[0, 0] == 20.0
+
+
+def test_incremental_matches_batch_on_blobs(rng):
+    X = two_blobs(rng, n=8)
+    inc = IncrementalDBSCAN(eps=1.5, min_samples=3)
+    inc.fit_batch(X)
+    batch = DBSCAN(eps=1.5, min_samples=3).fit(X)
+    # same partition structure (labels may be permuted)
+    def canon(labels):
+        groups = {}
+        for i, l in enumerate(labels):
+            groups.setdefault(l, set()).add(i)
+        return {frozenset(v) for k, v in groups.items() if k != NOISE}
+    assert canon(inc.labels) == canon(batch.labels_)
+
+
+def test_incremental_insert_joins_existing_cluster(rng):
+    X = two_blobs(rng, n=8)
+    inc = IncrementalDBSCAN(eps=1.5, min_samples=3)
+    inc.fit_batch(X)
+    label = inc.insert(np.array([0.1, -0.2]))
+    assert label == inc.labels[0]
+
+
+def test_incremental_merge():
+    """A bridging point should merge two nearby clusters."""
+    left = [[0.0, 0], [0.5, 0], [1.0, 0]]
+    right = [[3.0, 0], [3.5, 0], [4.0, 0]]
+    inc = IncrementalDBSCAN(eps=1.1, min_samples=3)
+    inc.fit_batch(np.array(left + right))
+    assert inc.n_clusters == 2
+    inc.insert(np.array([2.0, 0.0]))
+    assert inc.n_clusters == 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.floats(-5, 5), st.floats(-5, 5)),
+                min_size=4, max_size=24))
+def test_dbscan_labels_well_formed(points):
+    X = np.array(points)
+    db = DBSCAN(eps=1.0, min_samples=3).fit(X)
+    labels = db.labels_
+    assert len(labels) == len(X)
+    assert labels.min() >= NOISE
+    # every non-noise label is contiguous from 0
+    used = sorted(set(labels[labels >= 0]))
+    assert used == list(range(len(used)))
+    # core points are never noise
+    assert not np.any((labels == NOISE) & db.core_)

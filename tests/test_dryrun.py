@@ -1,0 +1,119 @@
+"""Dry-run machinery tests.
+
+The pure parts (input specs, roofline parsing/terms, analytic model) run
+in-process; the full 512-device lower+compile runs as a subprocess (it must
+set XLA_FLAGS before jax initializes) and is marked slow — the complete
+40-combination matrix is executed by the benchmark/EXPERIMENTS pipeline.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.configs import ALL_ARCHS, INPUT_SHAPES, get_config
+from repro.launch.roofline import (
+    RooflineTerms,
+    analytic_costs,
+    collective_bytes_from_hlo,
+    model_flops,
+    roofline_terms,
+)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_collective_parse_basic():
+    hlo = """
+ENTRY %main (a: f32[16,128]) -> f32[16,128] {
+  %ag = bf16[2048,512]{1,0} all-gather(bf16[128,512] %x), dimensions={0}
+  %ar = f32[256]{0} all-reduce(f32[256] %y), to_apply=%add
+  ROOT %r = f32[16,128] copy(%a)
+}
+"""
+    c = collective_bytes_from_hlo(hlo)
+    assert c["counts"]["all-gather"] == 1
+    assert c["by_kind"]["all-gather"] == 2048 * 512 * 2
+    assert c["by_kind"]["all-reduce"] == 256 * 4 * 2   # 2x for ring
+    assert c["total"] == c["by_kind"]["all-gather"] + c["by_kind"]["all-reduce"]
+
+
+def test_collective_parse_scan_trip_multiplier():
+    hlo = """
+%body.1 (p: f32[8]) -> f32[8] {
+  %ag2 = f32[64]{0} all-gather(f32[8] %p), dimensions={0}
+}
+ENTRY %main (a: f32[8]) -> f32[8] {
+  %w = f32[8] while(f32[8] %a), condition=%cond.1, body=%body.1
+  %ag1 = f32[32]{0} all-gather(f32[8] %a), dimensions={0}
+}
+"""
+    c1 = collective_bytes_from_hlo(hlo, scan_trip=1)
+    c10 = collective_bytes_from_hlo(hlo, scan_trip=10)
+    inner = 64 * 4
+    outer = 32 * 4
+    assert c1["total"] == inner + outer
+    assert c10["total"] == inner * 10 + outer
+
+
+def test_roofline_terms_dominance():
+    t = roofline_terms({"flops": 197e12, "bytes accessed": 819e9 * 2},
+                       {"total": 0})
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(2.0)
+    assert t.dominant == "memory"
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+@pytest.mark.parametrize("shape", ["train_4k", "decode_32k"])
+def test_analytic_costs_positive(arch, shape):
+    cfg = get_config(arch)
+    shp = INPUT_SHAPES[shape]
+    if shape == "decode_32k" and cfg.encoder_only:
+        pytest.skip("encoder-only")
+    ana = analytic_costs(cfg, shp, 256, {"data": 16, "model": 16})
+    assert ana["flops_per_dev"] > 0
+    assert ana["bytes_per_dev"] > 0
+    mf = model_flops(cfg, shp, cfg.n_params(), cfg.n_active_params())
+    # analytic >= pure-matmul model flops (attention/remat overhead)
+    if shp.mode == "train":
+        assert ana["flops_global"] > 0.5 * mf
+
+
+def test_input_specs_cover_all_families():
+    from repro.launch import dryrun as dr
+
+    for arch in ALL_ARCHS:
+        cfg = get_config(arch)
+        sds, logical = dr.input_specs(cfg, INPUT_SHAPES["train_4k"])
+        assert set(sds) == set(logical)
+        for k, s in sds.items():
+            assert s.shape[0] == 256, (arch, k)
+
+
+@pytest.mark.slow
+def test_dryrun_subprocess_single_pod():
+    """Full 512-host-device lower+compile for one (arch, shape)."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "gemma-2b", "--shape", "decode_32k"],
+        capture_output=True, text=True, env=env, timeout=540)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["status"] == "ok"
+    assert rec["roofline"]["compute_s"] > 0
+
+
+@pytest.mark.slow
+def test_dryrun_subprocess_multi_pod():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "mamba2-370m", "--shape", "train_4k", "--multi-pod"],
+        capture_output=True, text=True, env=env, timeout=540)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["status"] == "ok" and rec["mesh"] == "2x16x16"

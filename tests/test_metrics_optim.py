@@ -1,0 +1,103 @@
+"""Paper metrics formulas + from-scratch optimizers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.optimizers import adamw, apply_updates, clip_by_global_norm, sgd
+from repro.optim.schedules import cosine_decay, warmup_cosine
+from repro.training.metrics import (
+    daytime_mask,
+    energy_error,
+    power_error,
+    summarize_errors,
+)
+
+
+# --------------------------------------------------------------- metrics
+def test_power_error_formula():
+    pred = np.array([[0.5, 0.0]])
+    act = np.array([[0.4, 0.1]])
+    np.testing.assert_allclose(power_error(pred, act),
+                               [[10.0, 10.0]])  # |p-a|/kWp * 100, normalized
+
+
+def test_energy_error_formula():
+    # constant 0.5 for a day = 12 kWp-hours; actual 0 -> error == 100%
+    pred = np.full((1, 96), 0.5)
+    act = np.zeros((1, 96))
+    np.testing.assert_allclose(energy_error(pred, act), [100.0])
+
+
+def test_daytime_mask():
+    minute = np.array([0, 359, 360, 720, 1259, 1260])
+    np.testing.assert_array_equal(daytime_mask(minute),
+                                  [False, False, True, True, True, False])
+
+
+def test_summarize_keys():
+    pred = np.random.default_rng(0).random((4, 96)).astype(np.float32)
+    act = np.random.default_rng(1).random((4, 96)).astype(np.float32)
+    minute = np.tile(np.arange(96) * 15, (4, 1))
+    s = summarize_errors(pred, act, minute)
+    assert set(s) == {"mean_error_power", "max_error_power",
+                      "mean_error_energy", "mean_error_day_power",
+                      "mean_error_day_energy"}
+    assert s["max_error_power"] >= s["mean_error_power"]
+
+
+# --------------------------------------------------------------- optimizers
+def _quadratic_min(opt, steps=200):
+    target = jnp.array([3.0, -2.0])
+    params = {"w": jnp.zeros(2)}
+    state = opt.init(params)
+    for _ in range(steps):
+        grads = {"w": params["w"] - target}
+        upd, state = opt.update(grads, state, params)
+        params = apply_updates(params, upd)
+    return float(jnp.abs(params["w"] - target).max())
+
+
+def test_sgd_converges():
+    assert _quadratic_min(sgd(0.1)) < 1e-3
+
+
+def test_sgd_momentum_converges():
+    assert _quadratic_min(sgd(0.05, momentum=0.9)) < 1e-3
+
+
+def test_adamw_converges():
+    assert _quadratic_min(adamw(0.1)) < 1e-2
+
+
+def test_adamw_bf16_moments_close_to_f32():
+    a = _quadratic_min(adamw(0.1, moment_dtype=jnp.float32))
+    b = _quadratic_min(adamw(0.1, moment_dtype=jnp.bfloat16))
+    assert abs(a - b) < 0.05
+
+
+def test_weight_decay_shrinks():
+    opt = adamw(0.01, weight_decay=0.5)
+    params = {"w": jnp.array([10.0])}
+    state = opt.init(params)
+    for _ in range(50):
+        upd, state = opt.update({"w": jnp.zeros(1)}, state, params)
+        params = apply_updates(params, upd)
+    assert float(params["w"][0]) < 10.0
+
+
+def test_grad_clip():
+    g = {"w": jnp.full((4,), 100.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(jnp.sqrt(jnp.sum(jnp.square(clipped["w"])))) <= 1.0 + 1e-5
+    assert float(norm) == pytest.approx(200.0)
+
+
+def test_schedules():
+    s = warmup_cosine(1.0, 10, 100)
+    assert float(s(jnp.int32(0))) == 0.0
+    assert float(s(jnp.int32(10))) == pytest.approx(1.0, abs=0.02)
+    assert float(s(jnp.int32(100))) == pytest.approx(0.1, abs=0.02)
+    c = cosine_decay(2.0, 50)
+    assert float(c(jnp.int32(0))) == pytest.approx(2.0)

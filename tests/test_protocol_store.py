@@ -1,0 +1,131 @@
+"""Three-tier store, Algorithm 1 protocol, and both async runtimes."""
+
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import AggregationConfig, ModelMeta, UpdateDelta
+from repro.core.fedccl import ClusterSpaceConfig, FedCCL, FedCCLConfig
+from repro.core.protocol import Client, ClientSpec
+from repro.core.runtime_sim import AsyncSimRuntime
+from repro.core.runtime_threaded import AsyncThreadedRuntime
+from repro.core.store import GLOBAL_KEY, ModelStore
+
+
+def scalar_train_fn(params, dataset, rng, anchor):
+    target, n = dataset
+    w = params["w"]
+    for _ in range(3):
+        g = w - target
+        if anchor is not None:
+            g = g + anchor.lam * (w - anchor.anchor["w"])
+        w = w - 0.3 * g
+    return {"w": w}, n, 3
+
+
+def make_fed(runtime="sim", n_per_group=3, rounds=3, seed=0):
+    cfg = FedCCLConfig(
+        spaces=(ClusterSpaceConfig("loc", eps=100.0, min_samples=2,
+                                   metric="haversine"),),
+        ewc_lambda=0.05, runtime=runtime, seed=seed)
+    fed = FedCCL(cfg, {"w": jnp.zeros(())}, scalar_train_fn)
+    rng = np.random.default_rng(seed)
+    specs = []
+    for i in range(n_per_group):
+        specs.append(ClientSpec(
+            f"a{i}", {"loc": np.array([48.2 + rng.normal(0, .2),
+                                       16.4 + rng.normal(0, .2)])},
+            (+1.0, 100), speed=rng.uniform(.5, 2)))
+    for i in range(n_per_group):
+        specs.append(ClientSpec(
+            f"b{i}", {"loc": np.array([52.5 + rng.normal(0, .2),
+                                       13.4 + rng.normal(0, .2)])},
+            (-1.0, 100), speed=rng.uniform(.5, 2)))
+    fed.setup(specs)
+    return fed
+
+
+def test_store_levels_and_locking():
+    store = ModelStore({"w": jnp.zeros(())}, cluster_keys=["c0"])
+    p, m = store.request_model("global")
+    assert m.round == 0
+    ok = store.handle_model_update("cluster", "c0", {"w": jnp.ones(())},
+                                   ModelMeta(10, 1, 1), UpdateDelta(10, 1, 1))
+    assert ok
+    assert store.meta("cluster", "c0").round == 1
+    # non-blocking update while lock held -> rejected
+    rec = store._records["c0"]
+    rec.lock.acquire()
+    ok = store.handle_model_update("cluster", "c0", {"w": jnp.ones(())},
+                                   ModelMeta(10, 1, 2), UpdateDelta(10, 1, 1),
+                                   blocking=False)
+    rec.lock.release()
+    assert not ok and store.n_lock_waits == 1
+
+
+def test_clusters_specialize_and_global_averages():
+    fed = make_fed(rounds=3)
+    fed.run(rounds=4)
+    keys = sorted(fed.store.keys())
+    vals = [float(fed.store.params("cluster", k)["w"]) for k in keys]
+    assert len(keys) == 2
+    assert max(vals) > 0.8 and min(vals) < -0.8        # specialized
+    # global averages the two opposing groups (both at +-1): clearly inside
+    assert abs(float(fed.store.params("global")["w"])) < 0.6
+
+
+def test_sim_runtime_is_deterministic():
+    r1 = make_fed(seed=7)
+    r2 = make_fed(seed=7)
+    s1 = r1.run(rounds=3)
+    s2 = r2.run(rounds=3)
+    assert s1 == s2
+    assert float(r1.store.params("global")["w"]) == \
+        float(r2.store.params("global")["w"])
+
+
+def test_sim_staleness_occurs():
+    fed = make_fed()
+    stats = fed.run(rounds=4)
+    assert stats["mean_staleness"] > 0     # true async interleaving
+    assert 0 < stats["fast_path_frac"] < 1
+
+
+def test_dropout_resilience():
+    cfg = FedCCLConfig(
+        spaces=(ClusterSpaceConfig("loc", eps=100.0, min_samples=2,
+                                   metric="haversine"),),
+        seed=3, dropout_prob=0.3)
+    fed = FedCCL(cfg, {"w": jnp.zeros(())}, scalar_train_fn)
+    rng = np.random.default_rng(3)
+    fed.setup([ClientSpec(f"c{i}", {"loc": np.array([48.2 + rng.normal(0, .1),
+                                                     16.4 + rng.normal(0, .1)])},
+                          (1.0, 50)) for i in range(4)])
+    stats = fed.run(rounds=3)
+    # all clients eventually complete their rounds despite dropouts
+    assert stats["updates"] >= 4 * 3 * 2   # (cluster+global) per round
+
+
+def test_threaded_runtime_consistency():
+    fed = make_fed(runtime="threaded")
+    fed.run(rounds=2)
+    total_rounds = fed.store.meta("global").round
+    assert total_rounds == 6 * 2           # every update serialized by lock
+    samples = fed.store.meta("global").samples_learned
+    assert samples == 6 * 2 * 100          # n_clients * rounds * delta(n=100)
+
+
+def test_predict_evolve_join():
+    fed = make_fed()
+    fed.run(rounds=3)
+    keys, params = fed.join(ClientSpec(
+        "new", {"loc": np.array([52.55, 13.45])}, (-1.0, 50)))
+    assert keys and keys[0].startswith("loc:")
+    # immediately specialized: matches its cluster's sign
+    assert float(params["w"]) < -0.5
+    # outlier joins as noise -> global model
+    keys2, params2 = fed.join(ClientSpec(
+        "outlier", {"loc": np.array([0.0, 0.0])}, (0.0, 10)))
+    assert keys2 == []

@@ -1,0 +1,72 @@
+"""Synthetic PV generator invariants (the simulated dataset gate)."""
+
+import numpy as np
+import pytest
+
+from repro.configs.solar_lstm import FEATURES, HISTORY_STEPS, HORIZON_STEPS
+from repro.data.solar import RANGES, SiteSpec, SolarDataGenerator, generate_fleet
+from repro.data.windows import make_windows, split_windows
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    return generate_fleet(n_sites=6, n_days=30, seed=0)
+
+
+def test_production_physical_bounds(fleet):
+    for site, d in fleet:
+        y = d["production_norm"]
+        assert y.min() >= 0.0
+        assert y.max() <= 1.2
+        # no production at night (00:00-04:00)
+        night = y[d["minute"] < 240]
+        assert night.max() == 0.0
+
+
+def test_features_within_table1_ranges(fleet):
+    for site, d in fleet:
+        X = d["features"]
+        assert X.shape[1] == len(FEATURES)
+        # normalized features bounded
+        assert X.min() >= -1.0 - 1e-6 and X.max() <= 1.0 + 1e-6
+
+
+def test_regional_correlation_exceeds_cross_region():
+    fleet = generate_fleet(n_sites=6, n_days=20, seed=1)
+    # sites 0,3 share region 0; 1,4 region 1 (i % 3 assignment)
+    def clouds_of(i):
+        return fleet[i][1]["features"][:, FEATURES.index("clouds")]
+    same = np.corrcoef(clouds_of(0), clouds_of(3))[0, 1]
+    cross = np.corrcoef(clouds_of(0), clouds_of(1))[0, 1]
+    assert same > cross
+
+
+def test_orientation_shifts_peak():
+    fleet = generate_fleet(n_sites=6, n_days=30, seed=0)
+    south = [d for s, d in fleet if 150 < s.azimuth < 210]
+    east = [d for s, d in fleet if 80 < s.azimuth < 150]
+    assert south and east
+    peak_s = np.mean([np.argmax(d["production_norm"].reshape(-1, 96).mean(0))
+                      for d in south])
+    peak_e = np.mean([np.argmax(d["production_norm"].reshape(-1, 96).mean(0))
+                      for d in east])
+    assert peak_e < peak_s      # east-facing peaks earlier
+
+
+def test_windows_shapes_and_alignment(fleet):
+    _, d = fleet[0]
+    w = make_windows(d)
+    n = len(w["target"])
+    assert w["history"].shape == (n, HISTORY_STEPS, len(FEATURES) + 1)
+    assert w["forecast"].shape == (n, HORIZON_STEPS, len(FEATURES))
+    assert w["target"].shape == (n, HORIZON_STEPS)
+    # forecast rows correspond to target rows: same minute encoding
+    tr, te = split_windows(w, 0.8)
+    assert len(tr["target"]) + len(te["target"]) == n
+
+
+def test_determinism():
+    a = generate_fleet(n_sites=2, n_days=5, seed=5)
+    b = generate_fleet(n_sites=2, n_days=5, seed=5)
+    np.testing.assert_array_equal(a[0][1]["production_norm"],
+                                  b[0][1]["production_norm"])
