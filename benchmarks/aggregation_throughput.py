@@ -3,16 +3,29 @@
 claims): Algorithm-2 weighted aggregation throughput, jit-tree path vs the
 Pallas kernel path (interpret mode on CPU; the BlockSpec tiling is the TPU
 deliverable), across model sizes from the case-study LSTM to LLM shards.
+
+Also: the coalescing server path — N queued updates folded by one
+``coalesced_aggregate`` call vs N sequential pairwise ``aggregate_models``
+folds, plus a threaded-contention scenario showing coalesce factor > 1.
 """
 
 from __future__ import annotations
 
+import threading
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.aggregation import (
+    AggregationConfig,
+    ModelMeta,
+    UpdateDelta,
+    aggregate_models,
+    coalesced_aggregate,
+)
+from repro.core.store import ModelStore
 from repro.kernels.fedavg_agg.ops import aggregate_flat
 from repro.kernels.fedavg_agg.ref import agg_ref
 
@@ -44,6 +57,96 @@ def run(sizes=(200_000, 2_000_000, 20_000_000), n_models=2):
     return rows
 
 
+def _make_updates(rng, t, n, snapshot_round):
+    """N stale updates that all fetched the same old snapshot — the
+    queued-behind-one-lock shape.  With the base already past
+    ``snapshot_round`` none of them hits the sequential fast path, so every
+    one contributes through the weighted fold."""
+    ups = []
+    for _ in range(n):
+        s = int(rng.integers(50, 500))
+        ups.append(({"w": jnp.asarray(rng.standard_normal(t), jnp.float32)},
+                    ModelMeta(s, 1, snapshot_round + 1), UpdateDelta(s, 1, 1)))
+    return ups
+
+
+def run_batched(sizes=(200_000, 2_000_000), batch_sizes=(4, 16)):
+    """Batched (coalesced) drain vs sequential pairwise fold of the same
+    queue: same result (parity-tested), 1 parameter pass instead of N-1."""
+    rows = []
+    rng = np.random.default_rng(1)
+    cfg = AggregationConfig()
+    for t in sizes:
+        base = {"w": jnp.asarray(rng.standard_normal(t), jnp.float32)}
+        meta = ModelMeta(1000, 3, 5)
+        for n in batch_sizes:
+            updates = _make_updates(rng, t, n, snapshot_round=1)
+
+            def seq():
+                p, m = base, meta
+                for up, um, d in updates:
+                    p, m = aggregate_models(p, m, up, um, d, cfg)
+                return p
+
+            def bat():
+                return coalesced_aggregate(base, meta, updates, cfg).params
+
+            us_seq = _time(lambda: seq()["w"])
+            us_bat = _time(lambda: bat()["w"])
+            rows.append({
+                "params": t, "queued_updates": n,
+                "sequential_us": us_seq, "batched_us": us_bat,
+                "speedup": us_seq / us_bat,
+            })
+    return rows
+
+
+def run_contention(n_writers=8, per_writer=20, t=100_000):
+    """Threaded contention: writers enqueue non-blocking while one server
+    drain thread sweeps — reports the achieved coalesce factor (>1 means
+    multiple updates folded per parameter pass)."""
+    rng = np.random.default_rng(2)
+    store = ModelStore({"w": jnp.asarray(rng.standard_normal(t), jnp.float32)},
+                       batch_aggregation=True, max_coalesce=32)
+
+    def writer(i):
+        wrng = np.random.default_rng(100 + i)
+        for _ in range(per_writer):
+            s = int(wrng.integers(50, 500))
+            store.handle_model_update(
+                "global", None,
+                {"w": jnp.asarray(wrng.standard_normal(t), jnp.float32)},
+                ModelMeta(s, 1, 0), UpdateDelta(s, 1, 1))
+
+    stop = threading.Event()
+
+    def drainer():
+        while not stop.is_set():
+            if store.drain_all() == 0:
+                time.sleep(1e-4)
+        store.drain_all()
+
+    t0 = time.perf_counter()
+    d = threading.Thread(target=drainer)
+    ws = [threading.Thread(target=writer, args=(i,)) for i in range(n_writers)]
+    d.start()
+    for w in ws:
+        w.start()
+    for w in ws:
+        w.join()
+    stop.set()
+    d.join()
+    wall = time.perf_counter() - t0
+    return {
+        "updates": store.n_updates,
+        "drain_batches": store.n_drain_batches,
+        "coalesce_factor": store.coalesce_factor(),
+        "max_queue_depth": store.max_queue_depth,
+        "wall_s": wall,
+        "updates_per_s": store.n_updates / wall,
+    }
+
+
 def csv_rows(rows):
     out = []
     for r in rows:
@@ -56,3 +159,8 @@ def csv_rows(rows):
 if __name__ == "__main__":
     for r in run():
         print(r)
+    print("-- batched vs sequential fold --")
+    for r in run_batched():
+        print(r)
+    print("-- threaded contention (coalescing drain) --")
+    print(run_contention())

@@ -85,7 +85,8 @@ def load_store(path, agg_cfg=None):
     for key, rec in blob.items():
         meta = ModelMeta(**{k: int(v) for k, v in rec["meta"].items()})
         if key == GLOBAL_KEY:
-            store._records[GLOBAL_KEY].meta = meta
+            rec_g = store._records[GLOBAL_KEY]
+            rec_g.swap(rec_g.params, meta)
         else:
             store._records[key] = ModelRecord(rec["params"], meta)
     return store

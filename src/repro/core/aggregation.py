@@ -53,6 +53,17 @@ class AggregationConfig:
 
 
 @jax.jit
+def _weighted_sum_n(trees, ws: jnp.ndarray):
+    """One fused N-way convex combination; `ws` is traced so weight changes
+    never retrace, only a new N or tree structure does."""
+    out = jax.tree.map(
+        lambda *xs: sum(x.astype(jnp.float32) * ws[i]
+                        for i, x in enumerate(xs)),
+        *trees)
+    return jax.tree.map(lambda a, t: a.astype(t.dtype), out, trees[0])
+
+
+@jax.jit
 def _weighted_avg(base, updated, ratio_base: jnp.ndarray):
     rb = ratio_base.astype(jnp.float32)
     return jax.tree.map(
@@ -86,13 +97,70 @@ def aggregate_models(base_params, base_meta: ModelMeta, updated_params,
 def multi_aggregate(param_sets, sample_counts, cfg: AggregationConfig = AggregationConfig()):
     """N-way sample-weighted average (synchronous-FedAvg baseline and the
     server catch-up path when several updates queued behind one lock)."""
+    if not param_sets:
+        raise ValueError("multi_aggregate needs at least one parameter set")
+    if len(param_sets) != len(sample_counts):
+        raise ValueError(
+            f"{len(param_sets)} parameter sets vs {len(sample_counts)} counts")
     total = float(sum(sample_counts))
-    ws = [c / total for c in sample_counts]
+    if total <= 0:
+        # fresh clients with empty datasets: no sample mass, uniform weights
+        ws = [1.0 / len(sample_counts)] * len(sample_counts)
+    else:
+        ws = [c / total for c in sample_counts]
     if cfg.use_pallas:
         from repro.kernels.fedavg_agg.ops import aggregate_pytrees
 
         return aggregate_pytrees(list(param_sets), ws)
-    out = jax.tree.map(lambda x: x.astype(jnp.float32) * ws[0], param_sets[0])
-    for p, w in zip(param_sets[1:], ws[1:]):
-        out = jax.tree.map(lambda a, b, w=w: a + b.astype(jnp.float32) * w, out, p)
-    return jax.tree.map(lambda a, t: a.astype(t.dtype), out, param_sets[0])
+    if len(param_sets) == 1:
+        return param_sets[0]
+    return _weighted_sum_n(list(param_sets), jnp.asarray(ws, jnp.float32))
+
+
+@dataclass(frozen=True)
+class CoalesceResult:
+    params: object
+    meta: ModelMeta
+    n_folded: int        # queued updates consumed
+    n_param_sets: int    # parameter sets in the final weighted sum
+    n_fast_path: int     # updates that hit the sequential fast path
+
+
+def coalesced_aggregate(base_params, base_meta: ModelMeta, updates,
+                        cfg: AggregationConfig = AggregationConfig()) -> CoalesceResult:
+    """Fold N queued updates (FIFO order) into at most one N-way weighted sum.
+
+    Semantically equivalent to folding each update through
+    ``aggregate_models`` in arrival order: the pairwise sample-weighted
+    averages of Algorithm 2 telescope —
+    ``avg(avg(p0, p1; s0, s1), p2; s0+s1, s2) = (s0 p0 + s1 p1 + s2 p2) / Σs``
+    — so the whole batch costs one ``multi_aggregate`` call (a single kernel
+    launch on the Pallas route) instead of N-1 full passes over the
+    parameters.  The sequential fast path and the zero-sample replace path
+    are preserved exactly: both discard the accumulated contributions and
+    restart the sum from the update's parameters.
+
+    ``updates`` is a sequence of ``(params, meta, delta)`` triples.
+    """
+    meta = base_meta
+    sets = [base_params]
+    fracs = [1.0]          # convex weights of `sets` in the running average
+    n_fast = 0
+    for upd_params, upd_meta, delta in updates:
+        if cfg.sequential_fast_path and upd_meta.round == meta.round + 1:
+            sets, fracs = [upd_params], [1.0]
+            n_fast += 1
+        else:
+            total = meta.samples_learned + upd_meta.samples_learned
+            if total <= 0:
+                sets, fracs = [upd_params], [1.0]
+            else:
+                rb = meta.samples_learned / total
+                fracs = [f * rb for f in fracs]
+                sets.append(upd_params)
+                fracs.append(1.0 - rb)
+        meta = meta.accumulate(delta)
+    if len(sets) == 1:
+        return CoalesceResult(sets[0], meta, len(updates), 1, n_fast)
+    return CoalesceResult(multi_aggregate(sets, fracs, cfg), meta,
+                          len(updates), len(sets), n_fast)

@@ -174,7 +174,9 @@ class IncrementalDBSCAN:
             for kk in self._neighbors(j):
                 if self.labels[kk] == NOISE:
                     self.labels[kk] = cid
-        self.labels[i] = cid if self._is_core(i) or core_nbrs else NOISE
+        # the new point always joins cid here: either it is core itself or it
+        # is a border point of a core neighbor (core_nbrs is non-empty)
+        self.labels[i] = cid
         return int(self.labels[i])
 
     def fit_batch(self, X: np.ndarray) -> np.ndarray:

@@ -43,6 +43,8 @@ class FedCCLConfig:
     seed: int = 0
     dropout_prob: float = 0.0        # client-unavailability resilience knob
     use_pallas_agg: bool = False
+    batch_aggregation: bool = False  # coalescing server path (queue + drain)
+    max_coalesce: int = 16           # max queued updates folded per drain
 
 
 class FedCCL:
@@ -51,7 +53,9 @@ class FedCCL:
         self.train_fn = train_fn
         self.store = ModelStore(
             init_params,
-            agg_cfg=AggregationConfig(use_pallas=cfg.use_pallas_agg))
+            agg_cfg=AggregationConfig(use_pallas=cfg.use_pallas_agg),
+            batch_aggregation=cfg.batch_aggregation,
+            max_coalesce=cfg.max_coalesce)
         self.spaces = [
             ClusterSpace(s.name, IncrementalDBSCAN(s.eps, s.min_samples, s.metric))
             for s in cfg.spaces]
@@ -79,7 +83,7 @@ class FedCCL:
             rt = AsyncThreadedRuntime(self.clients, self.store, rounds)
             rt.run()
             self._runtime = rt
-            return {"updates": self.store.n_updates}
+            return self.store.agg_stats()
         rt = AsyncSimRuntime(self.clients, self.store, seed=self.cfg.seed,
                              dropout_prob=self.cfg.dropout_prob)
         rt.run(rounds)
@@ -99,12 +103,23 @@ class FedCCL:
 
     # ------------------------------------------------------------- inference
     def model_for(self, client_id: str, level: str = "auto"):
-        client = next(c for c in self.clients if c.spec.client_id == client_id)
+        client = next((c for c in self.clients
+                       if c.spec.client_id == client_id), None)
+        if client is None:
+            raise KeyError(f"unknown client_id {client_id!r}; known clients: "
+                           f"{sorted(c.spec.client_id for c in self.clients)}")
         if level == "local":
             return client.local_params, "local"
         if level == "global":
             return self.store.params("global"), "global"
         if level.startswith("cluster"):
-            key = level.split(":", 1)[1] if ":" in level else client.cluster_keys[0]
+            if ":" in level:
+                key = level.split(":", 1)[1]
+            elif client.cluster_keys:
+                key = client.cluster_keys[0]
+            else:
+                # noise client (DBSCAN label -1): no cluster model exists,
+                # fall back to the global tier instead of crashing
+                return self.store.params("global"), "global"
             return self.store.params("cluster", key), f"cluster:{key}"
         return self.pe.choose_inference_model(client)

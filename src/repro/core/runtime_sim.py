@@ -56,7 +56,16 @@ class AsyncSimRuntime:
                        _Event(ev_time, next(self._seq), kind, client_idx, payload))
 
     def run(self, rounds_per_client: int):
-        """Each client performs `rounds_per_client` full Alg.1 rounds."""
+        """Each client performs `rounds_per_client` full Alg.1 rounds.
+
+        With ``store.batch_aggregation`` submits enqueue instead of
+        aggregating inline; queued updates are drained (coalesced into one
+        N-way aggregation per model) right before anyone re-reads the model
+        — at fetch time — and whenever a queue hits ``max_coalesce``.
+        Between drains concurrent submitters pile up behind the same model,
+        which is exactly the contention the coalescing path amortizes.
+        """
+        batched = self.store.batch_aggregation
         for i, c in enumerate(self.clients):
             self._push(self._duration(c) * self.rng.uniform(0, 1), "round_start", i)
 
@@ -79,8 +88,12 @@ class AsyncSimRuntime:
                 # fetch snapshots NOW; training completes after a delay
                 jobs = []
                 for key in client.cluster_keys:
+                    if batched:
+                        self.store.drain("cluster", key)
                     p, m = client.fetch(self.store, "cluster", key)
                     jobs.append(("cluster", key, p, m))
+                if batched:
+                    self.store.drain("global")
                 p, m = client.fetch(self.store, "global", None)
                 jobs.append(("global", None, p, m))
                 self._push(self.now + self._duration(client), "submit",
@@ -92,17 +105,26 @@ class AsyncSimRuntime:
                     cur = self.store.meta(level, key)
                     self.staleness_log.append(cur.round - m.round)
                     client.submit(self.store, level, key, new_p, new_meta, delta)
+                    if batched and (self.store.pending_depth(level, key)
+                                    >= self.store.max_coalesce):
+                        self.store.drain(level, key)
                 self.completed_rounds[client.spec.client_id] += 1
                 if self.completed_rounds[client.spec.client_id] < target:
                     self._push(self.now + 1e-3, "round_start", ev.client_idx)
+        if batched:
+            self.store.drain_all()
 
     # ------------------------------------------------------------- reporting
     def stats(self) -> dict:
         sl = np.array(self.staleness_log) if self.staleness_log else np.zeros(1)
-        return {
+        out = {
             "virtual_time": self.now,
             "updates": self.store.n_updates,
             "fast_path_frac": (self.store.n_fast_path / max(self.store.n_updates, 1)),
             "mean_staleness": float(sl.mean()),
             "max_staleness": int(sl.max()),
         }
+        if self.store.batch_aggregation:
+            out["coalesce_factor"] = self.store.coalesce_factor()
+            out["max_queue_depth"] = self.store.max_queue_depth
+        return out

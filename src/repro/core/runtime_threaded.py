@@ -4,6 +4,11 @@ ModelStore — the closest in-process analogue of the paper's deployment
 (independent edge clients + central server with per-model locks).  Used by
 one integration test and the threaded example; the deterministic sim is the
 default for experiments.
+
+With ``store.batch_aggregation`` the per-model locks stop serializing
+clients: submits enqueue without blocking and a dedicated server drain
+thread folds each model's queue into one coalesced N-way aggregation per
+sweep (Algorithm-2-equivalent; see ``coalesced_aggregate``).
 """
 
 from __future__ import annotations
@@ -18,11 +23,13 @@ from repro.core.store import ModelStore
 
 class AsyncThreadedRuntime:
     def __init__(self, clients: list[Client], store: ModelStore,
-                 rounds_per_client: int = 2, stagger: float = 0.0):
+                 rounds_per_client: int = 2, stagger: float = 0.0,
+                 drain_poll: float = 0.001):
         self.clients = clients
         self.store = store
         self.rounds = rounds_per_client
         self.stagger = stagger
+        self.drain_poll = drain_poll
         self.errors: list[BaseException] = []
 
     def _client_loop(self, client: Client, idx: int):
@@ -41,13 +48,34 @@ class AsyncThreadedRuntime:
         except BaseException as e:  # surfaced by join()
             self.errors.append(e)
 
+    def _server_loop(self, stop: threading.Event):
+        """Server drain thread: sweep every model's queue, coalescing all
+        pending updates per model into single aggregations, until the
+        clients are done and the queues are empty."""
+        try:
+            while not stop.is_set():
+                if self.store.drain_all() == 0:
+                    time.sleep(self.drain_poll)
+            self.store.drain_all()   # final sweep after last client exits
+        except BaseException as e:
+            self.errors.append(e)
+
     def run(self):
         threads = [threading.Thread(target=self._client_loop, args=(c, i),
                                     name=f"client-{c.spec.client_id}")
                    for i, c in enumerate(self.clients)]
+        server: Optional[threading.Thread] = None
+        stop = threading.Event()
+        if self.store.batch_aggregation:
+            server = threading.Thread(target=self._server_loop, args=(stop,),
+                                      name="server-drain")
+            server.start()
         for t in threads:
             t.start()
         for t in threads:
             t.join()
+        if server is not None:
+            stop.set()
+            server.join()
         if self.errors:
             raise self.errors[0]

@@ -4,51 +4,94 @@ Levels: "global" (one model), "cluster" (one per cluster key, keys are
 namespaced e.g. "loc:2" / "ori:1"), and client-side "local" models which
 never touch the server.  ``handle_model_update`` implements the server
 update handler with per-model locking (lines 19-25 of Algorithm 1).
+
+Batched mode (``batch_aggregation=True``): clients enqueue updates without
+blocking on the model lock; a drain step folds every queued update for a
+model into one ``coalesced_aggregate`` call — at most one N-way weighted
+sum (one Pallas kernel launch with ``use_pallas=True``) per drained batch
+instead of one full parameter pass per update.  Semantics are identical to
+the sequential fold (see ``coalesced_aggregate``).
 """
 
 from __future__ import annotations
 
 import threading
-from dataclasses import dataclass, field
-from typing import Callable, Optional
-
-import jax
+from collections import deque
+from dataclasses import dataclass
+from typing import Optional
 
 from repro.core.aggregation import (
     AggregationConfig,
     ModelMeta,
     UpdateDelta,
     aggregate_models,
+    coalesced_aggregate,
 )
 
 GLOBAL_KEY = "__global__"
 
 
-@dataclass
-class ModelRecord:
+@dataclass(frozen=True)
+class PendingUpdate:
+    """One client update queued for a later coalesced drain."""
+
     params: object
-    meta: ModelMeta = field(default_factory=ModelMeta)
-    lock: threading.Lock = field(default_factory=threading.Lock)
+    meta: ModelMeta
+    delta: UpdateDelta
+
+
+class ModelRecord:
+    """One stored model.  (params, meta) live in a single tuple swapped by
+    one reference assignment, so lock-free snapshot reads can never observe
+    new params with old meta (or vice versa) mid-aggregation."""
+
+    def __init__(self, params, meta: ModelMeta = None):
+        self._state = (params, meta if meta is not None else ModelMeta())
+        self.lock = threading.Lock()
+        # pending updates awaiting a coalesced drain; guarded by pending_lock
+        # so enqueues never block behind an in-flight aggregation holding
+        # `lock`
+        self.pending: deque = deque()
+        self.pending_lock = threading.Lock()
+
+    @property
+    def params(self):
+        return self._state[0]
+
+    @property
+    def meta(self) -> ModelMeta:
+        return self._state[1]
+
+    def swap(self, params, meta: ModelMeta):
+        self._state = (params, meta)
 
     def snapshot(self):
-        return self.params, self.meta
+        return self._state
 
 
 class ModelStore:
     """Thread-safe store for global + cluster models."""
 
     def __init__(self, init_params, cluster_keys=(),
-                 agg_cfg: AggregationConfig = AggregationConfig()):
+                 agg_cfg: AggregationConfig = AggregationConfig(),
+                 batch_aggregation: bool = False, max_coalesce: int = 16):
         self.agg_cfg = agg_cfg
+        self.batch_aggregation = batch_aggregation
+        self.max_coalesce = max(int(max_coalesce), 1)
         self._records: dict[str, ModelRecord] = {}
         self._registry_lock = threading.Lock()
         self._records[GLOBAL_KEY] = ModelRecord(init_params)
         for key in cluster_keys:
             self._records[str(key)] = ModelRecord(init_params)
-        # instrumentation
+        # instrumentation (guarded by _stats_lock; hot-path counters only)
+        self._stats_lock = threading.Lock()
         self.n_updates = 0
         self.n_fast_path = 0
         self.n_lock_waits = 0
+        self.n_enqueued = 0
+        self.n_drain_batches = 0
+        self.n_drained = 0                     # updates consumed by drains
+        self.max_queue_depth = 0
 
     # ------------------------------------------------------------------ keys
     @staticmethod
@@ -57,6 +100,18 @@ class ModelStore:
             return GLOBAL_KEY
         assert cluster_key is not None, "cluster level requires a key"
         return str(cluster_key)
+
+    def _record(self, key: str) -> ModelRecord:
+        """Registry read under the registry lock — `ensure_cluster` can mutate
+        `_records` concurrently (Predict & Evolve joins mid-run)."""
+        with self._registry_lock:
+            try:
+                return self._records[key]
+            except KeyError:
+                known = sorted(k for k in self._records if k != GLOBAL_KEY)
+                raise KeyError(
+                    f"no model registered for cluster key {key!r} "
+                    f"(known cluster keys: {known})") from None
 
     def ensure_cluster(self, cluster_key: str, init_params=None):
         """Predict & Evolve: a newly formed cluster gets a model seeded from
@@ -69,42 +124,121 @@ class ModelStore:
                 self._records[key] = ModelRecord(seed)
 
     def keys(self):
-        return [k for k in self._records if k != GLOBAL_KEY]
+        with self._registry_lock:
+            return [k for k in self._records if k != GLOBAL_KEY]
 
     # -------------------------------------------------------------- protocol
     def request_model(self, level: str, cluster_key: Optional[str] = None):
-        """RequestModel — snapshot read (no lock needed for consistency; the
-        paper's clients read whatever the latest aggregated state is)."""
-        rec = self._records[self._key(level, cluster_key)]
-        return rec.snapshot()
+        """RequestModel — snapshot read (no model lock needed for consistency;
+        the paper's clients read whatever the latest aggregated state is)."""
+        return self._record(self._key(level, cluster_key)).snapshot()
 
     def handle_model_update(self, level: str, cluster_key: Optional[str],
                             updated_params, updated_meta: ModelMeta,
                             delta: UpdateDelta, *, blocking: bool = True) -> bool:
         """HandleModelUpdate (Algorithm 1 lines 19-25): lock the one model
         being updated, aggregate, store, release.  Returns False if
-        ``blocking=False`` and the lock was busy (client retries later)."""
-        rec = self._records[self._key(level, cluster_key)]
+        ``blocking=False`` and the lock was busy (client retries later).
+
+        In batched mode the update is enqueued instead (never blocks, always
+        accepted); a later ``drain`` folds the whole queue at once.
+        """
+        if self.batch_aggregation:
+            self.enqueue_update(level, cluster_key, updated_params,
+                                updated_meta, delta)
+            return True
+        rec = self._record(self._key(level, cluster_key))
         acquired = rec.lock.acquire(blocking=blocking)
         if not acquired:
-            self.n_lock_waits += 1
+            with self._stats_lock:
+                self.n_lock_waits += 1
             return False
         try:
             fast = (self.agg_cfg.sequential_fast_path
                     and updated_meta.round == rec.meta.round + 1)
-            rec.params, rec.meta = aggregate_models(
+            rec.swap(*aggregate_models(
                 rec.params, rec.meta, updated_params, updated_meta, delta,
-                self.agg_cfg)
-            self.n_updates += 1
-            if fast:
-                self.n_fast_path += 1
+                self.agg_cfg))
+            with self._stats_lock:
+                self.n_updates += 1
+                if fast:
+                    self.n_fast_path += 1
         finally:
             rec.lock.release()
         return True
 
+    # ------------------------------------------------------- batched updates
+    def enqueue_update(self, level: str, cluster_key: Optional[str],
+                       updated_params, updated_meta: ModelMeta,
+                       delta: UpdateDelta) -> int:
+        """Queue an update for a later coalesced drain; returns queue depth."""
+        rec = self._record(self._key(level, cluster_key))
+        with rec.pending_lock:
+            rec.pending.append(PendingUpdate(updated_params, updated_meta, delta))
+            depth = len(rec.pending)
+        with self._stats_lock:
+            self.n_enqueued += 1
+            if depth > self.max_queue_depth:
+                self.max_queue_depth = depth
+        return depth
+
+    def pending_depth(self, level: str, cluster_key: Optional[str] = None) -> int:
+        rec = self._record(self._key(level, cluster_key))
+        with rec.pending_lock:
+            return len(rec.pending)
+
+    def drain(self, level: str, cluster_key: Optional[str] = None) -> int:
+        """Fold all queued updates for one model, `max_coalesce` at a time,
+        into single N-way aggregations.  Returns number of updates folded."""
+        rec = self._record(self._key(level, cluster_key))
+        drained = 0
+        while True:
+            # model lock first so concurrent drains stay FIFO; enqueues only
+            # touch pending_lock and keep flowing while we aggregate
+            with rec.lock:
+                with rec.pending_lock:
+                    take = min(len(rec.pending), self.max_coalesce)
+                    batch = [rec.pending.popleft() for _ in range(take)]
+                if not batch:
+                    return drained
+                res = coalesced_aggregate(
+                    rec.params, rec.meta,
+                    [(u.params, u.meta, u.delta) for u in batch],
+                    self.agg_cfg)
+                rec.swap(res.params, res.meta)
+            with self._stats_lock:
+                self.n_updates += len(batch)
+                self.n_fast_path += res.n_fast_path
+                self.n_drain_batches += 1
+                self.n_drained += len(batch)
+            drained += len(batch)
+
+    def drain_all(self) -> int:
+        total = self.drain("global")
+        for key in self.keys():
+            total += self.drain("cluster", key)
+        return total
+
     # ------------------------------------------------------------- inspection
     def meta(self, level: str, cluster_key: Optional[str] = None) -> ModelMeta:
-        return self._records[self._key(level, cluster_key)].meta
+        return self._record(self._key(level, cluster_key)).meta
 
     def params(self, level: str, cluster_key: Optional[str] = None):
-        return self._records[self._key(level, cluster_key)].params
+        return self._record(self._key(level, cluster_key)).params
+
+    def coalesce_factor(self) -> float:
+        """Mean queued-updates-per-drain — 1.0 means no batching benefit."""
+        if not self.n_drain_batches:
+            return 0.0
+        return self.n_drained / self.n_drain_batches
+
+    def agg_stats(self) -> dict:
+        return {
+            "updates": self.n_updates,
+            "fast_path_frac": self.n_fast_path / max(self.n_updates, 1),
+            "lock_waits": self.n_lock_waits,
+            "enqueued": self.n_enqueued,
+            "drain_batches": self.n_drain_batches,
+            "max_queue_depth": self.max_queue_depth,
+            "coalesce_factor": self.coalesce_factor(),
+        }

@@ -28,7 +28,17 @@ def aggregate_flat(stacked: jnp.ndarray, weights, *, interpret=None) -> jnp.ndar
 
 
 def aggregate_pytrees(trees: list, weights: list, *, interpret=None):
-    """Weighted sum of N identically-structured pytrees via the kernel."""
+    """Weighted sum of N identically-structured pytrees via the kernel.
+
+    This is the coalesced server drain's kernel route: a batch of N queued
+    updates costs one flatten + one streaming pass, not N-1 pairwise passes.
+    """
+    if not trees:
+        raise ValueError("aggregate_pytrees needs at least one pytree")
+    if len(trees) != len(weights):
+        raise ValueError(f"{len(trees)} pytrees vs {len(weights)} weights")
+    if len(trees) == 1 and float(weights[0]) == 1.0:
+        return trees[0]         # identity combination: skip the round trip
     flats = [jnp.concatenate([jnp.ravel(x).astype(jnp.float32)
                               for x in jax.tree.leaves(t)]) for t in trees]
     stacked = jnp.stack(flats)

@@ -1,0 +1,111 @@
+"""Minimal stand-in for the ``hypothesis`` API surface these tests use.
+
+The CI container has no network and no ``hypothesis`` wheel; without this
+shim five test modules die at collection.  The shim implements
+``given`` / ``settings`` / ``strategies`` with *seeded-random* example
+generation (deterministic per test via a crc32 of the test name), so the
+property tests still execute many concrete examples on a bare environment.
+When real hypothesis is installed the test modules import it instead and
+this file is inert.
+
+Not implemented (not needed here): shrinking, ``assume``, stateful testing,
+example databases.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class SearchStrategy:
+    """A strategy is just a draw function rng -> example."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng=None):
+        rng = rng or np.random.default_rng(0)
+        return self._draw(rng)
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` (the used subset)."""
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return SearchStrategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return SearchStrategy(
+            lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return SearchStrategy(
+            lambda rng: elements[int(rng.integers(len(elements)))])
+
+    @staticmethod
+    def tuples(*strats):
+        return SearchStrategy(
+            lambda rng: tuple(s._draw(rng) for s in strats))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements._draw(rng) for _ in range(n)]
+        return SearchStrategy(draw)
+
+
+def given(*pos_strats, **kw_strats):
+    """Run the test once per generated example (no shrinking)."""
+
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        _DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = np.random.default_rng(seed)
+            for i in range(n):
+                ex_pos = tuple(s._draw(rng) for s in pos_strats)
+                ex_kw = {k: s._draw(rng) for k, s in kw_strats.items()}
+                try:
+                    fn(*args, *ex_pos, **ex_kw, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example #{i} (seed={seed}): "
+                        f"args={ex_pos} kwargs={ex_kw}") from e
+        # hide the strategy-filled parameters from pytest's fixture
+        # resolution: positional strategies fill the rightmost params
+        # (hypothesis convention), keyword strategies fill by name
+        params = list(inspect.signature(fn).parameters.values())
+        if pos_strats:
+            params = params[:len(params) - len(pos_strats)]
+        params = [p for p in params if p.name not in kw_strats]
+        wrapper.__signature__ = inspect.Signature(params)
+        wrapper.__dict__.pop("__wrapped__", None)
+        wrapper._fallback_given = True
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    """Only ``max_examples`` matters for the fallback; the rest is accepted
+    and ignored for signature compatibility."""
+
+    def decorate(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return decorate

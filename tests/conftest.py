@@ -14,17 +14,15 @@ def rng():
 
 def pytest_addoption(parser):
     parser.addoption("--run-slow", action="store_true", default=False,
-                     help="run slow integration tests")
-
-
-def pytest_configure(config):
-    config.addinivalue_line("markers", "slow: slow integration tests")
+                     help="run heavy (subprocess-scale) gated tests")
 
 
 def pytest_collection_modifyitems(config, items):
+    """`slow` tests run by default (deselect with -m "not slow"); `heavy`
+    tests (full dry-run subprocesses) stay gated behind --run-slow."""
     if config.getoption("--run-slow"):
         return
     skip = pytest.mark.skip(reason="needs --run-slow")
     for item in items:
-        if "slow" in item.keywords:
+        if "heavy" in item.keywords:
             item.add_marker(skip)

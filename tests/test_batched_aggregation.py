@@ -1,0 +1,287 @@
+"""Coalescing batched-aggregation server path: parity with the sequential
+pairwise Algorithm-2 fold, queue accounting under thread contention, and the
+satellite regressions (zero-sample weights, registry-read locking)."""
+
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import (
+    AggregationConfig,
+    ModelMeta,
+    UpdateDelta,
+    aggregate_models,
+    coalesced_aggregate,
+    multi_aggregate,
+)
+from repro.core.fedccl import ClusterSpaceConfig, FedCCL, FedCCLConfig
+from repro.core.protocol import ClientSpec
+from repro.core.store import ModelStore
+
+
+def tree_of(rng):
+    return {"a": jnp.asarray(rng.standard_normal((7, 3)), jnp.float32),
+            "b": jnp.asarray(rng.standard_normal((11,)), jnp.float32)}
+
+
+def make_updates(rng, base_round, n, zero_samples=False):
+    """N queued updates: first is fresh (fast-path eligible), rest are stale
+    snapshots of the same base round — the lock-contention shape."""
+    ups = []
+    for i in range(n):
+        s = 0 if zero_samples else int(rng.integers(10, 500))
+        ups.append((tree_of(rng),
+                    ModelMeta(samples_learned=s, epochs_learned=i + 1,
+                              round=base_round + 1),
+                    UpdateDelta(s, 1, 1)))
+    return ups
+
+
+def sequential_fold(params, meta, updates, cfg):
+    for up, um, d in updates:
+        params, meta = aggregate_models(params, meta, up, um, d, cfg)
+    return params, meta
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+@pytest.mark.parametrize("n", [1, 2, 5, 12])
+def test_coalesced_matches_sequential_fold(use_pallas, n):
+    rng = np.random.default_rng(n * 17 + use_pallas)
+    cfg = AggregationConfig(use_pallas=use_pallas)
+    base = tree_of(rng)
+    meta = ModelMeta(samples_learned=300, epochs_learned=2, round=4)
+    updates = make_updates(rng, base_round=4, n=n)
+
+    seq_p, seq_m = sequential_fold(base, meta, updates, cfg)
+    res = coalesced_aggregate(base, meta, updates, cfg)
+
+    assert res.meta == seq_m
+    assert res.n_folded == n
+    for k in base:
+        np.testing.assert_allclose(np.asarray(res.params[k]),
+                                   np.asarray(seq_p[k]), atol=1e-5)
+
+
+def test_coalesced_preserves_fast_path():
+    """A lone fresh update must pass through unchanged (no averaging)."""
+    rng = np.random.default_rng(0)
+    base, meta = tree_of(rng), ModelMeta(100, 1, 3)
+    up = tree_of(rng)
+    res = coalesced_aggregate(
+        base, meta, [(up, ModelMeta(50, 2, 4), UpdateDelta(50, 1, 1))])
+    assert res.n_fast_path == 1 and res.n_param_sets == 1
+    for k in up:
+        np.testing.assert_array_equal(np.asarray(res.params[k]),
+                                      np.asarray(up[k]))
+    assert res.meta == ModelMeta(150, 2, 4)
+
+
+def test_coalesced_no_fast_path_cfg():
+    rng = np.random.default_rng(1)
+    cfg = AggregationConfig(sequential_fast_path=False)
+    base, meta = tree_of(rng), ModelMeta(100, 1, 3)
+    updates = make_updates(rng, base_round=3, n=4)
+    seq_p, seq_m = sequential_fold(base, meta, updates, cfg)
+    res = coalesced_aggregate(base, meta, updates, cfg)
+    assert res.meta == seq_m and res.n_fast_path == 0
+    for k in base:
+        np.testing.assert_allclose(np.asarray(res.params[k]),
+                                   np.asarray(seq_p[k]), atol=1e-5)
+
+
+def test_multi_aggregate_all_zero_samples_uniform():
+    """Fresh clients with empty datasets: uniform weights, no ZeroDivision."""
+    a = {"w": jnp.full((4,), 2.0)}
+    b = {"w": jnp.full((4,), 6.0)}
+    out = multi_aggregate([a, b], [0, 0])
+    np.testing.assert_allclose(np.asarray(out["w"]), 4.0, atol=1e-6)
+
+
+def test_coalesced_zero_sample_updates_match_sequential():
+    rng = np.random.default_rng(2)
+    cfg = AggregationConfig(sequential_fast_path=False)
+    base, meta = tree_of(rng), ModelMeta(0, 0, 0)
+    updates = make_updates(rng, base_round=5, n=3, zero_samples=True)
+    seq_p, seq_m = sequential_fold(base, meta, updates, cfg)
+    res = coalesced_aggregate(base, meta, updates, cfg)
+    assert res.meta == seq_m
+    for k in base:
+        np.testing.assert_allclose(np.asarray(res.params[k]),
+                                   np.asarray(seq_p[k]), atol=1e-5)
+
+
+# ---------------------------------------------------------------- store drain
+def test_store_drain_equals_direct_updates():
+    """Same update stream through the direct path and the batched path must
+    land on identical params + meta (single-threaded, so order matches)."""
+    rng = np.random.default_rng(3)
+    init = tree_of(rng)
+    direct = ModelStore(init, cluster_keys=["c0"])
+    batched = ModelStore(init, cluster_keys=["c0"], batch_aggregation=True,
+                         max_coalesce=4)
+    stream = make_updates(rng, base_round=0, n=9)
+    for up, um, d in stream:
+        direct.handle_model_update("cluster", "c0", up, um, d)
+        batched.handle_model_update("cluster", "c0", up, um, d)
+    assert batched.pending_depth("cluster", "c0") == 9
+    assert batched.drain("cluster", "c0") == 9
+    assert batched.meta("cluster", "c0") == direct.meta("cluster", "c0")
+    for k in init:
+        np.testing.assert_allclose(
+            np.asarray(batched.params("cluster", "c0")[k]),
+            np.asarray(direct.params("cluster", "c0")[k]), atol=1e-5)
+    assert batched.n_updates == direct.n_updates == 9
+    # 9 updates through max_coalesce=4 -> batches of 4, 4, 1
+    assert batched.n_drain_batches == 3
+    assert batched.coalesce_factor() == 3.0
+    assert batched.max_queue_depth == 9
+
+
+def test_threaded_contention_no_lost_updates():
+    """Many writer threads enqueue against one model while a drain thread
+    sweeps: every update must be folded exactly once (n_updates accounting
+    and sample-mass conservation)."""
+    store = ModelStore({"w": jnp.zeros(())}, batch_aggregation=True,
+                       max_coalesce=8)
+    n_threads, per_thread = 8, 25
+
+    def writer(t):
+        rng = np.random.default_rng(t)
+        for i in range(per_thread):
+            s = int(rng.integers(1, 100))
+            store.handle_model_update(
+                "global", None, {"w": jnp.asarray(rng.uniform(-1, 1))},
+                ModelMeta(s, 1, 0), UpdateDelta(s, 1, 1))
+
+    stop = threading.Event()
+
+    def drainer():
+        while not stop.is_set():
+            store.drain_all()
+        store.drain_all()
+
+    ths = [threading.Thread(target=writer, args=(t,)) for t in range(n_threads)]
+    d = threading.Thread(target=drainer)
+    d.start()
+    for t in ths:
+        t.start()
+    for t in ths:
+        t.join()
+    stop.set()
+    d.join()
+
+    total = n_threads * per_thread
+    assert store.n_enqueued == total
+    assert store.n_updates == total          # nothing lost, nothing doubled
+    assert store.pending_depth("global") == 0
+    # regenerate exactly: each writer draws samples then a uniform, in order
+    expect_samples = 0
+    for t in range(n_threads):
+        rng = np.random.default_rng(t)
+        for _ in range(per_thread):
+            expect_samples += int(rng.integers(1, 100))
+            rng.uniform(-1, 1)
+    assert store.meta("global").samples_learned == expect_samples
+    assert store.meta("global").round == total
+    w = float(store.params("global")["w"])
+    assert -1.0 <= w <= 1.0                  # convex combination of inputs
+
+
+# --------------------------------------------------------------- end to end
+def scalar_train_fn(params, dataset, rng, anchor):
+    target, n = dataset
+    w = params["w"]
+    for _ in range(3):
+        g = w - target
+        if anchor is not None:
+            g = g + anchor.lam * (w - anchor.anchor["w"])
+        w = w - 0.3 * g
+    return {"w": w}, n, 3
+
+
+def make_fed(runtime="sim", seed=0, **cfg_kw):
+    cfg = FedCCLConfig(
+        spaces=(ClusterSpaceConfig("loc", eps=100.0, min_samples=2,
+                                   metric="haversine"),),
+        ewc_lambda=0.05, runtime=runtime, seed=seed, **cfg_kw)
+    fed = FedCCL(cfg, {"w": jnp.zeros(())}, scalar_train_fn)
+    rng = np.random.default_rng(seed)
+    specs = []
+    for group, (lat, lon, tgt) in enumerate([(48.2, 16.4, +1.0),
+                                             (52.5, 13.4, -1.0)]):
+        for i in range(3):
+            specs.append(ClientSpec(
+                f"{'ab'[group]}{i}",
+                {"loc": np.array([lat + rng.normal(0, .2),
+                                  lon + rng.normal(0, .2)])},
+                (tgt, 100), speed=rng.uniform(.5, 2)))
+    fed.setup(specs)
+    return fed
+
+
+def test_sim_batched_accounting_and_specialization():
+    fed = make_fed(batch_aggregation=True, max_coalesce=4)
+    stats = fed.run(rounds=4)
+    # every submitted update folded: 6 clients * 4 rounds * (cluster+global)
+    assert stats["updates"] == 6 * 4 * 2
+    assert fed.store.pending_depth("global") == 0
+    assert stats["coalesce_factor"] >= 1.0
+    vals = [float(fed.store.params("cluster", k)["w"])
+            for k in sorted(fed.store.keys())]
+    assert max(vals) > 0.8 and min(vals) < -0.8
+    assert abs(float(fed.store.params("global")["w"])) < 0.6
+
+
+def test_sim_batched_deterministic():
+    s1 = make_fed(seed=11, batch_aggregation=True, max_coalesce=4).run(rounds=3)
+    s2 = make_fed(seed=11, batch_aggregation=True, max_coalesce=4).run(rounds=3)
+    assert s1 == s2
+
+
+def test_threaded_batched_runtime_accounting():
+    fed = make_fed(runtime="threaded", batch_aggregation=True, max_coalesce=8)
+    stats = fed.run(rounds=2)
+    assert stats["updates"] == 6 * 2 * 2
+    assert fed.store.meta("global").round == 6 * 2
+    assert fed.store.meta("global").samples_learned == 6 * 2 * 100
+    assert fed.store.pending_depth("global") == 0
+    assert stats["coalesce_factor"] >= 1.0
+
+
+# ------------------------------------------------------------- registry races
+def test_registry_reads_survive_concurrent_ensure_cluster():
+    store = ModelStore({"w": jnp.zeros(())}, cluster_keys=["c0"])
+    errors = []
+
+    def joiner():
+        try:
+            for i in range(300):
+                store.ensure_cluster(f"k{i}")
+        except BaseException as e:
+            errors.append(e)
+
+    def reader():
+        try:
+            for _ in range(300):
+                store.keys()
+                store.request_model("cluster", "c0")
+                store.meta("cluster", "c0")
+        except BaseException as e:
+            errors.append(e)
+
+    ths = [threading.Thread(target=joiner)] + \
+          [threading.Thread(target=reader) for _ in range(3)]
+    for t in ths:
+        t.start()
+    for t in ths:
+        t.join()
+    assert not errors
+    assert len(store.keys()) == 301
+
+
+def test_missing_cluster_key_error_names_key():
+    store = ModelStore({"w": jnp.zeros(())}, cluster_keys=["loc:0"])
+    with pytest.raises(KeyError, match="loc:7"):
+        store.request_model("cluster", "loc:7")

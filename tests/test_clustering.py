@@ -2,7 +2,10 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # bare CI env: seeded-random fallback shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.clustering import (
     NOISE,
@@ -84,6 +87,17 @@ def test_incremental_merge():
     assert inc.n_clusters == 2
     inc.insert(np.array([2.0, 0.0]))
     assert inc.n_clusters == 1
+
+
+def test_incremental_border_point_joins_cluster():
+    """A new point inside eps of an existing core point but not core itself
+    (border point) must adopt the cluster label, not stay NOISE."""
+    inc = IncrementalDBSCAN(eps=1.1, min_samples=3)
+    inc.fit_batch(np.array([[0.0, 0.0], [0.5, 0.0], [1.0, 0.0]]))
+    assert inc.n_clusters == 1
+    label = inc.insert(np.array([1.9, 0.0]))   # within eps of [1,0] only
+    assert label == inc.labels[2]              # joined the existing cluster
+    assert not inc._is_core(len(inc.X) - 1)    # genuinely a border point
 
 
 @settings(max_examples=25, deadline=None)

@@ -2,7 +2,7 @@
 
 The pure parts (input specs, roofline parsing/terms, analytic model) run
 in-process; the full 512-device lower+compile runs as a subprocess (it must
-set XLA_FLAGS before jax initializes) and is marked slow — the complete
+set XLA_FLAGS before jax initializes) and is marked heavy — the complete
 40-combination matrix is executed by the benchmark/EXPERIMENTS pipeline.
 """
 
@@ -93,7 +93,7 @@ def test_input_specs_cover_all_families():
             assert s.shape[0] == 256, (arch, k)
 
 
-@pytest.mark.slow
+@pytest.mark.heavy
 def test_dryrun_subprocess_single_pod():
     """Full 512-host-device lower+compile for one (arch, shape)."""
     env = dict(os.environ, PYTHONPATH=SRC)
@@ -107,7 +107,7 @@ def test_dryrun_subprocess_single_pod():
     assert rec["roofline"]["compute_s"] > 0
 
 
-@pytest.mark.slow
+@pytest.mark.heavy
 def test_dryrun_subprocess_multi_pod():
     env = dict(os.environ, PYTHONPATH=SRC)
     out = subprocess.run(

@@ -7,7 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # bare CI env: seeded-random fallback shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.kernels.fedavg_agg.ops import aggregate_flat, aggregate_pytrees
 from repro.kernels.fedavg_agg.ref import agg_ref, aggregate_pytrees_ref

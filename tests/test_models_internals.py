@@ -7,7 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # bare CI env: seeded-random fallback shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.configs import get_config, reduced_for_smoke
 from repro.models import attention as A

@@ -117,6 +117,29 @@ def test_threaded_runtime_consistency():
     assert samples == 6 * 2 * 100          # n_clients * rounds * delta(n=100)
 
 
+def test_model_for_noise_client_falls_back_to_global():
+    fed = make_fed()
+    fed.run(rounds=2)
+    # outlier joins as DBSCAN noise: cluster_keys == []
+    keys, _ = fed.join(ClientSpec(
+        "outlier", {"loc": np.array([0.0, 0.0])}, (0.0, 10)))
+    assert keys == []
+    params, tag = fed.model_for("outlier", level="cluster")
+    assert tag == "global"
+    np.testing.assert_allclose(np.asarray(params["w"]),
+                               np.asarray(fed.store.params("global")["w"]))
+    # explicit key still works for noise clients
+    any_key = fed.store.keys()[0]
+    _, tag = fed.model_for("outlier", level=f"cluster:{any_key}")
+    assert tag == f"cluster:{any_key}"
+
+
+def test_model_for_unknown_client_raises_keyerror():
+    fed = make_fed()
+    with pytest.raises(KeyError, match="nope"):
+        fed.model_for("nope")
+
+
 def test_predict_evolve_join():
     fed = make_fed()
     fed.run(rounds=3)

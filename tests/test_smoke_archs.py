@@ -9,6 +9,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow
+
 from repro.configs import ALL_ARCHS, get_config, reduced_for_smoke
 from repro.data.lm_synth import audio_batch, lm_batch, vlm_batch
 from repro.models.model import build_model
