@@ -1,0 +1,181 @@
+"""Privacy-subsystem overhead benchmark (DP path of the perf trajectory).
+
+Three measurements, written to ``BENCH_privacy.json``:
+
+  * ``privatize``   — DP clip+noise per update delta: Pallas kernel
+    (interpret mode on CPU; the BlockSpec tiling is the TPU deliverable) vs
+    the jitted jnp oracle, across model sizes;
+  * ``secure_drain`` — plain coalesced drain vs the secure full-round drain
+    (masked fused N-way sum incl. mask generation), same round shape;
+  * ``secure_sim``   — end-to-end FedCCL sim rounds, plain vs secure+DP,
+    with the achieved coalesce factor (the N-way drain amortization the
+    masks ride on).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import (
+    AggregationConfig,
+    ModelMeta,
+    UpdateDelta,
+    coalesced_aggregate,
+    secure_coalesced_aggregate,
+)
+from repro.kernels.dp_clip_noise.ops import privatize_flat
+from repro.kernels.dp_clip_noise.ref import dp_clip_noise_ref
+from repro.privacy.secure_agg import PairwiseMasker
+
+
+def _time(fn, *args, iters=5):
+    jax.block_until_ready(fn(*args))            # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run_privatize(sizes=(200_000, 2_000_000)):
+    rows = []
+    rng = np.random.default_rng(0)
+    for t in sizes:
+        d = jnp.asarray(rng.standard_normal(t), jnp.float32)
+        n = jnp.asarray(rng.standard_normal(t), jnp.float32)
+        us_ref = _time(dp_clip_noise_ref, d, n, 1.0, 1.1)
+        us_kernel = _time(lambda a, b: privatize_flat(a, b, 1.0, 1.1), d, n)
+        # 3 passes over T f32 (read delta+noise, write out) + the norm read
+        gbps = 4 * t * 4 / (us_ref / 1e6) / 1e9
+        rows.append({"params": t, "jit_us": us_ref,
+                     "pallas_interpret_us": us_kernel,
+                     "jit_effective_GBps": gbps})
+    return rows
+
+
+def run_secure_drain(t=200_000, n_clients=8):
+    """One full round folded plain vs masked (incl. client-side masking)."""
+    rng = np.random.default_rng(1)
+    masker = PairwiseMasker(seed=2, mask_scale=1.0)
+    ids = [f"c{i}" for i in range(n_clients)]
+    base = {"w": jnp.asarray(rng.standard_normal(t), jnp.float32)}
+    meta = ModelMeta(1000, 3, 5)
+    news, weights = [], []
+    for _ in ids:
+        news.append({"w": jnp.asarray(rng.standard_normal(t), jnp.float32)})
+        weights.append(int(rng.integers(50, 500)))
+    plain_updates = [(p, ModelMeta(s, 1, 6), UpdateDelta(s, 1, 1))
+                     for p, s in zip(news, weights)]
+    cfg = AggregationConfig()
+
+    def plain():
+        return coalesced_aggregate(base, meta, plain_updates, cfg).params["w"]
+
+    def secure():
+        masked = [(masker.mask_update(base, p, cid, ids, 0, "__global__", s),
+                   UpdateDelta(s, 1, 1))
+                  for cid, p, s in zip(ids, news, weights)]
+        return secure_coalesced_aggregate(base, meta, masked, cfg).params["w"]
+
+    return {"params": t, "round_clients": n_clients,
+            "plain_drain_us": _time(plain), "secure_drain_us": _time(secure)}
+
+
+def _scalar_train_fn(params, dataset, rng, anchor):
+    target, n = dataset
+    w = params["w"]
+    for _ in range(3):
+        g = w - target
+        if anchor is not None:
+            g = g + anchor.lam * (w - anchor.anchor["w"])
+        w = w - 0.3 * g
+    return {"w": w}, n, 3
+
+
+def _make_fed(seed=0, **cfg_kw):
+    """Two-group scalar federation (the protocol-timing fixture shape):
+    heavy enough to exercise drains, light enough to time end-to-end."""
+    from repro.core.fedccl import ClusterSpaceConfig, FedCCL, FedCCLConfig
+    from repro.core.protocol import ClientSpec
+
+    cfg = FedCCLConfig(
+        spaces=(ClusterSpaceConfig("loc", eps=100.0, min_samples=2,
+                                   metric="haversine"),),
+        ewc_lambda=0.05, seed=seed, **cfg_kw)
+    fed = FedCCL(cfg, {"w": jnp.zeros(())}, _scalar_train_fn)
+    rng = np.random.default_rng(seed)
+    specs = []
+    for group, (lat, lon, tgt) in enumerate([(48.2, 16.4, +1.0),
+                                             (52.5, 13.4, -1.0)]):
+        for i in range(3):
+            specs.append(ClientSpec(
+                f"{'ab'[group]}{i}",
+                {"loc": np.array([lat + rng.normal(0, .2),
+                                  lon + rng.normal(0, .2)])},
+                (tgt, 100), speed=rng.uniform(.5, 2)))
+    fed.setup(specs)
+    return fed
+
+
+def run_secure_sim(rounds=3):
+    """End-to-end sim: plain async vs secure+DP lockstep, coalesce factors."""
+    out = {}
+    t0 = time.perf_counter()
+    fed = _make_fed(seed=0, batch_aggregation=True, max_coalesce=16)
+    stats = fed.run(rounds=rounds)
+    out["plain"] = {"wall_s": time.perf_counter() - t0,
+                    "updates": stats["updates"],
+                    "coalesce_factor": stats.get("coalesce_factor", 1.0)}
+    t0 = time.perf_counter()
+    fed = _make_fed(seed=0, secure_agg=True, dp_clip=1.0,
+                    dp_noise_multiplier=0.5)
+    stats = fed.run(rounds=rounds)
+    out["secure_dp"] = {"wall_s": time.perf_counter() - t0,
+                        "updates": stats["updates"],
+                        "coalesce_factor": stats["coalesce_factor"],
+                        "secure_rounds": stats["secure_rounds"]}
+    eps = [r["epsilon"]
+           for r in fed.privacy_report()["per_client"].values()]
+    out["secure_dp"]["max_epsilon"] = max(eps)
+    return out
+
+
+def run(fast: bool = False, out_path: str = "BENCH_privacy.json") -> dict:
+    sizes = (200_000,) if fast else (200_000, 2_000_000)
+    report = {
+        "privatize": run_privatize(sizes=sizes),
+        "secure_drain": run_secure_drain(t=sizes[-1] // 10),
+        "secure_sim": run_secure_sim(rounds=2 if fast else 3),
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
+
+
+def csv_rows(report: dict):
+    rows = []
+    for r in report["privatize"]:
+        rows.append((f"privatize_{r['params']}", r["jit_us"],
+                     f"GBps={r['jit_effective_GBps']:.1f};"
+                     f"pallas_interpret_us={r['pallas_interpret_us']:.0f}"))
+    sd = report["secure_drain"]
+    rows.append((f"secure_drain_{sd['params']}", sd["secure_drain_us"],
+                 f"plain_us={sd['plain_drain_us']:.0f};"
+                 f"clients={sd['round_clients']}"))
+    ss = report["secure_sim"]
+    rows.append(("secure_sim_rounds", ss["secure_dp"]["wall_s"] * 1e6,
+                 f"plain_wall_s={ss['plain']['wall_s']:.2f};"
+                 f"coalesce_factor={ss['secure_dp']['coalesce_factor']:.2f};"
+                 f"max_eps={ss['secure_dp']['max_epsilon']:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    rep = run()
+    for row in csv_rows(rep):
+        print(row)
+    print("report -> BENCH_privacy.json")

@@ -5,6 +5,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   indep_*                 §IV.E population-independent analysis
   clustering              Fig. 2 pre-training clustering
   aggregation_*           §II.D server aggregation efficiency
+  privatize_* / secure_*  privacy subsystem overhead (-> BENCH_privacy.json)
   fed_round_*             Algorithm 1 protocol round timing
   dryrun_*                harness §Roofline rows (if artifacts exist)
 
@@ -46,6 +47,12 @@ def main() -> None:
     sizes = (200_000, 2_000_000) if fast else (200_000, 2_000_000, 20_000_000)
     arep = aggregation_throughput.run(sizes=sizes)
     rows += aggregation_throughput.csv_rows(arep)
+
+    # ---- privacy overhead (DP + secure aggregation) -------------------------
+    from benchmarks import privacy_overhead
+
+    pret = privacy_overhead.run(fast=fast)
+    rows += privacy_overhead.csv_rows(pret)
 
     # ---- protocol round timing (Algorithm 1) --------------------------------
     from benchmarks import protocol_timing

@@ -20,13 +20,21 @@ def main():
     ap.add_argument("--full", action="store_true",
                     help="paper-scale-ish run (slower)")
     ap.add_argument("--out", default="artifacts")
+    ap.add_argument("--dp-clip", type=float, default=None,
+                    help="enable DP update privatization with this L2 clip")
+    ap.add_argument("--dp-noise-multiplier", type=float, default=1.0,
+                    help="Gaussian noise std = multiplier * clip")
+    ap.add_argument("--secure-agg", action="store_true",
+                    help="pairwise-mask secure aggregation (full-round drains)")
     args = ap.parse_args()
 
     from repro.training.fed_solar import run_fedccl_solar
 
     kw = (dict(n_sites=9, n_days=90, rounds=4, epochs=4) if args.full
           else dict(n_sites=6, n_days=40, rounds=2))
-    report = run_fedccl_solar(seed=0, **kw)
+    report = run_fedccl_solar(seed=0, dp_clip=args.dp_clip,
+                              dp_noise_multiplier=args.dp_noise_multiplier,
+                              secure_agg=args.secure_agg, **kw)
 
     print("=== Table II analog ===")
     for name, row in report["table2"].items():
@@ -41,6 +49,15 @@ def main():
               f"(degradation {deg:+.2f} pp)")
     print("=== async protocol ===")
     print(json.dumps(report["async_stats"], indent=2))
+    priv = report["privacy"]
+    if priv["dp"]["enabled"] or priv["secure_agg"]["enabled"]:
+        print("=== privacy ===")
+        if priv["secure_agg"]["enabled"]:
+            print(f"secure rounds {priv['secure_agg']['rounds']}  "
+                  f"dropout recoveries {priv['secure_agg']['dropout_recoveries']}")
+        for cid, row in sorted(priv.get("per_client", {}).items()):
+            print(f"{cid:24s} eps={row['epsilon']:8.3f}  "
+                  f"delta={row['delta']:.0e}  steps={row['steps']}")
 
     os.makedirs(args.out, exist_ok=True)
     with open(os.path.join(args.out, "solar_report.json"), "w") as f:

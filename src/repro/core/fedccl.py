@@ -22,6 +22,9 @@ from repro.core.protocol import Client, ClientSpec
 from repro.core.runtime_sim import AsyncSimRuntime
 from repro.core.runtime_threaded import AsyncThreadedRuntime
 from repro.core.store import ModelStore
+from repro.privacy.accountant import RDPAccountant
+from repro.privacy.dp import DPConfig, DPPrivatizer
+from repro.privacy.secure_agg import PairwiseMasker
 
 
 @dataclass(frozen=True)
@@ -45,17 +48,32 @@ class FedCCLConfig:
     use_pallas_agg: bool = False
     batch_aggregation: bool = False  # coalescing server path (queue + drain)
     max_coalesce: int = 16           # max queued updates folded per drain
+    # ---- privacy subsystem (repro.privacy) --------------------------------
+    dp_clip: Optional[float] = None  # L2 clip of update deltas; None = DP off
+    dp_noise_multiplier: float = 1.0 # noise std = multiplier * dp_clip
+    secure_agg: bool = False         # pairwise-mask secure aggregation
+    target_delta: float = 1e-5       # delta for (epsilon, delta) reporting
+    # pair-mask std; 0.0 = unmasked parity baseline.  Must be set on the
+    # order of n_samples * dp_clip to actually hide the weighted deltas —
+    # see the magnitude caveat in repro.privacy.secure_agg
+    secure_mask_scale: float = 1.0
 
 
 class FedCCL:
     def __init__(self, cfg: FedCCLConfig, init_params, train_fn):
         self.cfg = cfg
         self.train_fn = train_fn
+        self.masker = (PairwiseMasker(seed=cfg.seed,
+                                      mask_scale=cfg.secure_mask_scale)
+                       if cfg.secure_agg else None)
+        self.accountant = (RDPAccountant(target_delta=cfg.target_delta)
+                           if cfg.dp_clip is not None else None)
         self.store = ModelStore(
             init_params,
             agg_cfg=AggregationConfig(use_pallas=cfg.use_pallas_agg),
             batch_aggregation=cfg.batch_aggregation,
-            max_coalesce=cfg.max_coalesce)
+            max_coalesce=cfg.max_coalesce,
+            masker=self.masker)
         self.spaces = [
             ClusterSpace(s.name, IncrementalDBSCAN(s.eps, s.min_samples, s.metric))
             for s in cfg.spaces]
@@ -63,6 +81,16 @@ class FedCCL:
         self.clients: list[Client] = []
         self._init_params = init_params
         self._runtime = None
+
+    def _make_privatizer(self, client_id: str, index: int):
+        if self.cfg.dp_clip is None:
+            return None
+        return DPPrivatizer(
+            DPConfig(clip=self.cfg.dp_clip,
+                     noise_multiplier=self.cfg.dp_noise_multiplier,
+                     use_pallas=self.cfg.use_pallas_agg),
+            client_id=client_id, seed=self.cfg.seed + 2000 + index,
+            accountant=self.accountant)
 
     # ----------------------------------------------------------------- setup
     def setup(self, specs: list[ClientSpec]) -> dict[str, list[str]]:
@@ -72,7 +100,8 @@ class FedCCL:
                        cluster_keys=assignments[spec.client_id],
                        train_fn=self.train_fn,
                        ewc_lambda=self.cfg.ewc_lambda,
-                       rng=np.random.default_rng(self.cfg.seed + 1000 + i))
+                       rng=np.random.default_rng(self.cfg.seed + 1000 + i),
+                       privatizer=self._make_privatizer(spec.client_id, i))
             c.local_params = self._init_params
             self.clients.append(c)
         return assignments
@@ -94,12 +123,36 @@ class FedCCL:
     def join(self, spec: ClientSpec) -> tuple[list[str], object]:
         """New client: immediate specialized model, then becomes participant."""
         keys, params = self.pe.join(spec)
+        idx = len(self.clients)
         c = Client(spec=spec, cluster_keys=keys, train_fn=self.train_fn,
                    ewc_lambda=self.cfg.ewc_lambda,
-                   rng=np.random.default_rng(self.cfg.seed + 5000 + len(self.clients)))
+                   rng=np.random.default_rng(self.cfg.seed + 5000 + idx),
+                   privatizer=self._make_privatizer(spec.client_id, 3000 + idx))
         c.local_params = params
         self.clients.append(c)
         return keys, params
+
+    # --------------------------------------------------------------- privacy
+    def privacy_report(self) -> dict:
+        """(epsilon, delta) budgets and secure-aggregation round accounting
+        for the run so far (see ``repro.privacy``)."""
+        report = {
+            "dp": {
+                "enabled": self.cfg.dp_clip is not None,
+                "clip": self.cfg.dp_clip,
+                "noise_multiplier": self.cfg.dp_noise_multiplier,
+                "target_delta": self.cfg.target_delta,
+            },
+            "secure_agg": {
+                "enabled": self.cfg.secure_agg,
+                "rounds": self.store.n_secure_rounds,
+                "dropout_recoveries": self.store.n_secure_recoveries,
+            },
+        }
+        if self.accountant is not None:
+            report["per_client"] = self.accountant.client_report()
+            report["per_model"] = self.accountant.model_report()
+        return report
 
     # ------------------------------------------------------------- inference
     def model_for(self, client_id: str, level: str = "auto"):

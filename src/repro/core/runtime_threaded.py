@@ -9,6 +9,12 @@ With ``store.batch_aggregation`` the per-model locks stop serializing
 clients: submits enqueue without blocking and a dedicated server drain
 thread folds each model's queue into one coalesced N-way aggregation per
 sweep (Algorithm-2-equivalent; see ``coalesced_aggregate``).
+
+With a secure-aggregation masker on the store the runtime switches to
+full-round drains: client threads synchronize on a per-round barrier whose
+action performs one ``drain_secure`` per model — pairwise masks only cancel
+when the round's complete member set is folded in a single sum, so no
+continuous drain thread is allowed to run mid-round.
 """
 
 from __future__ import annotations
@@ -40,10 +46,11 @@ class AsyncThreadedRuntime:
                 client.train_local()
                 for key in client.cluster_keys:
                     p, m = client.fetch(self.store, "cluster", key)
-                    args = client.train_update(p, m)
+                    args = client.train_update(
+                        p, m, self.store.model_key("cluster", key))
                     client.submit(self.store, "cluster", key, *args)
                 p, m = client.fetch(self.store, "global", None)
-                args = client.train_update(p, m)
+                args = client.train_update(p, m, self.store.model_key("global"))
                 client.submit(self.store, "global", None, *args)
         except BaseException as e:  # surfaced by join()
             self.errors.append(e)
@@ -60,7 +67,59 @@ class AsyncThreadedRuntime:
         except BaseException as e:
             self.errors.append(e)
 
+    # ---------------------------------------------------- secure aggregation
+    def _run_secure(self):
+        """Lockstep rounds: every client thread submits its masked updates,
+        then the barrier action (runs in exactly one thread) folds each
+        model's round with ``drain_secure`` before the next round starts.
+        Full participation — threaded dropout recovery is exercised through
+        the sim runtime's dropout knob."""
+        members = [("global", None, [c.spec.client_id for c in self.clients])]
+        for key in self.store.keys():
+            ids = [c.spec.client_id for c in self.clients
+                   if key in c.cluster_keys]
+            if ids:
+                members.append(("cluster", key, ids))
+        base = self.store.secure_round_offset
+        state = {"round": base}
+
+        def drain_round():
+            r = state["round"]
+            for level, key, ids in members:
+                self.store.drain_secure(level, key, r, ids)
+            state["round"] = r + 1
+
+        barrier = threading.Barrier(len(self.clients), action=drain_round)
+
+        def loop(client: Client, idx: int):
+            try:
+                if self.stagger:
+                    time.sleep(self.stagger * idx)
+                for r in range(base, base + self.rounds):
+                    client.train_local()
+                    for level, key, ids in members:
+                        if client.spec.client_id in ids:
+                            client.secure_round_update(self.store, level, key,
+                                                       ids, r)
+                    barrier.wait()
+            except BaseException as e:      # surfaced by run()
+                self.errors.append(e)
+                barrier.abort()
+
+        threads = [threading.Thread(target=loop, args=(c, i),
+                                    name=f"client-{c.spec.client_id}")
+                   for i, c in enumerate(self.clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        self.store.secure_round_offset = base + self.rounds
+        if self.errors:
+            raise self.errors[0]
+
     def run(self):
+        if self.store.masker is not None:
+            return self._run_secure()
         threads = [threading.Thread(target=self._client_loop, args=(c, i),
                                     name=f"client-{c.spec.client_id}")
                    for i, c in enumerate(self.clients)]

@@ -11,6 +11,12 @@ model into one ``coalesced_aggregate`` call — at most one N-way weighted
 sum (one Pallas kernel launch with ``use_pallas=True``) per drained batch
 instead of one full parameter pass per update.  Semantics are identical to
 the sequential fold (see ``coalesced_aggregate``).
+
+Secure mode (``masker`` attached): clients submit masked weighted deltas via
+``submit_secure`` and ``drain_secure`` folds one full round at a time — the
+pairwise masks cancel inside the fused N-way sum, with seed-reconstruction
+recovery for members that dropped mid-round (see
+``repro.privacy.secure_agg``).
 """
 
 from __future__ import annotations
@@ -26,6 +32,7 @@ from repro.core.aggregation import (
     UpdateDelta,
     aggregate_models,
     coalesced_aggregate,
+    secure_coalesced_aggregate,
 )
 
 GLOBAL_KEY = "__global__"
@@ -37,6 +44,16 @@ class PendingUpdate:
 
     params: object
     meta: ModelMeta
+    delta: UpdateDelta
+
+
+@dataclass(frozen=True)
+class PendingSecureUpdate:
+    """One masked client update awaiting its round's secure drain."""
+
+    client_id: str
+    round_id: int
+    masked_delta: object     # s_i * privatized_delta_i + pairwise masks
     delta: UpdateDelta
 
 
@@ -53,6 +70,9 @@ class ModelRecord:
         # `lock`
         self.pending: deque = deque()
         self.pending_lock = threading.Lock()
+        # secure-aggregation rounds: round_id -> [PendingSecureUpdate];
+        # guarded by pending_lock as well
+        self.secure_pending: dict[int, list] = {}
 
     @property
     def params(self):
@@ -74,10 +94,19 @@ class ModelStore:
 
     def __init__(self, init_params, cluster_keys=(),
                  agg_cfg: AggregationConfig = AggregationConfig(),
-                 batch_aggregation: bool = False, max_coalesce: int = 16):
+                 batch_aggregation: bool = False, max_coalesce: int = 16,
+                 masker=None):
         self.agg_cfg = agg_cfg
         self.batch_aggregation = batch_aggregation
         self.max_coalesce = max(int(max_coalesce), 1)
+        # secure aggregation: a repro.privacy.secure_agg.PairwiseMasker (its
+        # presence switches both runtimes to full-round secure drains)
+        self.masker = masker
+        # monotone round-id base carried across runtime runs — pair masks are
+        # derived from (pair, round_id, model_key), so round ids must never
+        # repeat for one masker or masks would be reused (and cancellable
+        # across runs by an observer)
+        self.secure_round_offset = 0
         self._records: dict[str, ModelRecord] = {}
         self._registry_lock = threading.Lock()
         self._records[GLOBAL_KEY] = ModelRecord(init_params)
@@ -92,6 +121,8 @@ class ModelStore:
         self.n_drain_batches = 0
         self.n_drained = 0                     # updates consumed by drains
         self.max_queue_depth = 0
+        self.n_secure_rounds = 0               # secure drains performed
+        self.n_secure_recoveries = 0           # dropped clients recovered
 
     # ------------------------------------------------------------------ keys
     @staticmethod
@@ -100,6 +131,11 @@ class ModelStore:
             return GLOBAL_KEY
         assert cluster_key is not None, "cluster level requires a key"
         return str(cluster_key)
+
+    def model_key(self, level: str, cluster_key: Optional[str] = None) -> str:
+        """Public (level, cluster_key) -> storage-key mapping — the string
+        clients and the masker must agree on when deriving round masks."""
+        return self._key(level, cluster_key)
 
     def _record(self, key: str) -> ModelRecord:
         """Registry read under the registry lock — `ensure_cluster` can mutate
@@ -187,6 +223,16 @@ class ModelStore:
         with rec.pending_lock:
             return len(rec.pending)
 
+    def effective_round(self, level: str, cluster_key: Optional[str] = None) -> int:
+        """Server round *including* queued-but-undrained updates (each
+        pending update advances the round by ``delta.rounds`` once drained).
+        This is the round an update enqueued right now would be measured
+        against — the staleness reference for batched mode."""
+        rec = self._record(self._key(level, cluster_key))
+        with rec.pending_lock:
+            queued = sum(u.delta.rounds for u in rec.pending)
+        return rec.meta.round + queued
+
     def drain(self, level: str, cluster_key: Optional[str] = None) -> int:
         """Fold all queued updates for one model, `max_coalesce` at a time,
         into single N-way aggregations.  Returns number of updates folded."""
@@ -219,6 +265,64 @@ class ModelStore:
             total += self.drain("cluster", key)
         return total
 
+    # ---------------------------------------------------- secure aggregation
+    def submit_secure(self, level: str, cluster_key: Optional[str],
+                      client_id: str, round_id: int, masked_delta,
+                      delta: UpdateDelta) -> int:
+        """Queue one masked update for its round's secure drain.  The server
+        never aggregates these individually — only ``drain_secure`` folds a
+        full round, inside which the pairwise masks cancel."""
+        rec = self._record(self._key(level, cluster_key))
+        with rec.pending_lock:
+            bucket = rec.secure_pending.setdefault(round_id, [])
+            bucket.append(PendingSecureUpdate(client_id, round_id,
+                                              masked_delta, delta))
+            depth = len(bucket)
+        with self._stats_lock:
+            self.n_enqueued += 1
+            if depth > self.max_queue_depth:
+                self.max_queue_depth = depth
+        return depth
+
+    def drain_secure(self, level: str, cluster_key: Optional[str],
+                     round_id: int, expected_ids) -> int:
+        """Fold one secure round into a single fused N-way sum.
+
+        ``expected_ids`` is the round's full member set; members that never
+        submitted (dropouts) are recovered by reconstructing their stray
+        pairwise masks from the pair seeds and subtracting them inside the
+        same sum.  Returns the number of updates folded.
+        """
+        key = self._key(level, cluster_key)
+        rec = self._record(key)
+        with rec.lock:
+            with rec.pending_lock:
+                batch = rec.secure_pending.pop(round_id, [])
+            if not batch:
+                return 0
+            submitted = {u.client_id for u in batch}
+            missing = sorted(set(expected_ids) - submitted)
+            correction = None
+            if missing:
+                if self.masker is None:
+                    raise RuntimeError(
+                        "secure round has dropouts but no masker is attached "
+                        "for seed reconstruction")
+                correction = self.masker.reconstruct(
+                    rec.params, missing, sorted(submitted), round_id, key)
+            res = secure_coalesced_aggregate(
+                rec.params, rec.meta,
+                [(u.masked_delta, u.delta) for u in batch],
+                self.agg_cfg, correction)
+            rec.swap(res.params, res.meta)
+        with self._stats_lock:
+            self.n_updates += len(batch)
+            self.n_drain_batches += 1
+            self.n_drained += len(batch)
+            self.n_secure_rounds += 1
+            self.n_secure_recoveries += len(missing)
+        return len(batch)
+
     # ------------------------------------------------------------- inspection
     def meta(self, level: str, cluster_key: Optional[str] = None) -> ModelMeta:
         return self._record(self._key(level, cluster_key)).meta
@@ -233,7 +337,7 @@ class ModelStore:
         return self.n_drained / self.n_drain_batches
 
     def agg_stats(self) -> dict:
-        return {
+        out = {
             "updates": self.n_updates,
             "fast_path_frac": self.n_fast_path / max(self.n_updates, 1),
             "lock_waits": self.n_lock_waits,
@@ -242,3 +346,7 @@ class ModelStore:
             "max_queue_depth": self.max_queue_depth,
             "coalesce_factor": self.coalesce_factor(),
         }
+        if self.masker is not None:
+            out["secure_rounds"] = self.n_secure_rounds
+            out["secure_recoveries"] = self.n_secure_recoveries
+        return out

@@ -1,0 +1,1 @@
+from repro.kernels.dp_clip_noise.ops import privatize_flat, privatize_update

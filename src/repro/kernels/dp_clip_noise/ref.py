@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the DP clip+noise kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def dp_clip_noise_ref(delta: jnp.ndarray, noise: jnp.ndarray, clip,
+                      noise_multiplier) -> jnp.ndarray:
+    """delta, noise: flat (T,) f32.  Clip delta to global L2 norm ``clip``,
+    then add Gaussian noise with std ``noise_multiplier * clip``."""
+    delta = delta.astype(jnp.float32)
+    clip = jnp.float32(clip)
+    norm = jnp.sqrt(jnp.sum(delta * delta))
+    scale = jnp.minimum(jnp.float32(1.0), clip / jnp.maximum(norm, 1e-12))
+    sigma = jnp.float32(noise_multiplier) * clip
+    return delta * scale + noise.astype(jnp.float32) * sigma

@@ -86,8 +86,16 @@ def make_train_fn(sgd_step, *, epochs: int = 3, batch_size: int = 8):
 def run_fedccl_solar(n_sites: int = 9, n_days: int = 60, rounds: int = 3,
                      seed: int = 0, hidden: int = 64, epochs: int = 3,
                      n_independent: int = 2, ewc_lambda: float = 0.05,
-                     lr: float = 1e-2, eval_sites: str = "all") -> dict:
-    """One experimental run.  Returns the Table-II-shaped report dict."""
+                     lr: float = 1e-2, eval_sites: str = "all",
+                     dp_clip: float = None, dp_noise_multiplier: float = 1.0,
+                     secure_agg: bool = False,
+                     target_delta: float = 1e-5) -> dict:
+    """One experimental run.  Returns the Table-II-shaped report dict.
+
+    With ``dp_clip`` / ``secure_agg`` set, client updates are privatized
+    (clip + Gaussian noise) and/or aggregated under pairwise masking; the
+    report then carries a ``privacy`` section with (epsilon, delta) budgets.
+    """
     rng = np.random.default_rng(seed)
     fleet = generate_fleet(n_sites=n_sites + n_independent, n_days=n_days,
                            seed=seed)
@@ -111,7 +119,9 @@ def run_fedccl_solar(n_sites: int = 9, n_days: int = 60, rounds: int = 3,
                                    metric="haversine"),
                 ClusterSpaceConfig("ori", eps=30.0, min_samples=2,
                                    metric="cyclic")),
-        ewc_lambda=ewc_lambda, seed=seed)
+        ewc_lambda=ewc_lambda, seed=seed,
+        dp_clip=dp_clip, dp_noise_multiplier=dp_noise_multiplier,
+        secure_agg=secure_agg, target_delta=target_delta)
     fed = FedCCL(fed_cfg, init_params, train_fn)
     specs = [ClientSpec(site.site_id, site.static_features,
                         site_splits[site.site_id][1],
@@ -239,8 +249,11 @@ def run_fedccl_solar(n_sites: int = 9, n_days: int = 60, rounds: int = 3,
         "independent": indep,
         "clusters": {k: v for k, v in assignments.items()},
         "async_stats": stats,
+        "privacy": fed.privacy_report(),
         "fig4_example": fig4,
         "config": {"n_sites": n_sites, "n_days": n_days, "rounds": rounds,
                    "hidden": hidden, "seed": seed,
-                   "ewc_lambda": ewc_lambda},
+                   "ewc_lambda": ewc_lambda, "dp_clip": dp_clip,
+                   "dp_noise_multiplier": dp_noise_multiplier,
+                   "secure_agg": secure_agg},
     }

@@ -250,6 +250,40 @@ def test_threaded_batched_runtime_accounting():
     assert stats["coalesce_factor"] >= 1.0
 
 
+# ---------------------------------------------------------------- staleness
+def test_effective_round_counts_queued_updates():
+    """Regression (ROADMAP): staleness must be measured against the server
+    round *including* queued-but-undrained updates, not just materialized
+    meta — in batched mode the two diverge between drains."""
+    rng = np.random.default_rng(4)
+    init = tree_of(rng)
+    store = ModelStore(init, cluster_keys=["c0"], batch_aggregation=True,
+                       max_coalesce=16)
+    for up, um, d in make_updates(rng, base_round=0, n=3):
+        store.handle_model_update("cluster", "c0", up, um, d)
+    assert store.meta("cluster", "c0").round == 0          # nothing drained
+    assert store.effective_round("cluster", "c0") == 3     # queue counted
+    store.drain("cluster", "c0")
+    assert store.meta("cluster", "c0").round == 3
+    assert store.effective_round("cluster", "c0") == 3
+    # direct (non-batched) store: effective == materialized always
+    direct = ModelStore(init, cluster_keys=["c0"])
+    for up, um, d in make_updates(rng, base_round=0, n=2):
+        direct.handle_model_update("cluster", "c0", up, um, d)
+    assert direct.effective_round("cluster", "c0") == \
+        direct.meta("cluster", "c0").round
+
+
+def test_sim_batched_staleness_sees_queue():
+    """With a large max_coalesce (drains only at fetch time) updates pile up
+    between drains; submits landing behind them must register as stale even
+    though materialized meta hasn't moved yet."""
+    fed = make_fed(seed=2, batch_aggregation=True, max_coalesce=64)
+    stats = fed.run(rounds=4)
+    assert stats["mean_staleness"] > 0
+    assert stats["max_staleness"] >= 1
+
+
 # ------------------------------------------------------------- registry races
 def test_registry_reads_survive_concurrent_ensure_cluster():
     store = ModelStore({"w": jnp.zeros(())}, cluster_keys=["c0"])

@@ -12,6 +12,8 @@ try:
 except ImportError:      # bare CI env: seeded-random fallback shim
     from _hypothesis_fallback import given, settings, strategies as st
 
+from repro.kernels.dp_clip_noise.ops import privatize_flat
+from repro.kernels.dp_clip_noise.ref import dp_clip_noise_ref
 from repro.kernels.fedavg_agg.ops import aggregate_flat, aggregate_pytrees
 from repro.kernels.fedavg_agg.ref import agg_ref, aggregate_pytrees_ref
 from repro.kernels.ewc_update.ops import ewc_penalty_grad_flat
@@ -52,6 +54,38 @@ def test_agg_kernel_property(n, t):
     w = jnp.asarray(rng.dirichlet(np.ones(n)), jnp.float32)
     np.testing.assert_allclose(np.asarray(aggregate_flat(x, w)),
                                np.asarray(agg_ref(x, w)), atol=1e-5)
+
+
+# ----------------------------------------------------------- dp_clip_noise
+@pytest.mark.parametrize("t", [17, 8192, 100_001])
+@pytest.mark.parametrize("clip,nm", [(0.5, 0.0), (0.5, 1.5), (1e6, 1.0)])
+def test_dp_clip_noise_kernel_sweep(t, clip, nm, rng):
+    d = jnp.asarray(rng.standard_normal(t), jnp.float32)
+    n = jnp.asarray(rng.standard_normal(t), jnp.float32)
+    out = privatize_flat(d, n, clip, nm)
+    ref = dp_clip_noise_ref(d, n, clip, nm)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+    if nm == 0.0:
+        assert float(jnp.linalg.norm(out)) <= clip * (1 + 1e-5)
+
+
+def test_dp_clip_noise_small_delta_passthrough(rng):
+    """Deltas inside the clip ball pass through untouched (factor = 1)."""
+    d = jnp.asarray(rng.standard_normal(100) * 1e-3, jnp.float32)
+    out = privatize_flat(d, jnp.zeros_like(d), 10.0, 0.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(d), atol=1e-7)
+
+
+@settings(max_examples=15, deadline=None)
+@given(t=st.integers(1, 3000), clip=st.floats(0.1, 5.0),
+       nm=st.floats(0.0, 3.0))
+def test_dp_clip_noise_kernel_property(t, clip, nm):
+    rng = np.random.default_rng(t * 31 + int(clip * 10) + int(nm * 100))
+    d = jnp.asarray(rng.standard_normal(t) * rng.uniform(0.1, 20), jnp.float32)
+    n = jnp.asarray(rng.standard_normal(t), jnp.float32)
+    np.testing.assert_allclose(np.asarray(privatize_flat(d, n, clip, nm)),
+                               np.asarray(dp_clip_noise_ref(d, n, clip, nm)),
+                               atol=1e-4)
 
 
 # ------------------------------------------------------------- ewc_update
