@@ -5,6 +5,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   indep_*                 §IV.E population-independent analysis
   clustering              Fig. 2 pre-training clustering
   aggregation_*           §II.D server aggregation efficiency
+  sharded_store_*         sharded-store submit throughput (-> BENCH_sharded.json)
   privatize_* / secure_*  privacy subsystem overhead (-> BENCH_privacy.json)
   fed_round_*             Algorithm 1 protocol round timing
   dryrun_*                harness §Roofline rows (if artifacts exist)
@@ -53,6 +54,12 @@ def main() -> None:
 
     pret = privacy_overhead.run(fast=fast)
     rows += privacy_overhead.csv_rows(pret)
+
+    # ---- sharded store submit throughput (-> BENCH_sharded.json) ------------
+    from benchmarks import sharded_store
+
+    srep = sharded_store.run(fast=fast)
+    rows += sharded_store.csv_rows(srep)
 
     # ---- protocol round timing (Algorithm 1) --------------------------------
     from benchmarks import protocol_timing

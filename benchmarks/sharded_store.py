@@ -1,0 +1,167 @@
+"""Sharded ModelStore benchmark — multi-cluster submit throughput.
+
+Scenario: W client threads each hammer the server with cluster + global
+submits (the Algorithm-1 HandleModelUpdate hot path).  Compared stores:
+
+  single_lock   ModelStore, batch_aggregation=False — every submit
+                aggregates inline under the model lock; the global model's
+                lock serializes *all* clients (the PR-0 baseline).
+  flat_batched  ModelStore, batched — submits enqueue, one server drain
+                thread coalesces (PR 1).
+  sharded_K     ShardedModelStore at K shards — per-record/per-shard queue
+                locks only on the submit path, K per-shard drain workers
+                plus one two-level global drain worker (this PR).
+
+Reported: wall-clock submits/s over the full stream (drains included for
+the batched stores — workers run concurrently and are joined with a bounded
+timeout before the clock stops), plus coalesce/partial accounting.  Writes
+``BENCH_sharded.json``; run with ``REPRO_BENCH_FAST=1`` for the CI-sized
+configuration.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import AggregationConfig, ModelMeta, UpdateDelta
+from repro.core.runtime_threaded import AsyncThreadedRuntime
+from repro.core.store import ModelStore, ShardedModelStore
+
+
+def _make_pool(rng, t, n_trees):
+    """Pre-built update payloads so the timed loop measures the store, not
+    tree generation."""
+    return [{"w": jnp.asarray(rng.standard_normal(t), jnp.float32)}
+            for _ in range(n_trees)]
+
+
+def _run_writers(store, pools, per_writer, n_clusters):
+    keys = [f"c{i}" for i in range(n_clusters)]
+
+    def writer(idx):
+        pool = pools[idx]
+        wrng = np.random.default_rng(10_000 + idx)
+        for i in range(per_writer):
+            tree = pool[i % len(pool)]
+            s = int(wrng.integers(20, 200))
+            key = keys[int(wrng.integers(n_clusters))]
+            store.handle_model_update("cluster", key, tree,
+                                      ModelMeta(s, 1, 1), UpdateDelta(s, 1, 1))
+            store.handle_model_update("global", None, tree,
+                                      ModelMeta(s, 1, 1), UpdateDelta(s, 1, 1))
+
+    threads = [threading.Thread(target=writer, args=(i,))
+               for i in range(len(pools))]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return t0
+
+
+def bench_store(name, store, *, n_writers, per_writer, n_clusters, t_params):
+    rng = np.random.default_rng(0)
+    pools = [_make_pool(np.random.default_rng(100 + i), t_params, 8)
+             for i in range(n_writers)]
+    # warm the jit caches outside the clock (first fold compiles)
+    warm = _make_pool(rng, t_params, 2)
+    store.handle_model_update("global", None, warm[0],
+                              ModelMeta(10, 1, 1), UpdateDelta(10, 1, 1))
+    if store.batch_aggregation:
+        store.drain_all()
+
+    rt = None
+    stop = threading.Event()
+    if store.batch_aggregation:
+        rt = AsyncThreadedRuntime([], store, drain_poll=1e-4,
+                                  join_timeout=30.0)
+        rt._start_drain_workers(stop)
+    t0 = _run_writers(store, pools, per_writer, n_clusters)
+    if rt is not None:
+        rt._join_drain_workers(stop)      # drains flushed before clock stops
+    wall = time.perf_counter() - t0
+
+    submits = n_writers * per_writer * 2
+    row = {
+        "store": name,
+        "shards": getattr(store, "n_shards", 0),
+        "writers": n_writers,
+        "clusters": n_clusters,
+        "submits": submits,
+        "wall_s": wall,
+        "submits_per_s": submits / wall,
+        "coalesce_factor": store.coalesce_factor(),
+        "max_queue_depth": store.max_queue_depth,
+    }
+    stats = store.agg_stats()
+    if "global_drains" in stats:
+        row["global_drains"] = stats["global_drains"]
+        row["global_partials"] = stats["global_partials"]
+    assert store.n_updates == submits + 1, "lost updates in benchmark"
+    return row
+
+
+def run(fast: bool = False, out_path: str = "BENCH_sharded.json") -> dict:
+    n_writers = 4 if fast else 8
+    per_writer = 40 if fast else 150
+    n_clusters = 16
+    t_params = 20_000 if fast else 100_000
+    rng = np.random.default_rng(0)
+    init = {"w": jnp.asarray(rng.standard_normal(t_params), jnp.float32)}
+    keys = [f"c{i}" for i in range(n_clusters)]
+    cfg = AggregationConfig()
+    kw = dict(n_writers=n_writers, per_writer=per_writer,
+              n_clusters=n_clusters, t_params=t_params)
+
+    rows = [
+        bench_store("single_lock",
+                    ModelStore(init, keys, agg_cfg=cfg), **kw),
+        bench_store("flat_batched",
+                    ModelStore(init, keys, agg_cfg=cfg,
+                               batch_aggregation=True, max_coalesce=16), **kw),
+    ]
+    for k in (1, 4, 16):
+        rows.append(bench_store(
+            f"sharded_{k}",
+            ShardedModelStore(init, keys, agg_cfg=cfg, n_shards=k,
+                              batch_aggregation=True, max_coalesce=16), **kw))
+
+    base = rows[0]["submits_per_s"]
+    report = {
+        "config": {"writers": n_writers, "per_writer": per_writer,
+                   "clusters": n_clusters, "params": t_params},
+        "rows": rows,
+        "speedup_vs_single_lock": {
+            r["store"]: r["submits_per_s"] / base for r in rows},
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
+
+
+def csv_rows(report: dict):
+    out = []
+    for r in report["rows"]:
+        speedup = report["speedup_vs_single_lock"][r["store"]]
+        out.append((f"sharded_store_{r['store']}",
+                    r["wall_s"] * 1e6 / max(r["submits"], 1),
+                    f"submits_per_s={r['submits_per_s']:.0f};"
+                    f"speedup={speedup:.2f};"
+                    f"coalesce={r['coalesce_factor']:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    rep = run(fast=os.environ.get("REPRO_BENCH_FAST", "0") == "1")
+    for row in rep["rows"]:
+        print(row)
+    print("speedups vs single_lock:", {
+        k: round(v, 2) for k, v in rep["speedup_vs_single_lock"].items()})
+    print("report -> BENCH_sharded.json")

@@ -2,4 +2,4 @@ from repro.core.aggregation import AggregationConfig, ModelMeta, UpdateDelta, ag
 from repro.core.clustering import DBSCAN, IncrementalDBSCAN, haversine_km
 from repro.core.continual import EWCState, ewc_penalty, fisher_diag_update
 from repro.core.fedccl import FedCCL, FedCCLConfig
-from repro.core.store import ModelRecord, ModelStore
+from repro.core.store import ModelRecord, ModelStore, ShardedModelStore

@@ -124,6 +124,59 @@ class CoalesceResult:
     n_folded: int        # queued updates consumed
     n_param_sets: int    # parameter sets in the final weighted sum
     n_fast_path: int     # updates that hit the sequential fast path
+    n_partials: int = 0  # shard partial sums feeding the two-level merge
+
+
+@dataclass(frozen=True)
+class CoalescePlan:
+    """The scalar half of a coalesced fold: the telescoped convex weight each
+    parameter set carries in the final sum, separated from the (expensive)
+    tree arithmetic so the sums can be computed anywhere — in one flat N-way
+    call, or partitioned across shards (``two_level_coalesced_aggregate``).
+
+    ``weights[0]`` belongs to the base; ``weights[1 + i]`` to update ``i`` in
+    fold order.  A sequential-fast-path or zero-sample reset zeroes every
+    weight before it — exactly the "discard and restart" of the pairwise
+    Algorithm-2 fold.
+    """
+
+    weights: tuple      # len(updates) + 1 convex coefficients, resets zeroed
+    meta: ModelMeta     # fully accumulated metadata
+    n_fast_path: int
+
+
+def plan_coalesce(base_meta: ModelMeta, meta_deltas,
+                  cfg: AggregationConfig = AggregationConfig()) -> CoalescePlan:
+    """Walk the fold's metadata only: ``meta_deltas`` is a sequence of
+    ``(meta, delta)`` pairs in fold order.  Float operations replicate the
+    incremental ``f *= ratio_base`` telescoping of the sequential fold so the
+    planned weights are bit-identical to the ones the flat fold would use."""
+    meta = base_meta
+    weights = [1.0]
+    active = [0]          # indices in `weights` still contributing
+    n_fast = 0
+    for i, (upd_meta, delta) in enumerate(meta_deltas):
+        if cfg.sequential_fast_path and upd_meta.round == meta.round + 1:
+            for j in active:
+                weights[j] = 0.0
+            weights.append(1.0)
+            active = [i + 1]
+            n_fast += 1
+        else:
+            total = meta.samples_learned + upd_meta.samples_learned
+            if total <= 0:
+                for j in active:
+                    weights[j] = 0.0
+                weights.append(1.0)
+                active = [i + 1]
+            else:
+                rb = meta.samples_learned / total
+                for j in active:
+                    weights[j] *= rb
+                weights.append(1.0 - rb)
+                active.append(i + 1)
+        meta = meta.accumulate(delta)
+    return CoalescePlan(tuple(weights), meta, n_fast)
 
 
 def coalesced_aggregate(base_params, base_meta: ModelMeta, updates,
@@ -138,32 +191,115 @@ def coalesced_aggregate(base_params, base_meta: ModelMeta, updates,
     launch on the Pallas route) instead of N-1 full passes over the
     parameters.  The sequential fast path and the zero-sample replace path
     are preserved exactly: both discard the accumulated contributions and
-    restart the sum from the update's parameters.
+    restart the sum from the update's parameters (see ``plan_coalesce``).
 
     ``updates`` is a sequence of ``(params, meta, delta)`` triples.
     """
-    meta = base_meta
-    sets = [base_params]
-    fracs = [1.0]          # convex weights of `sets` in the running average
-    n_fast = 0
-    for upd_params, upd_meta, delta in updates:
-        if cfg.sequential_fast_path and upd_meta.round == meta.round + 1:
-            sets, fracs = [upd_params], [1.0]
-            n_fast += 1
-        else:
-            total = meta.samples_learned + upd_meta.samples_learned
-            if total <= 0:
-                sets, fracs = [upd_params], [1.0]
-            else:
-                rb = meta.samples_learned / total
-                fracs = [f * rb for f in fracs]
-                sets.append(upd_params)
-                fracs.append(1.0 - rb)
-        meta = meta.accumulate(delta)
+    updates = list(updates)      # consumed twice; accept one-shot iterables
+    plan = plan_coalesce(base_meta, [(m, d) for _, m, d in updates], cfg)
+    all_params = [base_params] + [p for p, _, _ in updates]
+    sets = [p for p, w in zip(all_params, plan.weights) if w != 0.0]
+    fracs = [w for w in plan.weights if w != 0.0]
     if len(sets) == 1:
-        return CoalesceResult(sets[0], meta, len(updates), 1, n_fast)
-    return CoalesceResult(multi_aggregate(sets, fracs, cfg), meta,
-                          len(updates), len(sets), n_fast)
+        return CoalesceResult(sets[0], plan.meta, len(updates), 1,
+                              plan.n_fast_path)
+    return CoalesceResult(multi_aggregate(sets, fracs, cfg), plan.meta,
+                          len(updates), len(sets), plan.n_fast_path)
+
+
+def two_level_coalesced_aggregate(base_params, base_meta: ModelMeta,
+                                  shard_batches,
+                                  cfg: AggregationConfig = AggregationConfig(),
+                                  *, seqs=None,
+                                  max_width: int = 0) -> CoalesceResult:
+    """Sharded two-level fold: per-shard coalesced partials reduced by a
+    sample-weighted cross-shard merge.
+
+    ``shard_batches[k]`` is shard *k*'s FIFO batch of ``(params, meta,
+    delta)`` triples; ``seqs[k]`` (optional, parallel structure) carries
+    global arrival sequence numbers.  The fold order is the seq-sorted
+    concatenation (shard-index concatenation when ``seqs`` is None).
+
+    Equivalence to the flat fold: the final state of the flat telescoped
+    fold is ``w0·base + Σ wi·pi`` where the coefficients depend *only* on
+    the metadata sequence (``plan_coalesce``).  The plan is computed once
+    over the full fold order; each shard then reduces just its own members
+    to a convex partial ``P_k = Σ_{i∈k} (wi/W_k)·pi`` with mass ``W_k = Σ_{
+    i∈k} wi``, and the cross-shard merge ``w0·base + Σ_k W_k·P_k`` restores
+    the flat sum by associativity/commutativity — exactly equal in real
+    arithmetic, within float-summation reorder (atol) on hardware.  Resets
+    (fast path / zero-sample) zero coefficients across shard boundaries via
+    the shared plan, so no shard needs to see another shard's parameters.
+
+    ``max_width`` > 0 bounds every fused sum's arity (a shard with more
+    surviving members is reduced in convex chunks that join the merge as
+    extra mass-weighted partials), keeping the jit/Pallas N-way cache small.
+    """
+    flat = []            # (order_key, shard_idx, params, meta, delta)
+    for k, batch in enumerate(shard_batches):
+        for j, (p, m, d) in enumerate(batch):
+            key = seqs[k][j] if seqs is not None else (k, j)
+            flat.append((key, k, p, m, d))
+    flat.sort(key=lambda e: e[0])
+    if not flat:
+        return CoalesceResult(base_params, base_meta, 0, 1, 0)
+    plan = plan_coalesce(base_meta, [(m, d) for _, _, _, m, d in flat], cfg)
+
+    # gather each shard's surviving (params, weight) members in fold order
+    per_shard: dict[int, list] = {}
+    for (_, k, p, _, _), w in zip(flat, plan.weights[1:]):
+        if w != 0.0:
+            per_shard.setdefault(k, []).append((p, w))
+
+    base_w = plan.weights[0]
+    if not per_shard:    # no surviving updates => the base carries weight 1
+        return CoalesceResult(base_params, plan.meta, len(flat), 1,
+                              plan.n_fast_path)
+    if base_w == 0.0 and sum(len(v) for v in per_shard.values()) == 1:
+        # lone fast-path / replace survivor: exact passthrough, no float math
+        (p, _), = next(iter(per_shard.values()))
+        return CoalesceResult(p, plan.meta, len(flat), 1, plan.n_fast_path)
+
+    # chunks of one entry never shrink the list — a width of 1 must still
+    # fold pairs to make progress
+    width = max(max_width, 2) if max_width > 0 else 0
+
+    def reduce_chunked(entries):
+        """(params, mass) list -> same, every fused sum <= width wide.
+        Nested mass-weighted convex averages recombine exactly (the same
+        telescoping the flat fold relies on), so chunk boundaries are free."""
+        if width <= 0 or len(entries) <= width:
+            return entries
+        out = []
+        for i in range(0, len(entries), width):
+            chunk = entries[i:i + width]
+            mass = sum(m for _, m in chunk)
+            if mass == 0.0:
+                continue
+            p = (chunk[0][0] if len(chunk) == 1 else
+                 multi_aggregate([p for p, _ in chunk],
+                                 [m for _, m in chunk], cfg))
+            out.append((p, mass))
+        return reduce_chunked(out)
+
+    partials = []        # (partial_params, mass) — convex within, mass to merge
+    for k in sorted(per_shard):
+        for p, mass in reduce_chunked(per_shard[k]):
+            if mass != 0.0:
+                partials.append((p, mass))
+    # the merge itself is arity-bounded the same way (base rides along as a
+    # mass-weighted entry, so deep multi-shard backlogs never widen one sum)
+    entries = ([(base_params, base_w)] if base_w != 0.0 else []) + partials
+    n_sets = len(entries)
+    while len(entries) > 1:
+        if width <= 0 or len(entries) <= width:
+            entries = [(multi_aggregate([p for p, _ in entries],
+                                        [m for _, m in entries], cfg),
+                        sum(m for _, m in entries))]
+        else:
+            entries = reduce_chunked(entries)
+    return CoalesceResult(entries[0][0], plan.meta, len(flat), n_sets,
+                          plan.n_fast_path, n_partials=len(partials))
 
 
 def secure_coalesced_aggregate(base_params, base_meta: ModelMeta,

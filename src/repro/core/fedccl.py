@@ -21,7 +21,7 @@ from repro.core.predict_evolve import ClusterSpace, PredictEvolve
 from repro.core.protocol import Client, ClientSpec
 from repro.core.runtime_sim import AsyncSimRuntime
 from repro.core.runtime_threaded import AsyncThreadedRuntime
-from repro.core.store import ModelStore
+from repro.core.store import ModelStore, ShardedModelStore
 from repro.privacy.accountant import RDPAccountant
 from repro.privacy.dp import DPConfig, DPPrivatizer
 from repro.privacy.secure_agg import PairwiseMasker
@@ -48,6 +48,10 @@ class FedCCLConfig:
     use_pallas_agg: bool = False
     batch_aggregation: bool = False  # coalescing server path (queue + drain)
     max_coalesce: int = 16           # max queued updates folded per drain
+    # server sharding: 0 = single ModelStore; K >= 1 = ShardedModelStore with
+    # K per-cluster shards (per-shard drain workers in the threaded runtime,
+    # two-level global fold — see repro.core.store.ShardedModelStore)
+    server_shards: int = 0
     # ---- privacy subsystem (repro.privacy) --------------------------------
     dp_clip: Optional[float] = None  # L2 clip of update deltas; None = DP off
     dp_noise_multiplier: float = 1.0 # noise std = multiplier * dp_clip
@@ -68,12 +72,17 @@ class FedCCL:
                        if cfg.secure_agg else None)
         self.accountant = (RDPAccountant(target_delta=cfg.target_delta)
                            if cfg.dp_clip is not None else None)
-        self.store = ModelStore(
-            init_params,
-            agg_cfg=AggregationConfig(use_pallas=cfg.use_pallas_agg),
-            batch_aggregation=cfg.batch_aggregation,
-            max_coalesce=cfg.max_coalesce,
-            masker=self.masker)
+        agg_cfg = AggregationConfig(use_pallas=cfg.use_pallas_agg)
+        if cfg.server_shards > 0:
+            self.store = ShardedModelStore(
+                init_params, agg_cfg=agg_cfg, n_shards=cfg.server_shards,
+                batch_aggregation=cfg.batch_aggregation,
+                max_coalesce=cfg.max_coalesce, masker=self.masker)
+        else:
+            self.store = ModelStore(
+                init_params, agg_cfg=agg_cfg,
+                batch_aggregation=cfg.batch_aggregation,
+                max_coalesce=cfg.max_coalesce, masker=self.masker)
         self.spaces = [
             ClusterSpace(s.name, IncrementalDBSCAN(s.eps, s.min_samples, s.metric))
             for s in cfg.spaces]

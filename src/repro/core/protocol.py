@@ -30,6 +30,22 @@ from repro.utils.tree import flatten_params, unflatten_params
 TrainFn = Callable
 
 
+def build_update(fetched_meta: ModelMeta, new_params, n_samples: int,
+                 n_epochs: int = 1):
+    """ComputeModelMetaDelta: package one trained model into the
+    ``(params, updated_meta, delta)`` triple the server folds.
+
+    Factored out of ``Client.train_update`` so schedule-replay harnesses
+    (``tests/test_store_equivalence.py``) construct updates bit-identical to
+    the ones the runtimes submit — same meta arithmetic, same staleness
+    semantics (``round = fetched.round + 1``)."""
+    updated_meta = ModelMeta(
+        samples_learned=n_samples,
+        epochs_learned=fetched_meta.epochs_learned + n_epochs,
+        round=fetched_meta.round + 1)
+    return new_params, updated_meta, UpdateDelta(n_samples, n_epochs, 1)
+
+
 @dataclass
 class ClientSpec:
     client_id: str
@@ -88,12 +104,7 @@ class Client:
         if privatize and self.privatizer is not None:
             new_params = self.privatizer.privatize(fetched_params, new_params,
                                                    model_key=model_key)
-        updated_meta = ModelMeta(
-            samples_learned=n_samples,
-            epochs_learned=fetched_meta.epochs_learned + n_epochs,
-            round=fetched_meta.round + 1)
-        delta = UpdateDelta(n_samples, n_epochs, 1)
-        return new_params, updated_meta, delta
+        return build_update(fetched_meta, new_params, n_samples, n_epochs)
 
     def submit(self, store: ModelStore, level: str, cluster_key,
                new_params, updated_meta, delta) -> bool:

@@ -6,6 +6,11 @@ virtual time t, "trains" for a duration drawn from its speed, and SUBMITs at
 t + d — by which time other clients may have updated the same model, which
 exercises the weighted-aggregation path rather than the sequential fast
 path.  Seeded => bit-reproducible schedules for tests and benchmarks.
+
+Works against ``ModelStore`` and ``ShardedModelStore`` alike: the sim only
+speaks the store protocol (``drain``/``effective_round``/``drain_secure``),
+so a sharded store transparently routes global drains through the two-level
+fold; ``stats()`` then additionally reports the shard fill balance.
 """
 
 from __future__ import annotations
@@ -177,6 +182,13 @@ class AsyncSimRuntime:
         if self.store.batch_aggregation:
             out["coalesce_factor"] = self.store.coalesce_factor()
             out["max_queue_depth"] = self.store.max_queue_depth
+        if hasattr(self.store, "n_shards"):
+            # sharded store: surface the shard fill balance so schedule skew
+            # (all clients in one cluster -> one hot shard) is visible
+            sharded = self.store.agg_stats()
+            out["shards"] = sharded["shards"]
+            out["global_drains"] = sharded["global_drains"]
+            out["shard_enqueued"] = sharded["shard_enqueued"]
         if self.store.masker is not None:
             out["secure_rounds"] = self.store.n_secure_rounds
             out["secure_recoveries"] = self.store.n_secure_recoveries

@@ -10,6 +10,13 @@ clients: submits enqueue without blocking and a dedicated server drain
 thread folds each model's queue into one coalesced N-way aggregation per
 sweep (Algorithm-2-equivalent; see ``coalesced_aggregate``).
 
+With a ``ShardedModelStore`` the single server drain thread becomes one
+worker *per shard* (each sweeping only its shard's cluster models) plus one
+global worker performing the two-level global fold — drains of different
+clusters run concurrently and share no lock.  Shutdown is bounded: every
+worker is joined with ``join_timeout`` and a stuck worker raises instead of
+hanging the run.
+
 With a secure-aggregation masker on the store the runtime switches to
 full-round drains: client threads synchronize on a per-round barrier whose
 action performs one ``drain_secure`` per model — pairwise masks only cancel
@@ -21,7 +28,6 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Optional
 
 from repro.core.protocol import Client
 from repro.core.store import ModelStore
@@ -30,13 +36,15 @@ from repro.core.store import ModelStore
 class AsyncThreadedRuntime:
     def __init__(self, clients: list[Client], store: ModelStore,
                  rounds_per_client: int = 2, stagger: float = 0.0,
-                 drain_poll: float = 0.001):
+                 drain_poll: float = 0.001, join_timeout: float = 30.0):
         self.clients = clients
         self.store = store
         self.rounds = rounds_per_client
         self.stagger = stagger
         self.drain_poll = drain_poll
+        self.join_timeout = join_timeout
         self.errors: list[BaseException] = []
+        self.drain_workers: list[threading.Thread] = []
 
     def _client_loop(self, client: Client, idx: int):
         try:
@@ -55,17 +63,45 @@ class AsyncThreadedRuntime:
         except BaseException as e:  # surfaced by join()
             self.errors.append(e)
 
-    def _server_loop(self, stop: threading.Event):
-        """Server drain thread: sweep every model's queue, coalescing all
-        pending updates per model into single aggregations, until the
-        clients are done and the queues are empty."""
+    def _drain_loop(self, drain_fn, stop: threading.Event):
+        """One shard's (or the global tier's) drain worker: sweep its own
+        slice of the store until stopped, then one final sweep so nothing a
+        client enqueued before exiting is left behind."""
         try:
             while not stop.is_set():
-                if self.store.drain_all() == 0:
+                if drain_fn() == 0:
                     time.sleep(self.drain_poll)
-            self.store.drain_all()   # final sweep after last client exits
+            drain_fn()
         except BaseException as e:
             self.errors.append(e)
+
+    def _start_drain_workers(self, stop: threading.Event):
+        """Sharded store: one worker per shard + one for the global fold;
+        single-queue store: the classic one-thread ``drain_all`` sweep."""
+        if hasattr(self.store, "drain_shard"):
+            fns = [(f"drain-shard-{k}",
+                    (lambda k=k: self.store.drain_shard(k)))
+                   for k in range(self.store.n_shards)]
+            fns.append(("drain-global", self.store.drain_global))
+        else:
+            fns = [("server-drain", self.store.drain_all)]
+        self.drain_workers = [
+            threading.Thread(target=self._drain_loop, args=(fn, stop),
+                             name=name) for name, fn in fns]
+        for t in self.drain_workers:
+            t.start()
+
+    def _join_drain_workers(self, stop: threading.Event):
+        stop.set()
+        stuck = []
+        for t in self.drain_workers:
+            t.join(self.join_timeout)
+            if t.is_alive():
+                stuck.append(t.name)
+        if stuck:
+            raise RuntimeError(
+                f"drain workers failed to stop within {self.join_timeout}s: "
+                f"{stuck}")
 
     # ---------------------------------------------------- secure aggregation
     def _run_secure(self):
@@ -123,18 +159,14 @@ class AsyncThreadedRuntime:
         threads = [threading.Thread(target=self._client_loop, args=(c, i),
                                     name=f"client-{c.spec.client_id}")
                    for i, c in enumerate(self.clients)]
-        server: Optional[threading.Thread] = None
         stop = threading.Event()
         if self.store.batch_aggregation:
-            server = threading.Thread(target=self._server_loop, args=(stop,),
-                                      name="server-drain")
-            server.start()
+            self._start_drain_workers(stop)
         for t in threads:
             t.start()
         for t in threads:
             t.join()
-        if server is not None:
-            stop.set()
-            server.join()
+        if self.drain_workers:
+            self._join_drain_workers(stop)
         if self.errors:
             raise self.errors[0]

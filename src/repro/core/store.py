@@ -17,11 +17,32 @@ Secure mode (``masker`` attached): clients submit masked weighted deltas via
 pairwise masks cancel inside the fused N-way sum, with seed-reconstruction
 recovery for members that dropped mid-round (see
 ``repro.privacy.secure_agg``).
+
+Sharded mode (``ShardedModelStore``): the cluster is FedCCL's natural unit
+of server parallelism, so the store partitions its models into K independent
+shards — cluster key -> shard by a stable crc32 hash, each shard with its
+own queue locks, hot-path stats, and (in the threaded runtime) its own drain
+worker.  Submits and drains against different *shards* share no lock: the
+registry is copy-on-write (reads are lock-free), queue locks are per record
+or per shard slice, and stats are bucketed per shard.
+The one model every client touches, the global model, is sharded at the
+queue: submits land round-robin on per-shard slices of the global queue and
+a drain folds them **two-level** — per-shard coalesced partials reduced by a
+sample-weighted cross-shard merge.  Equivalence to the flat Algorithm-2
+telescoped fold is structural: the convex coefficient of every queued update
+depends only on the metadata sequence in arrival order, so the plan
+(``plan_coalesce``) is computed once over the seq-sorted concatenation of
+the shard slices and only the parameter *sums* are partitioned, which
+commutes exactly (see ``two_level_coalesced_aggregate``).  Secure rounds are
+never split across shards: a model's full-round fold stays on its owning
+shard, because pairwise masks only cancel inside one fused sum.
 """
 
 from __future__ import annotations
 
+import itertools
 import threading
+import zlib
 from collections import deque
 from dataclasses import dataclass
 from typing import Optional
@@ -33,6 +54,7 @@ from repro.core.aggregation import (
     aggregate_models,
     coalesced_aggregate,
     secure_coalesced_aggregate,
+    two_level_coalesced_aggregate,
 )
 
 GLOBAL_KEY = "__global__"
@@ -70,6 +92,10 @@ class ModelRecord:
         # `lock`
         self.pending: deque = deque()
         self.pending_lock = threading.Lock()
+        # rounds popped by an in-flight drain but not yet reflected in meta;
+        # guarded by pending_lock so `effective_round` readers always see
+        # pop-and-register / swap-and-retire as single atomic steps
+        self.inflight_rounds: int = 0
         # secure-aggregation rounds: round_id -> [PendingSecureUpdate];
         # guarded by pending_lock as well
         self.secure_pending: dict[int, list] = {}
@@ -89,40 +115,96 @@ class ModelRecord:
         return self._state
 
 
-class ModelStore:
-    """Thread-safe store for global + cluster models."""
+# ------------------------------------------------------ record-level drains
+# Shared by ModelStore and ShardedModelStore (per-cluster records are drained
+# identically in both; only the global tier differs).  Callers hold rec.lock.
 
-    def __init__(self, init_params, cluster_keys=(),
-                 agg_cfg: AggregationConfig = AggregationConfig(),
-                 batch_aggregation: bool = False, max_coalesce: int = 16,
-                 masker=None):
-        self.agg_cfg = agg_cfg
-        self.batch_aggregation = batch_aggregation
-        self.max_coalesce = max(int(max_coalesce), 1)
-        # secure aggregation: a repro.privacy.secure_agg.PairwiseMasker (its
-        # presence switches both runtimes to full-round secure drains)
-        self.masker = masker
-        # monotone round-id base carried across runtime runs — pair masks are
-        # derived from (pair, round_id, model_key), so round ids must never
-        # repeat for one masker or masks would be reused (and cancellable
-        # across runs by an observer)
-        self.secure_round_offset = 0
-        self._records: dict[str, ModelRecord] = {}
-        self._registry_lock = threading.Lock()
-        self._records[GLOBAL_KEY] = ModelRecord(init_params)
+def _drain_record_once(rec: ModelRecord, max_coalesce: int,
+                       agg_cfg: AggregationConfig):
+    """Pop and fold one coalesced batch; returns the CoalesceResult or None.
+
+    The two pending_lock critical sections keep ``effective_round`` readers
+    consistent mid-drain: the pop registers the batch's rounds as in-flight
+    in the same section that removes them from the queue, and the publish
+    swaps meta and retires them in one section — a reader holding
+    pending_lock can never see the batch in neither place.
+    """
+    with rec.pending_lock:
+        take = min(len(rec.pending), max_coalesce)
+        batch = [rec.pending.popleft() for _ in range(take)]
+        rounds = sum(u.delta.rounds for u in batch)
+        rec.inflight_rounds += rounds
+    if not batch:
+        return None
+    try:
+        res = coalesced_aggregate(rec.params, rec.meta,
+                                  [(u.params, u.meta, u.delta)
+                                   for u in batch],
+                                  agg_cfg)
+    except BaseException:
+        # a malformed update must not strand the batch: put it back at the
+        # queue head (FIFO preserved) and retire the in-flight rounds so
+        # effective_round stays truthful, then surface the error
+        with rec.pending_lock:
+            rec.pending.extendleft(reversed(batch))
+            rec.inflight_rounds -= rounds
+        raise
+    with rec.pending_lock:
+        rec.swap(res.params, res.meta)
+        rec.inflight_rounds -= rounds
+    return res
+
+
+def _drain_secure_record(rec: ModelRecord, key: str, round_id: int,
+                         expected_ids, masker,
+                         agg_cfg: AggregationConfig) -> tuple[int, int]:
+    """Fold one secure round on one record; returns (folded, recovered)."""
+    with rec.pending_lock:
+        batch = rec.secure_pending.pop(round_id, [])
+    if not batch:
+        return 0, 0
+    try:
+        submitted = {u.client_id for u in batch}
+        missing = sorted(set(expected_ids) - submitted)
+        correction = None
+        if missing:
+            if masker is None:
+                raise RuntimeError(
+                    "secure round has dropouts but no masker is attached "
+                    "for seed reconstruction")
+            correction = masker.reconstruct(
+                rec.params, missing, sorted(submitted), round_id, key)
+        res = secure_coalesced_aggregate(
+            rec.params, rec.meta,
+            [(u.masked_delta, u.delta) for u in batch],
+            agg_cfg, correction)
+    except BaseException:
+        # don't strand the round: restore it so a later retry can fold it
+        with rec.pending_lock:
+            rec.secure_pending[round_id] = \
+                batch + rec.secure_pending.get(round_id, [])
+        raise
+    with rec.pending_lock:
+        rec.swap(res.params, res.meta)
+    return len(batch), len(missing)
+
+
+class _RegistryBase:
+    """Shared model-registry plumbing for both store flavors.
+
+    The registry is **copy-on-write**: ``_records`` is only ever replaced
+    wholesale (never mutated in place) under ``_registry_lock``, so readers
+    — the submit hot path, snapshot fetches, drain-worker sweeps — take no
+    lock at all; they read whatever consistent dict reference is current.
+    ``ensure_cluster`` (Predict & Evolve joins mid-run) is the only writer.
+    """
+
+    def __init__(self, init_params, cluster_keys=()):
+        self._registry_lock = threading.Lock()     # writers only (COW swap)
+        records = {GLOBAL_KEY: ModelRecord(init_params)}
         for key in cluster_keys:
-            self._records[str(key)] = ModelRecord(init_params)
-        # instrumentation (guarded by _stats_lock; hot-path counters only)
-        self._stats_lock = threading.Lock()
-        self.n_updates = 0
-        self.n_fast_path = 0
-        self.n_lock_waits = 0
-        self.n_enqueued = 0
-        self.n_drain_batches = 0
-        self.n_drained = 0                     # updates consumed by drains
-        self.max_queue_depth = 0
-        self.n_secure_rounds = 0               # secure drains performed
-        self.n_secure_recoveries = 0           # dropped clients recovered
+            records[str(key)] = ModelRecord(init_params)
+        self._records: dict[str, ModelRecord] = records
 
     # ------------------------------------------------------------------ keys
     @staticmethod
@@ -138,16 +220,14 @@ class ModelStore:
         return self._key(level, cluster_key)
 
     def _record(self, key: str) -> ModelRecord:
-        """Registry read under the registry lock — `ensure_cluster` can mutate
-        `_records` concurrently (Predict & Evolve joins mid-run)."""
-        with self._registry_lock:
-            try:
-                return self._records[key]
-            except KeyError:
-                known = sorted(k for k in self._records if k != GLOBAL_KEY)
-                raise KeyError(
-                    f"no model registered for cluster key {key!r} "
-                    f"(known cluster keys: {known})") from None
+        """Lock-free registry read off the current copy-on-write snapshot."""
+        rec = self._records.get(key)
+        if rec is None:
+            known = sorted(k for k in self._records if k != GLOBAL_KEY)
+            raise KeyError(
+                f"no model registered for cluster key {key!r} "
+                f"(known cluster keys: {known})")
+        return rec
 
     def ensure_cluster(self, cluster_key: str, init_params=None):
         """Predict & Evolve: a newly formed cluster gets a model seeded from
@@ -157,11 +237,12 @@ class ModelStore:
             if key not in self._records:
                 seed = init_params if init_params is not None else \
                     self._records[GLOBAL_KEY].params
-                self._records[key] = ModelRecord(seed)
+                updated = dict(self._records)
+                updated[key] = ModelRecord(seed)
+                self._records = updated            # atomic reference swap
 
     def keys(self):
-        with self._registry_lock:
-            return [k for k in self._records if k != GLOBAL_KEY]
+        return [k for k in self._records if k != GLOBAL_KEY]
 
     # -------------------------------------------------------------- protocol
     def request_model(self, level: str, cluster_key: Optional[str] = None):
@@ -169,6 +250,114 @@ class ModelStore:
         the paper's clients read whatever the latest aggregated state is)."""
         return self._record(self._key(level, cluster_key)).snapshot()
 
+    # ------------------------------------------------------------- inspection
+    def meta(self, level: str, cluster_key: Optional[str] = None) -> ModelMeta:
+        return self._record(self._key(level, cluster_key)).meta
+
+    def params(self, level: str, cluster_key: Optional[str] = None):
+        return self._record(self._key(level, cluster_key)).params
+
+
+class _SubmitStats:
+    """Submit-side (hot-path) counters behind their own lock.  ``ModelStore``
+    bills every key to one sink; ``ShardedModelStore`` gives each shard its
+    own, so submitters to different shards never serialize on bookkeeping."""
+
+    __slots__ = ("lock", "n_updates", "n_fast_path", "n_lock_waits",
+                 "n_enqueued", "max_queue_depth")
+
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.n_updates = 0        # direct-path (non-batched) aggregations
+        self.n_fast_path = 0
+        self.n_lock_waits = 0
+        self.n_enqueued = 0
+        self.max_queue_depth = 0
+
+    def count_lock_wait(self):
+        with self.lock:
+            self.n_lock_waits += 1
+
+    def count_direct(self, fast: bool):
+        with self.lock:
+            self.n_updates += 1
+            if fast:
+                self.n_fast_path += 1
+
+    def count_enqueue(self):
+        # callers count BEFORE publishing to the queue: a concurrent drain
+        # may fold the update the instant it becomes visible, and
+        # `updates <= enqueued` must hold for every agg_stats() snapshot
+        with self.lock:
+            self.n_enqueued += 1
+
+    def observe_depth(self, depth: int):
+        with self.lock:
+            if depth > self.max_queue_depth:
+                self.max_queue_depth = depth
+
+    def snapshot(self) -> tuple:
+        """One consistent read: (updates, fast_path, lock_waits, enqueued,
+        max_depth)."""
+        with self.lock:
+            return (self.n_updates, self.n_fast_path, self.n_lock_waits,
+                    self.n_enqueued, self.max_queue_depth)
+
+
+class _StoreBase(_RegistryBase):
+    """Submit paths and per-record drains shared by both store flavors.
+
+    The flavors genuinely disagree on exactly two things: which submit-side
+    stats sink a model key bills to (``_submit_stats``) and how the global
+    tier queues/drains.  Everything else — the direct update path,
+    pending/secure enqueues, per-record coalesced drains, secure full-round
+    drains, and the drain-side counters — lives here once, so the
+    lock-ordering and count-before-publish invariants cannot drift between
+    the flavors."""
+
+    def __init__(self, init_params, cluster_keys=(),
+                 agg_cfg: AggregationConfig = AggregationConfig(),
+                 batch_aggregation: bool = False, max_coalesce: int = 16,
+                 masker=None):
+        super().__init__(init_params, cluster_keys)
+        self.agg_cfg = agg_cfg
+        self.batch_aggregation = batch_aggregation
+        self.max_coalesce = max(int(max_coalesce), 1)
+        # secure aggregation: a repro.privacy.secure_agg.PairwiseMasker (its
+        # presence switches both runtimes to full-round secure drains)
+        self.masker = masker
+        # monotone round-id base carried across runtime runs — pair masks are
+        # derived from (pair, round_id, model_key), so round ids must never
+        # repeat for one masker or masks would be reused (and cancellable
+        # across runs by an observer)
+        self.secure_round_offset = 0
+        # drain-side counters (cold path: one touch per batch, not per
+        # submit) behind a store-level lock
+        self._drain_lock = threading.Lock()
+        self._n_drain_updates = 0
+        self._n_drain_fast_path = 0
+        self.n_drain_batches = 0
+        self.n_drained = 0                     # updates consumed by drains
+        self.n_secure_rounds = 0               # secure drains performed
+        self.n_secure_recoveries = 0           # dropped clients recovered
+
+    # ----------------------------------------------------------- flavor hook
+    def _submit_stats(self, key: str) -> _SubmitStats:
+        """The submit-side stats sink the given model key bills to."""
+        raise NotImplementedError
+
+    def _count_drain(self, folded: int, fast: int,
+                     secure: bool = False, recovered: int = 0):
+        with self._drain_lock:
+            self._n_drain_updates += folded
+            self._n_drain_fast_path += fast
+            self.n_drain_batches += 1
+            self.n_drained += folded
+            if secure:
+                self.n_secure_rounds += 1
+                self.n_secure_recoveries += recovered
+
+    # -------------------------------------------------------------- protocol
     def handle_model_update(self, level: str, cluster_key: Optional[str],
                             updated_params, updated_meta: ModelMeta,
                             delta: UpdateDelta, *, blocking: bool = True) -> bool:
@@ -177,17 +366,17 @@ class ModelStore:
         ``blocking=False`` and the lock was busy (client retries later).
 
         In batched mode the update is enqueued instead (never blocks, always
-        accepted); a later ``drain`` folds the whole queue at once.
+        accepted); a later drain folds the whole queue at once.
         """
         if self.batch_aggregation:
             self.enqueue_update(level, cluster_key, updated_params,
                                 updated_meta, delta)
             return True
-        rec = self._record(self._key(level, cluster_key))
-        acquired = rec.lock.acquire(blocking=blocking)
-        if not acquired:
-            with self._stats_lock:
-                self.n_lock_waits += 1
+        key = self._key(level, cluster_key)
+        rec = self._record(key)
+        st = self._submit_stats(key)
+        if not rec.lock.acquire(blocking=blocking):
+            st.count_lock_wait()
             return False
         try:
             fast = (self.agg_cfg.sequential_fast_path
@@ -195,28 +384,29 @@ class ModelStore:
             rec.swap(*aggregate_models(
                 rec.params, rec.meta, updated_params, updated_meta, delta,
                 self.agg_cfg))
-            with self._stats_lock:
-                self.n_updates += 1
-                if fast:
-                    self.n_fast_path += 1
+            st.count_direct(fast)
         finally:
             rec.lock.release()
         return True
 
     # ------------------------------------------------------- batched updates
+    def _enqueue_record(self, key: str, upd: PendingUpdate) -> int:
+        rec = self._record(key)
+        st = self._submit_stats(key)
+        st.count_enqueue()          # before publish — see _SubmitStats
+        with rec.pending_lock:
+            rec.pending.append(upd)
+            depth = len(rec.pending)
+        st.observe_depth(depth)
+        return depth
+
     def enqueue_update(self, level: str, cluster_key: Optional[str],
                        updated_params, updated_meta: ModelMeta,
                        delta: UpdateDelta) -> int:
         """Queue an update for a later coalesced drain; returns queue depth."""
-        rec = self._record(self._key(level, cluster_key))
-        with rec.pending_lock:
-            rec.pending.append(PendingUpdate(updated_params, updated_meta, delta))
-            depth = len(rec.pending)
-        with self._stats_lock:
-            self.n_enqueued += 1
-            if depth > self.max_queue_depth:
-                self.max_queue_depth = depth
-        return depth
+        return self._enqueue_record(
+            self._key(level, cluster_key),
+            PendingUpdate(updated_params, updated_meta, delta))
 
     def pending_depth(self, level: str, cluster_key: Optional[str] = None) -> int:
         rec = self._record(self._key(level, cluster_key))
@@ -227,43 +417,32 @@ class ModelStore:
         """Server round *including* queued-but-undrained updates (each
         pending update advances the round by ``delta.rounds`` once drained).
         This is the round an update enqueued right now would be measured
-        against — the staleness reference for batched mode."""
+        against — the staleness reference for batched mode.
+
+        ``inflight_rounds`` covers the drain window between popping a batch
+        and swapping the aggregated meta in: without it a reader could see
+        the batch in neither the queue nor the meta and watch the effective
+        round regress mid-drain (latent race surfaced by the equivalence
+        harness; see ``_drain_record_once``)."""
         rec = self._record(self._key(level, cluster_key))
         with rec.pending_lock:
             queued = sum(u.delta.rounds for u in rec.pending)
-        return rec.meta.round + queued
+            return rec.meta.round + queued + rec.inflight_rounds
 
-    def drain(self, level: str, cluster_key: Optional[str] = None) -> int:
-        """Fold all queued updates for one model, `max_coalesce` at a time,
-        into single N-way aggregations.  Returns number of updates folded."""
-        rec = self._record(self._key(level, cluster_key))
+    def _drain_record(self, key: str) -> int:
+        """Fold all queued updates for one record, ``max_coalesce`` at a
+        time, into single N-way aggregations; returns updates folded."""
+        rec = self._record(key)
         drained = 0
         while True:
             # model lock first so concurrent drains stay FIFO; enqueues only
             # touch pending_lock and keep flowing while we aggregate
             with rec.lock:
-                with rec.pending_lock:
-                    take = min(len(rec.pending), self.max_coalesce)
-                    batch = [rec.pending.popleft() for _ in range(take)]
-                if not batch:
-                    return drained
-                res = coalesced_aggregate(
-                    rec.params, rec.meta,
-                    [(u.params, u.meta, u.delta) for u in batch],
-                    self.agg_cfg)
-                rec.swap(res.params, res.meta)
-            with self._stats_lock:
-                self.n_updates += len(batch)
-                self.n_fast_path += res.n_fast_path
-                self.n_drain_batches += 1
-                self.n_drained += len(batch)
-            drained += len(batch)
-
-    def drain_all(self) -> int:
-        total = self.drain("global")
-        for key in self.keys():
-            total += self.drain("cluster", key)
-        return total
+                res = _drain_record_once(rec, self.max_coalesce, self.agg_cfg)
+            if res is None:
+                return drained
+            self._count_drain(res.n_folded, res.n_fast_path)
+            drained += res.n_folded
 
     # ---------------------------------------------------- secure aggregation
     def submit_secure(self, level: str, cluster_key: Optional[str],
@@ -272,16 +451,16 @@ class ModelStore:
         """Queue one masked update for its round's secure drain.  The server
         never aggregates these individually — only ``drain_secure`` folds a
         full round, inside which the pairwise masks cancel."""
-        rec = self._record(self._key(level, cluster_key))
+        key = self._key(level, cluster_key)
+        rec = self._record(key)
+        st = self._submit_stats(key)
+        st.count_enqueue()          # before publish — see _SubmitStats
         with rec.pending_lock:
             bucket = rec.secure_pending.setdefault(round_id, [])
             bucket.append(PendingSecureUpdate(client_id, round_id,
                                               masked_delta, delta))
             depth = len(bucket)
-        with self._stats_lock:
-            self.n_enqueued += 1
-            if depth > self.max_queue_depth:
-                self.max_queue_depth = depth
+        st.observe_depth(depth)
         return depth
 
     def drain_secure(self, level: str, cluster_key: Optional[str],
@@ -296,57 +475,359 @@ class ModelStore:
         key = self._key(level, cluster_key)
         rec = self._record(key)
         with rec.lock:
-            with rec.pending_lock:
-                batch = rec.secure_pending.pop(round_id, [])
-            if not batch:
-                return 0
-            submitted = {u.client_id for u in batch}
-            missing = sorted(set(expected_ids) - submitted)
-            correction = None
-            if missing:
-                if self.masker is None:
-                    raise RuntimeError(
-                        "secure round has dropouts but no masker is attached "
-                        "for seed reconstruction")
-                correction = self.masker.reconstruct(
-                    rec.params, missing, sorted(submitted), round_id, key)
-            res = secure_coalesced_aggregate(
-                rec.params, rec.meta,
-                [(u.masked_delta, u.delta) for u in batch],
-                self.agg_cfg, correction)
-            rec.swap(res.params, res.meta)
-        with self._stats_lock:
-            self.n_updates += len(batch)
-            self.n_drain_batches += 1
-            self.n_drained += len(batch)
-            self.n_secure_rounds += 1
-            self.n_secure_recoveries += len(missing)
-        return len(batch)
+            folded, recovered = _drain_secure_record(
+                rec, key, round_id, expected_ids, self.masker, self.agg_cfg)
+        if not folded:
+            return 0
+        self._count_drain(folded, 0, secure=True, recovered=recovered)
+        return folded
 
     # ------------------------------------------------------------- inspection
-    def meta(self, level: str, cluster_key: Optional[str] = None) -> ModelMeta:
-        return self._record(self._key(level, cluster_key)).meta
-
-    def params(self, level: str, cluster_key: Optional[str] = None):
-        return self._record(self._key(level, cluster_key)).params
-
     def coalesce_factor(self) -> float:
         """Mean queued-updates-per-drain — 1.0 means no batching benefit."""
         if not self.n_drain_batches:
             return 0.0
         return self.n_drained / self.n_drain_batches
 
+
+class ModelStore(_StoreBase):
+    """Thread-safe store for global + cluster models: one submit-side stats
+    sink, flat drains (the global tier is just another record)."""
+
+    def __init__(self, init_params, cluster_keys=(),
+                 agg_cfg: AggregationConfig = AggregationConfig(),
+                 batch_aggregation: bool = False, max_coalesce: int = 16,
+                 masker=None):
+        super().__init__(init_params, cluster_keys, agg_cfg,
+                         batch_aggregation, max_coalesce, masker)
+        self._submit = _SubmitStats()
+
+    def _submit_stats(self, key: str) -> _SubmitStats:
+        return self._submit
+
+    def drain(self, level: str, cluster_key: Optional[str] = None) -> int:
+        """Fold all queued updates for one model, `max_coalesce` at a time,
+        into single N-way aggregations.  Returns number of updates folded."""
+        return self._drain_record(self._key(level, cluster_key))
+
+    def drain_all(self) -> int:
+        total = self.drain("global")
+        for key in self.keys():
+            total += self.drain("cluster", key)
+        return total
+
+    # aggregate counters (drain-side + the submit sink)
+    @property
+    def n_updates(self) -> int:
+        return self._n_drain_updates + self._submit.n_updates
+
+    @property
+    def n_fast_path(self) -> int:
+        return self._n_drain_fast_path + self._submit.n_fast_path
+
+    @property
+    def n_lock_waits(self) -> int:
+        return self._submit.n_lock_waits
+
+    @property
+    def n_enqueued(self) -> int:
+        return self._submit.n_enqueued
+
+    @property
+    def max_queue_depth(self) -> int:
+        return self._submit.max_queue_depth
+
     def agg_stats(self) -> dict:
+        # snapshot order matters: drain counters FIRST, then the submit sink
+        # as one locked read.  Enqueues are counted before publish and folds
+        # happen after it, so any fold visible in the drain snapshot has its
+        # enqueue visible in the (later) submit snapshot — every snapshot
+        # keeps updates <= enqueued and fast_path_frac <= 1 (regression:
+        # test_agg_stats_consistent_snapshot_under_drains)
+        with self._drain_lock:
+            drain_updates = self._n_drain_updates
+            drain_fast = self._n_drain_fast_path
+            drain_batches = self.n_drain_batches
+            coalesce = self.coalesce_factor()
+            secure_rounds = self.n_secure_rounds
+            secure_recoveries = self.n_secure_recoveries
+        direct, fast, lock_waits, enqueued, max_depth = self._submit.snapshot()
+        updates = drain_updates + direct
         out = {
-            "updates": self.n_updates,
-            "fast_path_frac": self.n_fast_path / max(self.n_updates, 1),
-            "lock_waits": self.n_lock_waits,
-            "enqueued": self.n_enqueued,
-            "drain_batches": self.n_drain_batches,
-            "max_queue_depth": self.max_queue_depth,
-            "coalesce_factor": self.coalesce_factor(),
+            "updates": updates,
+            "fast_path_frac": (drain_fast + fast) / max(updates, 1),
+            "lock_waits": lock_waits,
+            "enqueued": enqueued,
+            "drain_batches": drain_batches,
+            "max_queue_depth": max_depth,
+            "coalesce_factor": coalesce,
         }
         if self.masker is not None:
-            out["secure_rounds"] = self.n_secure_rounds
-            out["secure_recoveries"] = self.n_secure_recoveries
+            out["secure_rounds"] = secure_rounds
+            out["secure_recoveries"] = secure_recoveries
+        return out
+
+
+# =========================================================================
+# Sharded store: per-cluster shards, two-level global fold
+# =========================================================================
+
+
+class _Shard:
+    """One independent server slice: its slice of the global pending queue
+    plus its own stats.  Cluster records owned by the shard keep their
+    per-record queues; the shard only decides *which drain worker* sweeps
+    them and which stats bucket counts them."""
+
+    __slots__ = ("idx", "lock", "global_pending", "stats")
+
+    def __init__(self, idx: int):
+        self.idx = idx
+        self.lock = threading.Lock()
+        # FIFO slice of the global queue: (seq, PendingUpdate)
+        self.global_pending: deque = deque()
+        self.stats = _SubmitStats()
+
+
+class ShardedModelStore(_StoreBase):
+    """``ModelStore`` semantics partitioned into K independent shards.
+
+    Cluster models are assigned to shards by a *stable* hash
+    (``crc32(key) % K`` — never Python's randomized ``hash``), so the
+    assignment is reproducible across processes and restarts and never needs
+    an ownership table.  Submits to different clusters touch only their
+    record's queue lock and their shard's stats lock (the registry itself is
+    copy-on-write, read lock-free); global submits are struck round-robin
+    across per-shard queue slices carrying a monotone arrival ``seq``.
+
+    ``drain_global`` folds all queued global slices two-level: one
+    ``plan_coalesce`` walk over the seq-sorted concatenation fixes every
+    update's telescoped convex coefficient (identical to the flat fold's),
+    then each shard's members are reduced to a convex partial and a
+    sample-weighted cross-shard merge reassembles the exact flat sum — see
+    ``two_level_coalesced_aggregate`` for the equivalence argument, and
+    ``tests/test_store_equivalence.py`` for the harness that checks it
+    against the sequential fold, the flat drain, and both runtimes.
+
+    Secure aggregation stays model-local (masks only cancel inside one fused
+    full-round sum), so ``drain_secure`` runs unchanged on the owning
+    shard's record — a dropout in one shard's round can never touch another
+    shard's state.
+    """
+
+    def __init__(self, init_params, cluster_keys=(),
+                 agg_cfg: AggregationConfig = AggregationConfig(),
+                 n_shards: int = 4, batch_aggregation: bool = False,
+                 max_coalesce: int = 16, masker=None):
+        self.n_shards = max(int(n_shards), 1)
+        super().__init__(init_params, cluster_keys, agg_cfg,
+                         batch_aggregation, max_coalesce, masker)
+        self._shards = [_Shard(i) for i in range(self.n_shards)]
+        self._gseq = itertools.count()      # global-queue arrival order
+        # two-level fold instrumentation (under the shared _drain_lock)
+        self.n_global_drains = 0
+        self.n_global_partials = 0          # shard partials fed to merges
+
+    # ------------------------------------------------------------------ keys
+    def _submit_stats(self, key: str) -> _SubmitStats:
+        return self._shards[self.shard_of(key)].stats
+
+    def shard_of(self, key: str) -> int:
+        """Stable cluster-key -> shard assignment (pure function of the key,
+        so there is no ownership table to keep in sync with the registry)."""
+        if key == GLOBAL_KEY:
+            return 0
+        return zlib.crc32(str(key).encode()) % self.n_shards
+
+    def shard_cluster_keys(self, shard: int):
+        """Cluster keys owned by one shard (that shard's drain beat)."""
+        return [k for k in self._records
+                if k != GLOBAL_KEY and self.shard_of(k) == shard]
+
+    # ------------------------------------------------------- batched updates
+    def enqueue_update(self, level: str, cluster_key: Optional[str],
+                       updated_params, updated_meta: ModelMeta,
+                       delta: UpdateDelta) -> int:
+        upd = PendingUpdate(updated_params, updated_meta, delta)
+        key = self._key(level, cluster_key)
+        if key != GLOBAL_KEY:
+            return self._enqueue_record(key, upd)
+        # global tier: strike a round-robin shard slice instead of the
+        # record's own queue
+        seq = next(self._gseq)
+        sh = self._shards[seq % self.n_shards]
+        sh.stats.count_enqueue()    # before publish — see _SubmitStats
+        with sh.lock:
+            sh.global_pending.append((seq, upd))
+            depth = len(sh.global_pending)
+        sh.stats.observe_depth(depth)
+        return depth
+
+    def pending_depth(self, level: str, cluster_key: Optional[str] = None) -> int:
+        if self._key(level, cluster_key) == GLOBAL_KEY:
+            total = 0
+            for sh in self._shards:
+                with sh.lock:
+                    total += len(sh.global_pending)
+            return total
+        return super().pending_depth(level, cluster_key)
+
+    def effective_round(self, level: str, cluster_key: Optional[str] = None) -> int:
+        """Round including queued *and* in-flight (popped, not yet merged)
+        updates — same staleness reference as ``ModelStore.effective_round``.
+        For the global tier the shard slices are summed under the record's
+        pending_lock, which every global drain also holds while popping, so
+        readers never catch a drain between pop and publish."""
+        key = self._key(level, cluster_key)
+        if key != GLOBAL_KEY:
+            return super().effective_round(level, cluster_key)
+        rec = self._record(key)
+        with rec.pending_lock:
+            queued = 0
+            for sh in self._shards:
+                with sh.lock:
+                    queued += sum(u.delta.rounds
+                                  for _, u in sh.global_pending)
+            return rec.meta.round + queued + rec.inflight_rounds
+
+    # ------------------------------------------------------------ drains
+    def drain(self, level: str, cluster_key: Optional[str] = None) -> int:
+        key = self._key(level, cluster_key)
+        if key == GLOBAL_KEY:
+            return self.drain_global()
+        return self._drain_record(key)
+
+    def drain_global(self) -> int:
+        """Two-level global fold: pop every shard slice (seq-tagged), plan
+        once over the seq-sorted concatenation, reduce per-shard partials,
+        merge sample-weighted.  One call drains the whole global queue; the
+        per-shard partial sums are arity-bounded by ``max_coalesce``."""
+        rec = self._record(GLOBAL_KEY)
+        with rec.lock:
+            with rec.pending_lock:
+                batches, seqs, total_rounds = [], [], 0
+                for sh in self._shards:
+                    with sh.lock:
+                        items = list(sh.global_pending)
+                        sh.global_pending.clear()
+                    seqs.append([s for s, _ in items])
+                    batches.append([(u.params, u.meta, u.delta)
+                                    for _, u in items])
+                    total_rounds += sum(u.delta.rounds for _, u in items)
+                rec.inflight_rounds += total_rounds
+            n = sum(len(b) for b in batches)
+            if n == 0:
+                with rec.pending_lock:
+                    rec.inflight_rounds -= total_rounds
+                return 0
+            try:
+                res = two_level_coalesced_aggregate(
+                    rec.params, rec.meta, batches, self.agg_cfg,
+                    seqs=seqs, max_width=self.max_coalesce)
+            except BaseException:
+                # restore the popped slices (seq tags intact, FIFO per
+                # shard) and retire the in-flight rounds before surfacing
+                with rec.pending_lock:
+                    for sh, batch, sq in zip(self._shards, batches, seqs):
+                        items = [(s, PendingUpdate(*u))
+                                 for s, u in zip(sq, batch)]
+                        with sh.lock:
+                            sh.global_pending.extendleft(reversed(items))
+                    rec.inflight_rounds -= total_rounds
+                raise
+            with rec.pending_lock:
+                rec.swap(res.params, res.meta)
+                rec.inflight_rounds -= total_rounds
+        with self._drain_lock:
+            self._n_drain_updates += n
+            self._n_drain_fast_path += res.n_fast_path
+            self.n_drain_batches += 1
+            self.n_drained += n
+            self.n_global_drains += 1
+            self.n_global_partials += res.n_partials
+        return n
+
+    def drain_shard(self, shard: int) -> int:
+        """One drain worker's beat: every cluster model owned by the shard.
+        The global queue is drained separately (``drain_global``) because
+        its two-level fold spans all shards' slices."""
+        total = 0
+        for key in self.shard_cluster_keys(shard):
+            total += self._drain_record(key)
+        return total
+
+    def drain_all(self) -> int:
+        total = self.drain_global()
+        for shard in range(self.n_shards):
+            total += self.drain_shard(shard)
+        return total
+
+    # ModelStore-compatible aggregate counters (summed across shards)
+    @property
+    def n_updates(self) -> int:
+        return self._n_drain_updates + sum(s.stats.n_updates
+                                           for s in self._shards)
+
+    @property
+    def n_fast_path(self) -> int:
+        return self._n_drain_fast_path + sum(s.stats.n_fast_path
+                                             for s in self._shards)
+
+    @property
+    def n_lock_waits(self) -> int:
+        return sum(s.stats.n_lock_waits for s in self._shards)
+
+    @property
+    def n_enqueued(self) -> int:
+        return sum(s.stats.n_enqueued for s in self._shards)
+
+    @property
+    def max_queue_depth(self) -> int:
+        return max(s.stats.max_queue_depth for s in self._shards)
+
+    def agg_stats(self) -> dict:
+        # snapshot order matters: drain counters FIRST, then each shard's
+        # counters as one locked read.  Enqueues are counted before publish
+        # and folds happen after it, so any fold visible in the drain
+        # snapshot has its enqueue visible in the (later) shard snapshots —
+        # every snapshot keeps updates <= enqueued and fast_path_frac <= 1
+        with self._drain_lock:
+            drain_updates = self._n_drain_updates
+            drain_fast = self._n_drain_fast_path
+            drain = {
+                "drain_batches": self.n_drain_batches,
+                "coalesce_factor": self.coalesce_factor(),
+                "global_drains": self.n_global_drains,
+                "global_partials": self.n_global_partials,
+                "secure_rounds": self.n_secure_rounds,
+                "secure_recoveries": self.n_secure_recoveries,
+            }
+        updates, fast, lock_waits, enqueued, max_depth = 0, 0, 0, 0, 0
+        shard_enqueued = []
+        for s in self._shards:
+            u, f, lw, enq, depth = s.stats.snapshot()
+            updates += u
+            fast += f
+            lock_waits += lw
+            enqueued += enq
+            max_depth = max(max_depth, depth)
+            shard_enqueued.append(enq)
+        updates += drain_updates
+        fast += drain_fast
+        out = {
+            "updates": updates,
+            "fast_path_frac": fast / max(updates, 1),
+            "lock_waits": lock_waits,
+            "enqueued": enqueued,
+            "drain_batches": drain["drain_batches"],
+            "max_queue_depth": max_depth,
+            "coalesce_factor": drain["coalesce_factor"],
+            "shards": self.n_shards,
+            "global_drains": drain["global_drains"],
+            "global_partials": drain["global_partials"],
+            "shard_enqueued": shard_enqueued,
+        }
+        if self.masker is not None:
+            out["secure_rounds"] = drain["secure_rounds"]
+            out["secure_recoveries"] = drain["secure_recoveries"]
         return out

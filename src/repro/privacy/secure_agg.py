@@ -105,12 +105,14 @@ class PairwiseMasker:
             self.mask_delta_flat(delta, client_id, participants, round_id,
                                  model_key, weight), base_params)
 
-    def reconstruct(self, template_params, missing_ids, survivor_ids,
-                    round_id: int, model_key: str):
-        """Seed-reconstruction recovery: the sum of every stray mask the
-        survivors included w.r.t. the dropped clients — subtracted by the
-        drain to restore exact cancellation."""
-        t = flatten_params(template_params).shape[0]
+    def reconstruct_flat(self, t: int, missing_ids, survivor_ids,
+                         round_id: int, model_key: str) -> np.ndarray:
+        """Flat-domain seed-reconstruction recovery: the sum of every stray
+        mask the survivors included w.r.t. the dropped clients.  The drain
+        subtracts it inside the same fused sum to restore exact cancellation.
+        Per-shard drains call this independently per model — mask seeds are
+        keyed by ``(pair, round, model_key)`` so one shard's recovery can
+        never touch another shard's round."""
         total = np.zeros(t, np.float32)
         if self.mask_scale != 0.0:
             for dropped in missing_ids:
@@ -118,4 +120,14 @@ class PairwiseMasker:
                     sign = 1.0 if survivor < dropped else -1.0
                     total += sign * self._pair_mask(survivor, dropped,
                                                     round_id, model_key, t)
-        return unflatten_params(jnp.asarray(total), template_params)
+        return total
+
+    def reconstruct(self, template_params, missing_ids, survivor_ids,
+                    round_id: int, model_key: str):
+        """Pytree convenience over ``reconstruct_flat``, shaped like
+        ``template_params``."""
+        t = flatten_params(template_params).shape[0]
+        return unflatten_params(
+            jnp.asarray(self.reconstruct_flat(t, missing_ids, survivor_ids,
+                                              round_id, model_key)),
+            template_params)

@@ -1,0 +1,676 @@
+"""Cross-runtime equivalence harness for the sharded server tier.
+
+Drives identical update schedules through every aggregation path the server
+offers —
+
+  1. sequential pairwise Algorithm-2 fold (``aggregate_models``),
+  2. flat coalescing drain (``ModelStore`` batched),
+  3. sharded two-level drain (``ShardedModelStore``),
+  4. the deterministic sim runtime,
+  5. the threaded runtime,
+
+— and asserts parity of every tier's weights (atol <= 1e-5), metadata,
+``agg_stats()`` accounting, staleness, and privacy accounting, including
+under ``secure_agg``.  Plus the satellite suites: property tests that the
+two-level shard merge equals the flat N-way fold for random weights / shard
+assignments / drain orderings, a threaded multi-shard stress test with
+bounded-join shutdown, sharded secure-aggregation dropout isolation, and
+regressions for the ``effective_round``/``agg_stats`` drain races the
+harness surfaced.
+
+Path-parity notes baked into the schedules:
+  * paths 1-3 consume *pre-built* update triples, so the telescoped plan
+    (incl. sequential-fast-path resets) is identical by construction and
+    drain chunk boundaries don't matter (fold associativity);
+  * runtime paths use scripted clients whose training output depends only
+    on (client, call index) — never on the fetched snapshot — and fold with
+    ``sequential_fast_path=False``, making the final state independent of
+    arrival interleaving up to float summation order.
+"""
+
+import itertools
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # bare CI env: seeded-random fallback shim
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core.aggregation import (
+    AggregationConfig,
+    ModelMeta,
+    UpdateDelta,
+    aggregate_models,
+    coalesced_aggregate,
+    plan_coalesce,
+    two_level_coalesced_aggregate,
+)
+from repro.core.protocol import Client, ClientSpec, build_update
+from repro.core.runtime_sim import AsyncSimRuntime
+from repro.core.runtime_threaded import AsyncThreadedRuntime
+from repro.core.store import GLOBAL_KEY, ModelStore, ShardedModelStore
+from repro.privacy.secure_agg import PairwiseMasker
+
+NOFAST = AggregationConfig(sequential_fast_path=False)
+
+
+def make_tree(rng):
+    return {"a": jnp.asarray(rng.standard_normal((4, 3)), jnp.float32),
+            "b": jnp.asarray(rng.standard_normal(5), jnp.float32)}
+
+
+def assert_trees_close(t1, t2, atol=1e-5, msg=""):
+    for k in t1:
+        np.testing.assert_allclose(np.asarray(t1[k]), np.asarray(t2[k]),
+                                   atol=atol, err_msg=f"{msg} leaf {k!r}")
+
+
+# =========================================================================
+# schedule replay: sequential fold vs flat drain vs sharded drain
+# =========================================================================
+
+def make_schedule(rng, models, n_updates, fresh_frac=0.2):
+    """Arrival-ordered update stream: (model, params, meta, delta) with a
+    mix of stale snapshots and fast-path-eligible fresh updates."""
+    counts = {m: 0 for m in models}
+    events = []
+    for _ in range(n_updates):
+        m = models[int(rng.integers(len(models)))]
+        s = int(rng.integers(1, 300))
+        # fresh update: round == current server round + 1 (fast path);
+        # stale update: computed against the round-0 snapshot
+        fresh = rng.random() < fresh_frac
+        rnd = counts[m] + 1 if fresh else 1
+        events.append((m, make_tree(rng),
+                       ModelMeta(samples_learned=s, epochs_learned=1,
+                                 round=rnd),
+                       UpdateDelta(s, 1, 1)))
+        counts[m] += 1
+    return events
+
+
+def apply_sequential(init, models, events, cfg):
+    state = {m: (init, ModelMeta()) for m in models}
+    for m, p, um, d in events:
+        bp, bm = state[m]
+        state[m] = aggregate_models(bp, bm, p, um, d, cfg)
+    return state
+
+
+def replay_through_store(store, events, drain_rng=None, drain_prob=0.3):
+    """Feed the arrival stream into a store, optionally draining at random
+    points mid-stream (fold associativity: chunk boundaries are free)."""
+    for m, p, um, d in events:
+        level, key = ("global", None) if m == GLOBAL_KEY else ("cluster", m)
+        store.handle_model_update(level, key, p, um, d)
+        if drain_rng is not None and drain_rng.random() < drain_prob:
+            if drain_rng.random() < 0.5:
+                store.drain(level, key)
+            else:
+                store.drain_all()
+    store.drain_all()
+
+
+@pytest.mark.parametrize("n_shards", [1, 3, 4])
+@pytest.mark.parametrize("fast_path", [True, False])
+def test_sequential_flat_sharded_parity(n_shards, fast_path):
+    """Same pre-built schedule through the pairwise fold, the flat drain,
+    and the sharded two-level drain: all tiers must agree."""
+    rng = np.random.default_rng(100 * n_shards + fast_path)
+    cfg = AggregationConfig(sequential_fast_path=fast_path)
+    init = make_tree(rng)
+    cluster_keys = [f"loc:{i}" for i in range(5)]
+    models = [GLOBAL_KEY] + cluster_keys
+    events = make_schedule(rng, models, n_updates=60)
+
+    seq = apply_sequential(init, models, events, cfg)
+    flat = ModelStore(init, cluster_keys, agg_cfg=cfg,
+                      batch_aggregation=True, max_coalesce=7)
+    sharded = ShardedModelStore(init, cluster_keys, agg_cfg=cfg,
+                                n_shards=n_shards, batch_aggregation=True,
+                                max_coalesce=7)
+    replay_through_store(flat, events, np.random.default_rng(1))
+    replay_through_store(sharded, events, np.random.default_rng(2))
+
+    for m in models:
+        level, key = ("global", None) if m == GLOBAL_KEY else ("cluster", m)
+        sp, sm = seq[m]
+        assert flat.meta(level, key) == sm, m
+        assert sharded.meta(level, key) == sm, m
+        assert_trees_close(flat.params(level, key), sp, msg=f"flat {m}")
+        assert_trees_close(sharded.params(level, key), sp, msg=f"sharded {m}")
+
+    fs, ss = flat.agg_stats(), sharded.agg_stats()
+    for k in ("updates", "enqueued"):
+        assert fs[k] == ss[k] == len(events), k
+    assert fs["lock_waits"] == ss["lock_waits"] == 0
+    # the plan replays fast-path resets identically across both drains
+    assert fs["fast_path_frac"] == ss["fast_path_frac"]
+    assert sharded.pending_depth("global") == 0
+
+
+def test_effective_round_parity_flat_vs_sharded():
+    """The staleness reference must not depend on the store topology."""
+    rng = np.random.default_rng(7)
+    init = make_tree(rng)
+    keys = ["c0", "c1", "c2"]
+    events = make_schedule(rng, [GLOBAL_KEY] + keys, n_updates=30)
+    flat = ModelStore(init, keys, batch_aggregation=True)
+    sharded = ShardedModelStore(init, keys, n_shards=3,
+                                batch_aggregation=True)
+    for i, (m, p, um, d) in enumerate(events):
+        level, key = ("global", None) if m == GLOBAL_KEY else ("cluster", m)
+        flat.handle_model_update(level, key, p, um, d)
+        sharded.handle_model_update(level, key, p, um, d)
+        for lk in [("global", None)] + [("cluster", k) for k in keys]:
+            assert flat.effective_round(*lk) == sharded.effective_round(*lk)
+    flat.drain_all()
+    sharded.drain_all()
+    for lk in [("global", None)] + [("cluster", k) for k in keys]:
+        assert flat.effective_round(*lk) == sharded.effective_round(*lk)
+        assert flat.meta(*lk).round == sharded.meta(*lk).round
+
+
+# =========================================================================
+# property tests: two-level shard merge == flat N-way fold   [satellite]
+# =========================================================================
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=0, max_value=24),
+       st.integers(min_value=1, max_value=6),
+       st.integers(min_value=0, max_value=10_000))
+def test_two_level_matches_flat_property(n_updates, n_shards, seed):
+    """Random masses (incl. zero), random fresh/stale rounds, random shard
+    assignment: the two-level merge must equal the flat fold exactly on
+    meta/plan and within atol on weights."""
+    rng = np.random.default_rng(seed)
+    base = make_tree(rng)
+    base_meta = ModelMeta(samples_learned=int(rng.integers(0, 500)),
+                          epochs_learned=1, round=int(rng.integers(0, 4)))
+    updates = []
+    for _ in range(n_updates):
+        s = int(rng.integers(0, 300))          # zero-mass updates included
+        rnd = int(rng.integers(0, n_updates + base_meta.round + 2))
+        updates.append((make_tree(rng), ModelMeta(s, 1, rnd),
+                        UpdateDelta(s, 1, 1)))
+    flat = coalesced_aggregate(base, base_meta, updates)
+
+    shard_of = rng.integers(0, n_shards, size=n_updates)
+    batches = [[] for _ in range(n_shards)]
+    seqs = [[] for _ in range(n_shards)]
+    for i, u in enumerate(updates):
+        batches[shard_of[i]].append(u)
+        seqs[shard_of[i]].append(i)
+    two = two_level_coalesced_aggregate(base, base_meta, batches, seqs=seqs,
+                                        max_width=int(rng.integers(1, 9)))
+
+    assert two.meta == flat.meta
+    assert two.n_fast_path == flat.n_fast_path
+    assert two.n_folded == flat.n_folded == n_updates
+    assert_trees_close(two.params, flat.params, msg="two-level vs flat")
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=1, max_value=20),
+       st.integers(min_value=0, max_value=10_000))
+def test_plan_weights_are_convex_property(n_updates, seed):
+    """The telescoped plan is a convex combination: weights sum to 1 and a
+    reset zeroes everything before it."""
+    rng = np.random.default_rng(seed)
+    base_meta = ModelMeta(int(rng.integers(0, 400)), 1, 0)
+    mds = [(ModelMeta(int(rng.integers(0, 300)), 1, int(rng.integers(0, 5))),
+            UpdateDelta(int(rng.integers(0, 300)), 1, 1))
+           for _ in range(n_updates)]
+    plan = plan_coalesce(base_meta, mds)
+    assert len(plan.weights) == n_updates + 1
+    assert all(w >= 0.0 for w in plan.weights)
+    assert abs(sum(plan.weights) - 1.0) < 1e-9
+    assert plan.meta.round == base_meta.round + n_updates
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_random_drain_orderings_property(seed):
+    """Drain chunk boundaries are semantically free: random mid-stream
+    drain points on flat and sharded stores land on the sequential fold."""
+    rng = np.random.default_rng(seed)
+    init = make_tree(rng)
+    keys = ["k0", "k1"]
+    models = [GLOBAL_KEY] + keys
+    events = make_schedule(rng, models, n_updates=25)
+    seq = apply_sequential(init, models, events, AggregationConfig())
+    for store in (ModelStore(init, keys, batch_aggregation=True,
+                             max_coalesce=3),
+                  ShardedModelStore(init, keys, n_shards=2, batch_aggregation=True,
+                                    max_coalesce=3)):
+        replay_through_store(store, events, np.random.default_rng(seed + 1),
+                             drain_prob=0.5)
+        for m in models:
+            lk = ("global", None) if m == GLOBAL_KEY else ("cluster", m)
+            assert store.meta(*lk) == seq[m][1]
+            assert_trees_close(store.params(*lk), seq[m][0],
+                               msg=f"{type(store).__name__} {m}")
+
+
+# =========================================================================
+# runtime equivalence: scripted clients, sim vs threaded vs reference
+# =========================================================================
+
+N_CLIENTS, N_CLUSTERS, ROUNDS = 6, 3, 3
+CALLS_PER_ROUND = 3        # train_local, cluster train_update, global
+
+
+def cluster_of(i):
+    return f"c{i % N_CLUSTERS}"
+
+
+def script_params(i, call):
+    rng = np.random.default_rng((i + 1) * 10_007 + call * 101)
+    return make_tree(rng)
+
+
+def script_samples(i, call):
+    return 20 + (i * 37 + call * 11) % 80
+
+
+def make_scripted_clients(init, order=("cluster", "global")):
+    """Clients whose training output depends only on (client, call index) —
+    identical schedules regardless of runtime interleaving.  ``order`` is
+    the per-round model visit order (the async runtimes visit cluster tiers
+    first; the secure lockstep visits global first)."""
+    clients = []
+    for i in range(N_CLIENTS):
+        counter = itertools.count()
+
+        def train_fn(params, dataset, rng, anchor, i=i, counter=counter):
+            c = next(counter)
+            return script_params(i, c), script_samples(i, c), 1
+
+        c = Client(spec=ClientSpec(f"cl{i}", {"loc": np.zeros(2)},
+                                   dataset=None, speed=1.0 + 0.2 * i),
+                   cluster_keys=[cluster_of(i)], train_fn=train_fn)
+        c.local_params = init
+        clients.append(c)
+    return clients
+
+
+def scripted_reference(init, order=("cluster", "global")):
+    """Fold every scripted update per model with the no-fast-path config —
+    the order-independent ground truth both runtimes must land on."""
+    per_model = {GLOBAL_KEY: []}
+    for i in range(N_CLIENTS):
+        per_model.setdefault(cluster_of(i), [])
+    for i in range(N_CLIENTS):
+        for r in range(ROUNDS):
+            base_call = r * CALLS_PER_ROUND
+            for slot, tier in enumerate(order, start=1):
+                call = base_call + slot
+                m = GLOBAL_KEY if tier == "global" else cluster_of(i)
+                per_model[m].append(
+                    build_update(ModelMeta(), script_params(i, call),
+                                 script_samples(i, call)))
+    out = {}
+    for m, ups in per_model.items():
+        out[m] = coalesced_aggregate(init, ModelMeta(), ups, NOFAST)
+    return out
+
+
+def make_store(kind, init, masker=None):
+    keys = sorted({cluster_of(i) for i in range(N_CLIENTS)})
+    if kind == "flat":
+        return ModelStore(init, keys, agg_cfg=NOFAST,
+                          batch_aggregation=True, max_coalesce=5,
+                          masker=masker)
+    return ShardedModelStore(init, keys, agg_cfg=NOFAST, n_shards=4,
+                             batch_aggregation=True, max_coalesce=5,
+                             masker=masker)
+
+
+def run_runtime(runtime, store_kind, init, seed=0):
+    store = make_store(store_kind, init)
+    clients = make_scripted_clients(init)
+    if runtime == "sim":
+        rt = AsyncSimRuntime(clients, store, seed=seed)
+        rt.run(ROUNDS)
+    else:
+        rt = AsyncThreadedRuntime(clients, store, ROUNDS, stagger=0.001)
+        rt.run()
+    return store, rt
+
+
+@pytest.mark.slow
+def test_runtimes_match_reference_all_tiers():
+    """Sim and threaded runtimes, flat and sharded stores: every cluster
+    model and the global model agree with the sequential reference fold."""
+    rng = np.random.default_rng(0)
+    init = make_tree(rng)
+    ref = scripted_reference(init)
+    runs = {}
+    for runtime in ("sim", "threaded"):
+        for kind in ("flat", "sharded"):
+            store, _ = run_runtime(runtime, kind, init)
+            runs[(runtime, kind)] = store
+            for m, res in ref.items():
+                lk = ("global", None) if m == GLOBAL_KEY else ("cluster", m)
+                assert store.meta(*lk) == res.meta, (runtime, kind, m)
+                assert_trees_close(store.params(*lk), res.params,
+                                   msg=f"{runtime}/{kind} {m}")
+            stats = store.agg_stats()
+            assert stats["updates"] == N_CLIENTS * ROUNDS * 2
+            assert stats["enqueued"] == N_CLIENTS * ROUNDS * 2
+            assert store.pending_depth("global") == 0
+    # sim schedules are deterministic: flat and sharded stores see the
+    # identical event stream, so staleness logs must match exactly
+    _, rt_flat = run_runtime("sim", "flat", init, seed=3)
+    _, rt_shard = run_runtime("sim", "sharded", init, seed=3)
+    assert rt_flat.staleness_log == rt_shard.staleness_log
+    assert all(s >= 0 for s in rt_flat.staleness_log)
+
+
+# =========================================================================
+# secure aggregation across the matrix                        [satellite]
+# =========================================================================
+
+def run_secure(runtime, store_kind, init, mask_scale, dropout=0.0, seed=5):
+    masker = PairwiseMasker(seed=9, mask_scale=mask_scale)
+    store = make_store(store_kind, init, masker=masker)
+    clients = make_scripted_clients(init, order=("global", "cluster"))
+    if runtime == "sim":
+        rt = AsyncSimRuntime(clients, store, seed=seed, dropout_prob=dropout)
+        rt.run(ROUNDS)
+    else:
+        rt = AsyncThreadedRuntime(clients, store, ROUNDS)
+        rt.run()
+    return store
+
+
+@pytest.mark.slow
+def test_secure_equivalence_across_paths():
+    """Full-round secure drains: flat vs sharded vs both runtimes vs the
+    unmasked (mask_scale=0) baseline — masks must cancel everywhere."""
+    rng = np.random.default_rng(11)
+    init = make_tree(rng)
+    baseline = run_secure("sim", "flat", init, mask_scale=0.0)
+    models = [("global", None)] + [("cluster", k) for k in baseline.keys()]
+    for runtime in ("sim", "threaded"):
+        for kind in ("flat", "sharded"):
+            store = run_secure(runtime, kind, init, mask_scale=1.5)
+            assert store.n_secure_rounds == baseline.n_secure_rounds
+            for lk in models:
+                assert store.meta(*lk) == baseline.meta(*lk)
+                assert_trees_close(store.params(*lk), baseline.params(*lk),
+                                   atol=1e-4, msg=f"{runtime}/{kind} {lk}")
+
+
+def test_secure_sharded_dropout_isolated_per_shard():
+    """A mid-round dropout in one shard's model must not corrupt another
+    shard's round: the untouched model's drain is bit-identical to a
+    clean-round store, and the dropped round recovers to the unmasked
+    result."""
+    rng = np.random.default_rng(13)
+    init = make_tree(rng)
+    # pick two cluster keys that land on *different* shards of a K=2 store
+    probe = ShardedModelStore(init, n_shards=2)
+    candidates = [f"c{i}" for i in range(16)]
+    key_a = candidates[0]
+    key_b = next(k for k in candidates if probe.shard_of(k)
+                 != probe.shard_of(key_a))
+    keys = [key_a, key_b]
+
+    def drive(with_dropout, mask_scale):
+        mk = PairwiseMasker(seed=2, mask_scale=mask_scale)
+        store = ShardedModelStore(init, keys, n_shards=2, masker=mk)
+        assert store.shard_of(key_a) != store.shard_of(key_b)
+        ids = [f"m{j}" for j in range(3)]
+        for key in keys:
+            mkey = store.model_key("cluster", key)
+            submitters = ids[:-1] if (with_dropout and key == key_a) else ids
+            for cid in submitters:
+                crng = np.random.default_rng(hash((cid, key)) % 2**31)
+                d = jnp.asarray(crng.standard_normal(17), jnp.float32)
+                from repro.utils.tree import unflatten_params, flatten_params
+                masked = unflatten_params(
+                    mk.mask_delta_flat(d, cid, ids, 0, mkey, weight=10.0),
+                    init)
+                store.submit_secure("cluster", key, cid, 0, masked,
+                                    UpdateDelta(10, 1, 1))
+            store.drain_secure("cluster", key, 0, ids)
+        return store
+
+    dropped = drive(True, 2.0)
+    clean = drive(False, 2.0)
+    unmasked_dropped = drive(True, 0.0)
+    assert dropped.n_secure_recoveries == 1
+    # the other shard's model never saw the dropout: bitwise identical state
+    for k in init:
+        np.testing.assert_array_equal(
+            np.asarray(dropped.params("cluster", key_b)[k]),
+            np.asarray(clean.params("cluster", key_b)[k]))
+    # the dropped model recovered its stray masks: equals the unmasked fold
+    # of the survivors
+    assert_trees_close(dropped.params("cluster", key_a),
+                       unmasked_dropped.params("cluster", key_a), atol=1e-4)
+
+
+@pytest.mark.slow
+def test_secure_sim_dropout_recovery_sharded_matches_unmasked():
+    """Runtime-level: sharded secure sim with dropouts lands on the same
+    models as the unmasked run with an identical schedule."""
+    rng = np.random.default_rng(17)
+    init = make_tree(rng)
+    masked = run_secure("sim", "sharded", init, mask_scale=2.0, dropout=0.3)
+    plain = run_secure("sim", "sharded", init, mask_scale=0.0, dropout=0.3)
+    assert masked.n_secure_recoveries == plain.n_secure_recoveries
+    assert masked.n_secure_recoveries > 0
+    for lk in [("global", None)] + [("cluster", k) for k in masked.keys()]:
+        assert masked.meta(*lk) == plain.meta(*lk)
+        assert_trees_close(masked.params(*lk), plain.params(*lk), atol=1e-4,
+                           msg=f"secure dropout {lk}")
+
+
+# =========================================================================
+# threaded stress: no deadlock, no lost updates, clean shutdown [satellite]
+# =========================================================================
+
+@pytest.mark.slow
+def test_threaded_sharded_stress_no_lost_updates_clean_shutdown():
+    rng = np.random.default_rng(23)
+    init = make_tree(rng)
+    keys = [f"s{i}" for i in range(8)]
+    store = ShardedModelStore(init, keys, agg_cfg=NOFAST, n_shards=4,
+                              batch_aggregation=True, max_coalesce=6)
+    n_threads, per_thread = 8, 30
+    stop_reader = threading.Event()
+    violations = []
+
+    def submitter(t):
+        trng = np.random.default_rng(1000 + t)
+        for i in range(per_thread):
+            s = int(trng.integers(1, 100))
+            tree = {"a": jnp.asarray(trng.standard_normal((4, 3)),
+                                     jnp.float32),
+                    "b": jnp.asarray(trng.standard_normal(5), jnp.float32)}
+            key = keys[int(trng.integers(len(keys)))]
+            store.handle_model_update("cluster", key, tree,
+                                      ModelMeta(s, 1, 1), UpdateDelta(s, 1, 1))
+            store.handle_model_update("global", None, tree,
+                                      ModelMeta(s, 1, 1), UpdateDelta(s, 1, 1))
+            if trng.random() < 0.2:
+                time.sleep(trng.uniform(0, 1e-4))
+
+    def monotone_reader():
+        """effective_round must never regress mid-drain (regression for the
+        pop-before-swap window ``inflight_rounds`` closes)."""
+        last = {}
+        while not stop_reader.is_set():
+            for lk in [("global", None)] + [("cluster", k) for k in keys]:
+                r = store.effective_round(*lk)
+                if r < last.get(lk, 0):
+                    violations.append((lk, last[lk], r))
+                last[lk] = r
+            stats = store.agg_stats()
+            if not (0.0 <= stats["fast_path_frac"] <= 1.0):
+                violations.append(("fast_path_frac", stats["fast_path_frac"]))
+            if stats["updates"] > stats["enqueued"]:
+                violations.append(("updates>enqueued", stats["updates"],
+                                   stats["enqueued"]))
+
+    rt = AsyncThreadedRuntime([], store, drain_poll=1e-4, join_timeout=20.0)
+    stop = threading.Event()
+    rt._start_drain_workers(stop)
+    reader = threading.Thread(target=monotone_reader)
+    reader.start()
+    subs = [threading.Thread(target=submitter, args=(t,))
+            for t in range(n_threads)]
+    for t in subs:
+        t.start()
+    for t in subs:
+        t.join(30.0)
+        assert not t.is_alive(), "submitter deadlocked"
+    rt._join_drain_workers(stop)          # raises if a worker hangs
+    stop_reader.set()
+    reader.join(10.0)
+    assert not reader.is_alive()
+    assert not rt.errors
+    assert not violations, violations[:5]
+    assert all(not w.is_alive() for w in rt.drain_workers)
+
+    total = n_threads * per_thread * 2
+    assert store.n_enqueued == total
+    assert store.n_updates == total        # nothing lost, nothing doubled
+    assert store.pending_depth("global") == 0
+    for k in keys:
+        assert store.pending_depth("cluster", k) == 0
+    # per-model rounds are exactly the number of folded updates (monotone
+    # round ids with no gaps)
+    rounds = store.meta("global").round + \
+        sum(store.meta("cluster", k).round for k in keys)
+    assert rounds == total
+
+
+@pytest.mark.slow
+def test_threaded_runtime_sharded_clients_end_to_end():
+    """Full protocol threads against the sharded store: accounting closes
+    and the drain workers shut down inside the bounded join."""
+    rng = np.random.default_rng(29)
+    init = make_tree(rng)
+    store = make_store("sharded", init)
+    clients = make_scripted_clients(init)
+    rt = AsyncThreadedRuntime(clients, store, ROUNDS, stagger=0.002,
+                              join_timeout=20.0)
+    t0 = time.perf_counter()
+    rt.run()
+    assert time.perf_counter() - t0 < 60.0
+    assert len(rt.drain_workers) == store.n_shards + 1   # + global worker
+    assert all(not w.is_alive() for w in rt.drain_workers)
+    assert store.n_updates == N_CLIENTS * ROUNDS * 2
+    assert store.agg_stats()["global_drains"] >= 1
+
+
+# =========================================================================
+# latent-race regressions                                      [satellite]
+# =========================================================================
+
+@pytest.mark.parametrize("make", [
+    lambda init: ModelStore(init, ["c0"], batch_aggregation=True,
+                            max_coalesce=4),
+    lambda init: ShardedModelStore(init, ["c0"], n_shards=2,
+                                   batch_aggregation=True, max_coalesce=4),
+])
+def test_effective_round_never_regresses_during_drain(make):
+    """Regression: a drain used to pop the queue before publishing the new
+    meta, so a concurrent ``effective_round`` could watch the round count
+    dip.  ``inflight_rounds`` closes the window."""
+    rng = np.random.default_rng(31)
+    init = make_tree(rng)
+    store = make(init)
+    n = 60
+    for i in range(n):
+        s = int(rng.integers(1, 50))
+        store.handle_model_update("cluster", "c0", make_tree(rng),
+                                  ModelMeta(s, 1, 1), UpdateDelta(s, 1, 1))
+        store.handle_model_update("global", None, make_tree(rng),
+                                  ModelMeta(s, 1, 1), UpdateDelta(s, 1, 1))
+    seen = {("cluster", "c0"): [], ("global", None): []}
+    stop = threading.Event()
+
+    def reader():
+        while not stop.is_set():
+            for lk, log in seen.items():
+                log.append(store.effective_round(*lk))
+
+    t = threading.Thread(target=reader)
+    t.start()
+    for _ in range(10):
+        store.drain_all()
+    stop.set()
+    t.join(10.0)
+    assert not t.is_alive()
+    for lk, log in seen.items():
+        assert log, lk
+        assert all(b >= a for a, b in zip(log, log[1:])), \
+            f"effective_round regressed for {lk}"
+        assert log[-1] == n
+        assert store.effective_round(*lk) == n
+
+
+@pytest.mark.parametrize("make", [
+    lambda init: ModelStore(init, ["c0"], batch_aggregation=True),
+    lambda init: ShardedModelStore(init, ["c0"], n_shards=2,
+                                   batch_aggregation=True),
+])
+def test_failed_drain_requeues_batch_and_retires_inflight(make):
+    """Regression: a drain that raises mid-fold (malformed update) must not
+    strand the popped batch or leave phantom in-flight rounds inflating
+    ``effective_round`` forever."""
+    rng = np.random.default_rng(41)
+    init = make_tree(rng)
+    store = make(init)
+    good = make_tree(rng)
+    poison = {"a": jnp.zeros((9, 9)), "b": jnp.zeros(2)}   # wrong shapes
+    for lk in (("cluster", "c0"), ("global", None)):
+        store.handle_model_update(*lk, good, ModelMeta(10, 1, 5),
+                                  UpdateDelta(10, 1, 1))
+        store.handle_model_update(*lk, poison, ModelMeta(10, 1, 5),
+                                  UpdateDelta(10, 1, 1))
+        before = store.effective_round(*lk)
+        with pytest.raises(Exception):
+            store.drain(*lk)
+        assert store.pending_depth(*lk) == 2          # batch restored
+        assert store.effective_round(*lk) == before   # no phantom rounds
+        assert store.meta(*lk).round == 0             # nothing half-applied
+
+
+def test_agg_stats_consistent_snapshot_under_drains():
+    """Regression: unlocked counter reads could pair new n_fast_path with
+    old n_updates; the locked snapshot keeps derived stats in range."""
+    rng = np.random.default_rng(37)
+    init = make_tree(rng)
+    store = ModelStore(init, batch_aggregation=True, max_coalesce=2)
+    bad = []
+    stop = threading.Event()
+
+    def reader():
+        while not stop.is_set():
+            s = store.agg_stats()
+            if not (0.0 <= s["fast_path_frac"] <= 1.0) or \
+                    s["updates"] > s["enqueued"]:
+                bad.append(s)
+
+    t = threading.Thread(target=reader)
+    t.start()
+    for i in range(200):
+        s = int(rng.integers(1, 50))
+        # round = i + 1 keeps every update fast-path eligible: n_fast_path
+        # advances in lockstep with n_updates, maximizing torn-read exposure
+        store.handle_model_update("global", None, make_tree(rng),
+                                  ModelMeta(s, 1, i + 1), UpdateDelta(s, 1, 1))
+        store.drain("global")
+    stop.set()
+    t.join(10.0)
+    assert not t.is_alive()
+    assert not bad, bad[:3]
