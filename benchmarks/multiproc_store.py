@@ -1,0 +1,208 @@
+"""Multi-process federation server benchmark — threaded-K vs process-K.
+
+Scenario: the federation server's real serving mix.  W writer threads
+hammer cluster + global submits (the Algorithm-1 HandleModelUpdate hot
+path) while F fetcher threads serve ``RequestModel`` traffic — snapshot
+read + msgpack wire serialization, the dominant request type in federated
+serving (every client fetches each round; only some submit).  Drain
+workers run concurrently and are joined with a bounded timeout before the
+clock stops.  Compared at matched K:
+
+  threaded_K   ShardedModelStore — K thread shards in one process.  Folds,
+               fetch serialization, and submit bookkeeping all share one
+               GIL, so aggregation and request serving are *additive*.
+  process_K    ProcessShardedModelStore — K shard worker processes.
+               Submits pay one msgpack serialization onto the shard's SPSC
+               queue, cluster folds run in the workers, the global model
+               merges via the cross-server partial merge — so aggregation
+               *overlaps* request serving instead of stealing its GIL.
+
+Fold route: the accelerator aggregation path (``use_pallas=True`` —
+``kernels/fedavg_agg``; Pallas interpret mode on CPU hosts), the
+configuration the jax_pallas server targets.  One plain-jnp pair rides
+along for the counter-regime: with near-free jitted folds there is nothing
+to offload and the process store's transport makes it strictly slower —
+kept in the artifact so the crossover is visible, not hidden.
+
+Reported per row: wall-clock submits/s over the full mixed workload
+(drains included), fetches/s, coalesce accounting, and worker respawns
+(must be 0 in a clean run).  The headline is ``process_vs_threaded`` — the
+submit+drain throughput ratio at matched K on the kernel route.  Writes
+``BENCH_multiproc.json``; ``REPRO_BENCH_FAST=1`` for the CI-sized config.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from benchmarks.sharded_store import _make_pool, _warm_store
+except ImportError:                      # invoked as a script, not a module
+    from sharded_store import _make_pool, _warm_store
+from repro.checkpoint.msgpack_ckpt import packb
+from repro.core.aggregation import AggregationConfig, ModelMeta, UpdateDelta
+from repro.core.runtime_threaded import AsyncThreadedRuntime
+from repro.core.store import ProcessShardedModelStore, ShardedModelStore
+
+N_CLUSTERS = 16
+MAX_COALESCE = 16
+
+
+def bench_mixed(name, store, *, n_writers, per_writer, n_fetchers,
+                per_fetcher, t_params):
+    """One store under the mixed submit + fetch-serving storm."""
+    keys = [f"c{i}" for i in range(N_CLUSTERS)]
+    pools = [_make_pool(np.random.default_rng(100 + i), t_params, 8)
+             for i in range(n_writers)]
+    _warm_store(store, pools[0][0], N_CLUSTERS)
+    n_warm = store.n_updates
+
+    def writer(idx):
+        pool = pools[idx]
+        wrng = np.random.default_rng(10_000 + idx)
+        for i in range(per_writer):
+            tree = pool[i % len(pool)]
+            s = int(wrng.integers(20, 200))
+            key = keys[int(wrng.integers(N_CLUSTERS))]
+            store.handle_model_update("cluster", key, tree,
+                                      ModelMeta(s, 1, 1), UpdateDelta(s, 1, 1))
+            store.handle_model_update("global", None, tree,
+                                      ModelMeta(s, 1, 1), UpdateDelta(s, 1, 1))
+
+    def fetcher(idx):
+        frng = np.random.default_rng(20_000 + idx)
+        for _ in range(per_fetcher):
+            if frng.random() < 0.5:
+                params, _ = store.request_model("global")
+            else:
+                params, _ = store.request_model(
+                    "cluster", keys[int(frng.integers(N_CLUSTERS))])
+            packb(params)        # wire-serialize the served snapshot
+
+    rt = AsyncThreadedRuntime([], store, drain_poll=1e-4, join_timeout=180.0)
+    stop = threading.Event()
+    rt._start_drain_workers(stop)
+    threads = [threading.Thread(target=writer, args=(i,))
+               for i in range(n_writers)] + \
+              [threading.Thread(target=fetcher, args=(i,))
+               for i in range(n_fetchers)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    rt._join_drain_workers(stop)          # drains flushed before clock stops
+    wall = time.perf_counter() - t0
+
+    submits = n_writers * per_writer * 2
+    fetches = n_fetchers * per_fetcher
+    row = {
+        "store": name,
+        "shards": getattr(store, "n_shards", 0),
+        "writers": n_writers,
+        "fetchers": n_fetchers,
+        "submits": submits,
+        "fetches": fetches,
+        "wall_s": wall,
+        "submits_per_s": submits / wall,
+        "fetches_per_s": fetches / wall,
+        "coalesce_factor": store.coalesce_factor(),
+        "max_queue_depth": store.max_queue_depth,
+    }
+    stats = store.agg_stats()
+    if "global_drains" in stats:
+        row["global_drains"] = stats["global_drains"]
+        row["global_partials"] = stats["global_partials"]
+    if "respawns" in stats:
+        row["respawns"] = stats["respawns"]
+        row["drain_timeouts"] = stats["drain_timeouts"]
+    assert store.n_updates - n_warm == submits, "lost updates in benchmark"
+    return row
+
+
+def _bench_pair(tag, init, agg_cfg, k, kw):
+    keys = [f"c{i}" for i in range(N_CLUSTERS)]
+    threaded = bench_mixed(
+        f"threaded_{tag}_{k}",
+        ShardedModelStore(init, keys, agg_cfg=agg_cfg, n_shards=k,
+                          batch_aggregation=True,
+                          max_coalesce=MAX_COALESCE), **kw)
+    store = ProcessShardedModelStore(init, keys, agg_cfg=agg_cfg, n_shards=k,
+                                     batch_aggregation=True,
+                                     max_coalesce=MAX_COALESCE,
+                                     drain_timeout_s=180.0)
+    try:
+        proc = bench_mixed(f"process_{tag}_{k}", store, **kw)
+    finally:
+        store.close()
+    return threaded, proc
+
+
+def run(fast: bool = False, out_path: str = "BENCH_multiproc.json") -> dict:
+    n_writers, n_fetchers = 4, 4
+    per_writer = 60 if fast else 100
+    per_fetcher = 3_000 if fast else 5_000
+    t_params = 20_000
+    ks = (1, 4) if fast else (1, 4, 8)
+    rng = np.random.default_rng(0)
+    init = {"w": jnp.asarray(rng.standard_normal(t_params), jnp.float32)}
+    kw = dict(n_writers=n_writers, per_writer=per_writer,
+              n_fetchers=n_fetchers, per_fetcher=per_fetcher,
+              t_params=t_params)
+
+    rows = []
+    ratios = {}
+    kernel_cfg = AggregationConfig(use_pallas=True)
+    for k in ks:
+        threaded, proc = _bench_pair("kernel", init, kernel_cfg, k, kw)
+        rows += [threaded, proc]
+        ratios[f"K{k}"] = proc["submits_per_s"] / threaded["submits_per_s"]
+    # the nothing-to-offload counter-regime, one K for scale reference
+    threaded, proc = _bench_pair("jnp", init, AggregationConfig(),
+                                 max(ks), kw)
+    rows += [threaded, proc]
+    ratios[f"jnp_K{max(ks)}"] = \
+        proc["submits_per_s"] / threaded["submits_per_s"]
+
+    report = {
+        "config": {"writers": n_writers, "fetchers": n_fetchers,
+                   "per_writer": per_writer, "per_fetcher": per_fetcher,
+                   "clusters": N_CLUSTERS, "params": t_params,
+                   "max_coalesce": MAX_COALESCE, "shard_counts": list(ks),
+                   "fold_route": "kernel"},
+        "rows": rows,
+        "process_vs_threaded": ratios,
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
+
+
+def csv_rows(report: dict):
+    out = []
+    for r in report["rows"]:
+        k = r["shards"]
+        tag = "kernel" if "_kernel_" in r["store"] else "jnp"
+        key = f"K{k}" if tag == "kernel" else f"jnp_K{k}"
+        ratio = report["process_vs_threaded"].get(key, 0.0)
+        out.append((f"multiproc_store_{r['store']}",
+                    r["wall_s"] * 1e6 / max(r["submits"], 1),
+                    f"submits_per_s={r['submits_per_s']:.0f};"
+                    f"fetches_per_s={r['fetches_per_s']:.0f};"
+                    f"proc_vs_thread_{key}={ratio:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    rep = run(fast=os.environ.get("REPRO_BENCH_FAST", "0") == "1")
+    for row in rep["rows"]:
+        print(row)
+    print("process vs threaded (submits/s ratio):", {
+        k: round(v, 2) for k, v in rep["process_vs_threaded"].items()})
+    print("report -> BENCH_multiproc.json")

@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   clustering              Fig. 2 pre-training clustering
   aggregation_*           §II.D server aggregation efficiency
   sharded_store_*         sharded-store submit throughput (-> BENCH_sharded.json)
+  multiproc_store_*       threaded-K vs process-K serving mix (-> BENCH_multiproc.json)
   privatize_* / secure_*  privacy subsystem overhead (-> BENCH_privacy.json)
   fed_round_*             Algorithm 1 protocol round timing
   dryrun_*                harness §Roofline rows (if artifacts exist)
@@ -16,8 +17,6 @@ Environment knobs: REPRO_BENCH_FAST=1 shrinks the Table-II run for CI.
 from __future__ import annotations
 
 import os
-import sys
-import time
 
 
 def main() -> None:
@@ -60,6 +59,12 @@ def main() -> None:
 
     srep = sharded_store.run(fast=fast)
     rows += sharded_store.csv_rows(srep)
+
+    # ---- multi-process server serving mix (-> BENCH_multiproc.json) ---------
+    from benchmarks import multiproc_store
+
+    mrep = multiproc_store.run(fast=fast)
+    rows += multiproc_store.csv_rows(mrep)
 
     # ---- protocol round timing (Algorithm 1) --------------------------------
     from benchmarks import protocol_timing

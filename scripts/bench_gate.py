@@ -1,0 +1,217 @@
+"""CI bench-regression gate.
+
+Runs the fast (``REPRO_BENCH_FAST=1``-sized) benchmarks N times (default
+3), takes per-metric **medians** (noise tolerance on shared CI runners),
+compares them against the committed baselines in ``benchmarks/baselines/``,
+and fails on any throughput regression beyond ``--tolerance`` (default 25%).
+A merged ``bench_trajectory.json`` is always written — the CI job uploads
+it as an artifact so every PR carries its measured trajectory next to the
+committed baseline.
+
+Gated metrics are **machine-relative ratios measured within one run** (a
+sharded store's speedup over the single-lock store, the process store's
+throughput over the threaded store, the secure drain's overhead over the
+plain drain): absolute submits/s depend on the runner's CPU and would fail
+the gate whenever GitHub swaps hardware, while same-run ratios cancel the
+machine out and still catch real regressions in the optimized paths.
+Absolute throughputs ride along in the trajectory as informational rows
+(``ok: null``).  Pallas *interpret* timings are excluded — they measure
+the Python interpreter, not the server, and swing beyond any tolerance.
+
+Usage:
+  python scripts/bench_gate.py                 # gate against baselines
+  python scripts/bench_gate.py --update-baselines   # regenerate baselines
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import statistics
+import sys
+import tempfile
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO))
+sys.path.insert(0, str(REPO / "src"))
+os.environ.setdefault("REPRO_BENCH_FAST", "1")
+
+
+# ------------------------------------------------------------- extractors
+# Each returns {metric_name: (value, higher_is_better | None)} from one
+# report.  higher_is_better None = informational (recorded, never gated).
+
+def _sharded_metrics(report: dict) -> dict:
+    out = {}
+    for store, speedup in report["speedup_vs_single_lock"].items():
+        if store != "single_lock":      # identically 1.0
+            out[f"sharded/{store}/speedup_vs_single_lock"] = (speedup, True)
+    for r in report["rows"]:
+        out[f"sharded/{r['store']}/submits_per_s"] = \
+            (r["submits_per_s"], None)
+    return out
+
+
+def _multiproc_metrics(report: dict) -> dict:
+    out = {f"multiproc/process_vs_threaded/{k}": (v, True)
+           for k, v in report["process_vs_threaded"].items()}
+    for r in report["rows"]:
+        out[f"multiproc/{r['store']}/submits_per_s"] = \
+            (r["submits_per_s"], None)
+        out[f"multiproc/{r['store']}/fetches_per_s"] = \
+            (r["fetches_per_s"], None)
+    return out
+
+
+def _privacy_metrics(report: dict) -> dict:
+    out = {}
+    for row in report.get("privatize", []):
+        out[f"privacy/privatize_{row['params']}/jit_us"] = \
+            (row["jit_us"], None)
+    sd = report.get("secure_drain", {})
+    if "secure_drain_us" in sd and sd.get("plain_drain_us"):
+        out["privacy/secure_vs_plain_drain"] = \
+            (sd["secure_drain_us"] / sd["plain_drain_us"], False)
+        out["privacy/secure_drain_us"] = (sd["secure_drain_us"], None)
+        out["privacy/plain_drain_us"] = (sd["plain_drain_us"], None)
+    return out
+
+
+BENCHES = [
+    # (module name, artifact file name, extractor)
+    ("sharded_store", "BENCH_sharded.json", _sharded_metrics),
+    ("multiproc_store", "BENCH_multiproc.json", _multiproc_metrics),
+    ("privacy_overhead", "BENCH_privacy.json", _privacy_metrics),
+]
+
+# metrics whose run-to-run spread exceeds the default tolerance even as a
+# median (the serving-mix ratio depends on OS scheduling of 10+ threads and
+# K processes): gate them at 2x the tolerance — still catches the
+# catastrophic regressions this pipeline exists for (e.g. a cold-compile
+# reintroduction drops the ratio ~4x) without flaking on scheduler noise
+WIDE_TOLERANCE_PREFIXES = ("multiproc/process_vs_threaded/",)
+
+
+def _tolerance_for(metric: str, base_tol: float) -> float:
+    if metric.startswith(WIDE_TOLERANCE_PREFIXES):
+        return 2.0 * base_tol
+    return base_tol
+
+
+def run_benches(names, runs: int):
+    """Run each benchmark ``runs`` times; returns (per-metric medians,
+    last full report per bench)."""
+    import importlib
+
+    samples: dict[str, list] = {}
+    direction: dict[str, bool] = {}
+    reports: dict[str, dict] = {}
+    for mod_name, artifact, extract in BENCHES:
+        if names and mod_name not in names:
+            continue
+        mod = importlib.import_module(f"benchmarks.{mod_name}")
+        for i in range(runs):
+            with tempfile.TemporaryDirectory() as td:
+                report = mod.run(fast=True,
+                                 out_path=os.path.join(td, artifact))
+            reports[mod_name] = report
+            for metric, (value, hib) in extract(report).items():
+                samples.setdefault(metric, []).append(float(value))
+                direction[metric] = hib
+            print(f"[bench-gate] {mod_name} run {i + 1}/{runs} done",
+                  flush=True)
+    medians = {m: statistics.median(vs) for m, vs in samples.items()}
+    return medians, direction, samples, reports
+
+
+def load_baselines(baseline_dir: pathlib.Path) -> dict:
+    metrics = {}
+    for _, artifact, _ in BENCHES:
+        path = baseline_dir / artifact
+        if path.exists():
+            blob = json.loads(path.read_text())
+            metrics.update(blob.get("metrics", {}))
+    return metrics
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--runs", type=int, default=3,
+                    help="runs per benchmark; the gate compares medians")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="relative regression allowed before failing")
+    ap.add_argument("--baseline-dir", default=str(REPO / "benchmarks" /
+                                                  "baselines"))
+    ap.add_argument("--out", default="bench_trajectory.json")
+    ap.add_argument("--bench", action="append", default=None,
+                    help="limit to one benchmark module (repeatable)")
+    ap.add_argument("--update-baselines", action="store_true",
+                    help="write the measured medians as the new baselines "
+                         "instead of gating")
+    args = ap.parse_args()
+
+    medians, direction, samples, reports = run_benches(args.bench, args.runs)
+    baseline_dir = pathlib.Path(args.baseline_dir)
+
+    if args.update_baselines:
+        baseline_dir.mkdir(parents=True, exist_ok=True)
+        for mod_name, artifact, extract in BENCHES:
+            if args.bench and mod_name not in args.bench:
+                continue
+            metrics = {m: medians[m]
+                       for m in extract(reports[mod_name])}
+            blob = {"source": f"median of {args.runs} REPRO_BENCH_FAST=1 "
+                              f"runs (scripts/bench_gate.py)",
+                    "metrics": metrics}
+            (baseline_dir / artifact).write_text(json.dumps(blob, indent=2)
+                                                 + "\n")
+            print(f"[bench-gate] wrote {baseline_dir / artifact}")
+        return 0
+
+    baselines = load_baselines(baseline_dir)
+    results, failures = {}, []
+    for metric, median in sorted(medians.items()):
+        base = baselines.get(metric)
+        hib = direction[metric]
+        entry = {"median": median, "samples": samples[metric],
+                 "baseline": base, "higher_is_better": hib}
+        if hib is not None and base is not None and base > 0:
+            tol = _tolerance_for(metric, args.tolerance)
+            ratio = median / base
+            entry["ratio_vs_baseline"] = ratio
+            entry["tolerance"] = tol
+            ok = (ratio >= 1.0 - tol if hib else ratio <= 1.0 + tol)
+            entry["ok"] = ok
+            if not ok:
+                failures.append(
+                    f"{metric}: median {median:.1f} vs baseline {base:.1f} "
+                    f"(ratio {ratio:.2f}, tol {tol:.0%}, "
+                    f"{'higher' if hib else 'lower'} is better)")
+        else:
+            entry["ok"] = None        # no baseline: informational only
+        results[metric] = entry
+
+    trajectory = {
+        "runs_per_bench": args.runs,
+        "tolerance": args.tolerance,
+        "results": results,
+        "reports": reports,
+        "failures": failures,
+    }
+    pathlib.Path(args.out).write_text(json.dumps(trajectory, indent=2) + "\n")
+    print(f"[bench-gate] trajectory -> {args.out} "
+          f"({len(results)} metrics, {len(failures)} regressions)")
+    if failures:
+        print("[bench-gate] FAIL — throughput regressions beyond "
+              f"{args.tolerance:.0%}:")
+        for f in failures:
+            print("  ", f)
+        return 1
+    print("[bench-gate] OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

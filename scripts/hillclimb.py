@@ -12,7 +12,6 @@ pairs; results append to the JSONL consumed by EXPERIMENTS.md §Perf.
 
 import argparse
 import json
-import sys
 
 VARIANTS = {}
 

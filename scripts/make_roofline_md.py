@@ -1,7 +1,6 @@
 """Generate the EXPERIMENTS.md §Roofline markdown table from dry-run artifacts."""
 
 import json
-import sys
 
 NOTES = {
     "compute": "more model parallelism (or fewer remat recomputes) moves it down",

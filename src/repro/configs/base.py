@@ -9,7 +9,7 @@ never touch jax at import time.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Sequence
 
 # ---------------------------------------------------------------------------

@@ -3,7 +3,7 @@
 history + 24 h weather forecast -> 96 quarter-hour power predictions.
 """
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Sequence
 
 FEATURES: Sequence[str] = (

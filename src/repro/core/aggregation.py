@@ -14,8 +14,7 @@ other in tests.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
-from typing import Optional
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -50,6 +49,22 @@ class UpdateDelta:
 class AggregationConfig:
     use_pallas: bool = False          # route the weighted sum through the kernel
     sequential_fast_path: bool = True
+
+
+def _pad_pow2(sets, ws):
+    """Pad an N-way weighted sum to the next power-of-two arity with
+    zero-weight copies of the first set.  A zero-weight term contributes an
+    exact ``0.0f`` to the f32 accumulation, so the result is unchanged —
+    but bucketing arities keeps the ``_weighted_sum_n`` jit cache at
+    O(log N) entries instead of one fresh XLA compile per distinct queue
+    depth, which matters most for shard worker processes (each owns a cold
+    private cache; see ``benchmarks/multiproc_store.py``)."""
+    n = len(sets)
+    bucket = 1 << (n - 1).bit_length()
+    if bucket == n:
+        return list(sets), list(ws)
+    pad = bucket - n
+    return list(sets) + [sets[0]] * pad, list(ws) + [0.0] * pad
 
 
 @jax.jit
@@ -108,13 +123,14 @@ def multi_aggregate(param_sets, sample_counts, cfg: AggregationConfig = Aggregat
         ws = [1.0 / len(sample_counts)] * len(sample_counts)
     else:
         ws = [c / total for c in sample_counts]
+    if len(param_sets) == 1:
+        return param_sets[0]
+    sets, ws = _pad_pow2(list(param_sets), ws)
     if cfg.use_pallas:
         from repro.kernels.fedavg_agg.ops import aggregate_pytrees
 
-        return aggregate_pytrees(list(param_sets), ws)
-    if len(param_sets) == 1:
-        return param_sets[0]
-    return _weighted_sum_n(list(param_sets), jnp.asarray(ws, jnp.float32))
+        return aggregate_pytrees(sets, ws)
+    return _weighted_sum_n(sets, jnp.asarray(ws, jnp.float32))
 
 
 @dataclass(frozen=True)
@@ -207,6 +223,34 @@ def coalesced_aggregate(base_params, base_meta: ModelMeta, updates,
                           len(updates), len(sets), plan.n_fast_path)
 
 
+def chunked_convex_reduce(entries, max_width: int,
+                          cfg: AggregationConfig = AggregationConfig()):
+    """Reduce a ``(params, mass)`` list so every fused sum is at most
+    ``max_width`` wide; returns a (possibly shorter) ``(params, mass)``
+    list.  Nested mass-weighted convex averages recombine exactly (the same
+    telescoping the flat fold relies on), so chunk boundaries are free —
+    this is the shared arity bound of the thread-sharded two-level fold and
+    the process-sharded workers' ``greduce`` partial reduction, keeping the
+    jit/Pallas N-way cache small everywhere.  ``max_width <= 0`` disables
+    chunking (the list is returned unchanged)."""
+    # chunks of one entry never shrink the list — a width of 1 must still
+    # fold pairs to make progress
+    width = max(max_width, 2) if max_width > 0 else 0
+    if width <= 0 or len(entries) <= width:
+        return list(entries)
+    out = []
+    for i in range(0, len(entries), width):
+        chunk = entries[i:i + width]
+        mass = sum(m for _, m in chunk)
+        if mass == 0.0:
+            continue
+        p = (chunk[0][0] if len(chunk) == 1 else
+             multi_aggregate([p for p, _ in chunk],
+                             [m for _, m in chunk], cfg))
+        out.append((p, mass))
+    return chunked_convex_reduce(out, max_width, cfg)
+
+
 def two_level_coalesced_aggregate(base_params, base_meta: ModelMeta,
                                   shard_batches,
                                   cfg: AggregationConfig = AggregationConfig(),
@@ -260,44 +304,23 @@ def two_level_coalesced_aggregate(base_params, base_meta: ModelMeta,
         (p, _), = next(iter(per_shard.values()))
         return CoalesceResult(p, plan.meta, len(flat), 1, plan.n_fast_path)
 
-    # chunks of one entry never shrink the list — a width of 1 must still
-    # fold pairs to make progress
-    width = max(max_width, 2) if max_width > 0 else 0
-
-    def reduce_chunked(entries):
-        """(params, mass) list -> same, every fused sum <= width wide.
-        Nested mass-weighted convex averages recombine exactly (the same
-        telescoping the flat fold relies on), so chunk boundaries are free."""
-        if width <= 0 or len(entries) <= width:
-            return entries
-        out = []
-        for i in range(0, len(entries), width):
-            chunk = entries[i:i + width]
-            mass = sum(m for _, m in chunk)
-            if mass == 0.0:
-                continue
-            p = (chunk[0][0] if len(chunk) == 1 else
-                 multi_aggregate([p for p, _ in chunk],
-                                 [m for _, m in chunk], cfg))
-            out.append((p, mass))
-        return reduce_chunked(out)
-
     partials = []        # (partial_params, mass) — convex within, mass to merge
     for k in sorted(per_shard):
-        for p, mass in reduce_chunked(per_shard[k]):
+        for p, mass in chunked_convex_reduce(per_shard[k], max_width, cfg):
             if mass != 0.0:
                 partials.append((p, mass))
     # the merge itself is arity-bounded the same way (base rides along as a
     # mass-weighted entry, so deep multi-shard backlogs never widen one sum)
     entries = ([(base_params, base_w)] if base_w != 0.0 else []) + partials
     n_sets = len(entries)
+    width = max(max_width, 2) if max_width > 0 else 0
     while len(entries) > 1:
         if width <= 0 or len(entries) <= width:
             entries = [(multi_aggregate([p for p, _ in entries],
                                         [m for _, m in entries], cfg),
                         sum(m for _, m in entries))]
         else:
-            entries = reduce_chunked(entries)
+            entries = chunked_convex_reduce(entries, max_width, cfg)
     return CoalesceResult(entries[0][0], plan.meta, len(flat), n_sets,
                           plan.n_fast_path, n_partials=len(partials))
 
@@ -333,10 +356,12 @@ def secure_coalesced_aggregate(base_params, base_meta: ModelMeta,
     if correction is not None:
         sets.append(correction)
         ws.append(-inv)
+    n_sets = len(sets)
+    sets, ws = _pad_pow2(sets, ws)
     if cfg.use_pallas:
         from repro.kernels.fedavg_agg.ops import aggregate_pytrees
 
         params = aggregate_pytrees(sets, ws)
     else:
         params = _weighted_sum_n(sets, jnp.asarray(ws, jnp.float32))
-    return CoalesceResult(params, meta, len(masked_updates), len(sets), 0)
+    return CoalesceResult(params, meta, len(masked_updates), n_sets, 0)

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.optim.optimizers import Optimizer
-from repro.sharding.logical import Rules, constrain
+from repro.sharding.logical import Rules
 from repro.training.train_step import TrainState, build_train_step
 
 

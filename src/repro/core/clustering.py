@@ -10,7 +10,7 @@ metrics.  Noise points get label -1 and fall back to the global model only.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional
 
 import numpy as np

@@ -10,8 +10,8 @@ a runtime into one object — the library's main entry point.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Optional
+from dataclasses import dataclass
+from typing import Optional
 
 import numpy as np
 
@@ -21,7 +21,11 @@ from repro.core.predict_evolve import ClusterSpace, PredictEvolve
 from repro.core.protocol import Client, ClientSpec
 from repro.core.runtime_sim import AsyncSimRuntime
 from repro.core.runtime_threaded import AsyncThreadedRuntime
-from repro.core.store import ModelStore, ShardedModelStore
+from repro.core.store import (
+    ModelStore,
+    ProcessShardedModelStore,
+    ShardedModelStore,
+)
 from repro.privacy.accountant import RDPAccountant
 from repro.privacy.dp import DPConfig, DPPrivatizer
 from repro.privacy.secure_agg import PairwiseMasker
@@ -52,6 +56,17 @@ class FedCCLConfig:
     # K per-cluster shards (per-shard drain workers in the threaded runtime,
     # two-level global fold — see repro.core.store.ShardedModelStore)
     server_shards: int = 0
+    # multi-process federation server: K >= 1 promotes each shard to a
+    # worker *process* (ProcessShardedModelStore — submits cross per-shard
+    # msgpack queues, drains fold off-GIL in the workers, the global model
+    # merges two-level in the parent).  Takes precedence over server_shards.
+    # The sim runtime uses the deterministic in-process emulation; the
+    # threaded runtime spawns real workers with crash detection + respawn.
+    server_processes: int = 0
+    # bounded drain deadline: worker-reply waits in the process store and
+    # drain-worker joins in the threaded runtime; expiries surface as
+    # agg_stats()["drain_timeouts"] instead of silent partial drains
+    drain_timeout_s: float = 30.0
     # ---- privacy subsystem (repro.privacy) --------------------------------
     dp_clip: Optional[float] = None  # L2 clip of update deltas; None = DP off
     dp_noise_multiplier: float = 1.0 # noise std = multiplier * dp_clip
@@ -73,16 +88,25 @@ class FedCCL:
         self.accountant = (RDPAccountant(target_delta=cfg.target_delta)
                            if cfg.dp_clip is not None else None)
         agg_cfg = AggregationConfig(use_pallas=cfg.use_pallas_agg)
-        if cfg.server_shards > 0:
+        if cfg.server_processes > 0:
+            self.store = ProcessShardedModelStore(
+                init_params, agg_cfg=agg_cfg, n_shards=cfg.server_processes,
+                batch_aggregation=cfg.batch_aggregation,
+                max_coalesce=cfg.max_coalesce, masker=self.masker,
+                drain_timeout_s=cfg.drain_timeout_s,
+                inprocess=(cfg.runtime == "sim"))
+        elif cfg.server_shards > 0:
             self.store = ShardedModelStore(
                 init_params, agg_cfg=agg_cfg, n_shards=cfg.server_shards,
                 batch_aggregation=cfg.batch_aggregation,
-                max_coalesce=cfg.max_coalesce, masker=self.masker)
+                max_coalesce=cfg.max_coalesce, masker=self.masker,
+                drain_timeout_s=cfg.drain_timeout_s)
         else:
             self.store = ModelStore(
                 init_params, agg_cfg=agg_cfg,
                 batch_aggregation=cfg.batch_aggregation,
-                max_coalesce=cfg.max_coalesce, masker=self.masker)
+                max_coalesce=cfg.max_coalesce, masker=self.masker,
+                drain_timeout_s=cfg.drain_timeout_s)
         self.spaces = [
             ClusterSpace(s.name, IncrementalDBSCAN(s.eps, s.min_samples, s.metric))
             for s in cfg.spaces]
@@ -127,6 +151,15 @@ class FedCCL:
         rt.run(rounds)
         self._runtime = rt
         return rt.stats()
+
+    def shutdown(self):
+        """Release server resources: a process-sharded store stops its
+        worker processes with a bounded join (no-op for in-thread stores).
+        Model state stays readable — the parent keeps authoritative
+        mirrors of every tier."""
+        close = getattr(self.store, "close", None)
+        if close is not None:
+            close()
 
     # ----------------------------------------------------- Predict & Evolve
     def join(self, spec: ClientSpec) -> tuple[list[str], object]:

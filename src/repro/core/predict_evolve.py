@@ -10,7 +10,7 @@ protocol participant, refining the cluster models it belongs to.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 import numpy as np

@@ -18,7 +18,6 @@ from __future__ import annotations
 import heapq
 import itertools
 from dataclasses import dataclass, field
-from typing import Optional
 
 import numpy as np
 
@@ -189,6 +188,11 @@ class AsyncSimRuntime:
             out["shards"] = sharded["shards"]
             out["global_drains"] = sharded["global_drains"]
             out["shard_enqueued"] = sharded["shard_enqueued"]
+            if "respawns" in sharded:
+                # process-sharded store (in-process emulation under the sim)
+                out["processes"] = sharded["processes"]
+                out["respawns"] = sharded["respawns"]
+                out["drain_timeouts"] = sharded["drain_timeouts"]
         if self.store.masker is not None:
             out["secure_rounds"] = self.store.n_secure_rounds
             out["secure_recoveries"] = self.store.n_secure_recoveries

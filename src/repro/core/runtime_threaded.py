@@ -14,8 +14,16 @@ With a ``ShardedModelStore`` the single server drain thread becomes one
 worker *per shard* (each sweeping only its shard's cluster models) plus one
 global worker performing the two-level global fold — drains of different
 clusters run concurrently and share no lock.  Shutdown is bounded: every
-worker is joined with ``join_timeout`` and a stuck worker raises instead of
-hanging the run.
+worker is joined within the store's ``drain_timeout_s`` (overridable via
+``join_timeout``) and a stuck worker counts a drain timeout on the store
+(``agg_stats()["drain_timeouts"]``) and raises instead of hanging the run.
+
+With a ``ProcessShardedModelStore`` the same drain-worker layout becomes a
+**process pool pump**: each per-shard thread's ``drain_shard`` beat is one
+RPC that makes the shard's worker *process* fold its queues off-GIL, and
+the global worker's ``drain_global`` runs the cross-server two-level merge
+in the parent.  Worker crash detection and respawn (journal replay) live in
+the store's RPC layer, so the pump threads stay oblivious to failures.
 
 With a secure-aggregation masker on the store the runtime switches to
 full-round drains: client threads synchronize on a per-round barrier whose
@@ -28,6 +36,7 @@ from __future__ import annotations
 
 import threading
 import time
+from typing import Optional
 
 from repro.core.protocol import Client
 from repro.core.store import ModelStore
@@ -36,13 +45,17 @@ from repro.core.store import ModelStore
 class AsyncThreadedRuntime:
     def __init__(self, clients: list[Client], store: ModelStore,
                  rounds_per_client: int = 2, stagger: float = 0.0,
-                 drain_poll: float = 0.001, join_timeout: float = 30.0):
+                 drain_poll: float = 0.001,
+                 join_timeout: Optional[float] = None):
         self.clients = clients
         self.store = store
         self.rounds = rounds_per_client
         self.stagger = stagger
         self.drain_poll = drain_poll
-        self.join_timeout = join_timeout
+        # bounded shutdown deadline: the store's drain_timeout_s
+        # (FedCCLConfig.drain_timeout_s) unless explicitly overridden
+        self.join_timeout = (store.drain_timeout_s if join_timeout is None
+                             else join_timeout)
         self.errors: list[BaseException] = []
         self.drain_workers: list[threading.Thread] = []
 
@@ -76,9 +89,14 @@ class AsyncThreadedRuntime:
             self.errors.append(e)
 
     def _start_drain_workers(self, stop: threading.Event):
-        """Sharded store: one worker per shard + one for the global fold;
-        single-queue store: the classic one-thread ``drain_all`` sweep."""
-        if hasattr(self.store, "drain_shard"):
+        """Thread-sharded store: one pump per shard + one for the two-level
+        global fold.  Process-sharded store: ONE pump whose ``drain_all``
+        beat scatter-gathers a concurrent fold across every worker process
+        (more parent pumps would just contend for the GIL the workers
+        escaped).  Single-queue store: the classic ``drain_all`` sweep."""
+        if getattr(self.store, "scatter_drains", False):
+            fns = [("process-pump", self.store.drain_all)]
+        elif hasattr(self.store, "drain_shard"):
             fns = [(f"drain-shard-{k}",
                     (lambda k=k: self.store.drain_shard(k)))
                    for k in range(self.store.n_shards)]
@@ -99,6 +117,9 @@ class AsyncThreadedRuntime:
             if t.is_alive():
                 stuck.append(t.name)
         if stuck:
+            # never silently return a partial drain: the expiry is counted
+            # on the store (agg_stats()["drain_timeouts"]) and surfaced
+            self.store._count_drain_timeout()
             raise RuntimeError(
                 f"drain workers failed to stop within {self.join_timeout}s: "
                 f"{stuck}")

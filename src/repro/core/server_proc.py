@@ -1,0 +1,506 @@
+"""Shard servers as worker processes — the multi-*server* aggregation tier.
+
+``ProcessShardedModelStore`` (``repro.core.store``) promotes each shard of
+the sharded server to an OS **process** so aggregation escapes the GIL: the
+parent serializes submits onto per-shard SPSC command queues (producer: the
+parent, guarded; consumer: the one worker), each worker owns its shard's
+cluster models + pending queues and folds them with the exact same
+``coalesced_aggregate`` the in-thread stores use, and drain RPCs ship the
+folded ``(params, meta)`` back for the parent's authoritative mirror.
+
+This module holds the pieces that must be importable from a spawned child:
+
+  * the **wire codec** — msgpack with the checkpoint array ext codec
+    (``repro.checkpoint.msgpack_ckpt.packb``/``unpackb``), so the update
+    payloads crossing process boundaries use the identical format models are
+    checkpointed in;
+  * ``ShardWorker`` — the executable shard-server logic, process-agnostic:
+    the spawned main loop drives it in real mode, and the deterministic
+    in-process emulation (used by ``runtime_sim`` and the fast tests) calls
+    it synchronously through the same serialized messages;
+  * ``ProcessWorkerHandle`` / ``InprocessWorkerHandle`` — the parent-side
+    transport pair, sharing one interface: ``put`` (fire-and-forget
+    submit), ``rpc`` (command awaiting one reply, with bounded timeout +
+    liveness checks), ``kill``/``stop``.
+
+Crash safety is the *parent's* job (see the store's journal): workers are
+intentionally stateless beyond their working copies — every update a worker
+holds is journaled in the parent until the drain that folded it is acked, so
+a killed worker is respawned from the parent's mirrors and its journal
+replayed without losing updates or double-counting rounds.
+"""
+
+from __future__ import annotations
+
+import multiprocessing as mp
+import queue as _queue
+import threading
+import time
+from collections import deque
+
+from repro.checkpoint.msgpack_ckpt import packb
+from repro.checkpoint.msgpack_ckpt import unpackb_np as unpackb
+
+# commands that produce exactly one reply; everything else is fire-and-forget
+REPLY_OPS = frozenset({"drain", "drain_shard", "gmeta", "greduce", "sdrain",
+                       "ping", "stop"})
+
+
+class WorkerUnavailable(RuntimeError):
+    """The shard worker died (or was never reachable) mid-command."""
+
+
+class WorkerTimeout(WorkerUnavailable):
+    """The shard worker is alive but missed the bounded reply deadline."""
+
+
+# ------------------------------------------------------------------ wire fmt
+
+def meta_to_wire(meta) -> list:
+    return [meta.samples_learned, meta.epochs_learned, meta.round]
+
+
+def meta_from_wire(w):
+    from repro.core.aggregation import ModelMeta
+
+    return ModelMeta(int(w[0]), int(w[1]), int(w[2]))
+
+
+def delta_to_wire(delta) -> list:
+    return [delta.samples_learned, delta.epochs_learned, delta.rounds]
+
+
+def delta_from_wire(w):
+    from repro.core.aggregation import UpdateDelta
+
+    return UpdateDelta(int(w[0]), int(w[1]), int(w[2]))
+
+
+def make_seed_blob(shard_records, max_coalesce: int, agg_cfg,
+                   masker) -> bytes:
+    """Everything a fresh worker needs, in wire format: its owned cluster
+    records, the fold config, and the masker parameters (the masker must
+    live worker-side — secure rounds are model-local per server process)."""
+    return packb({
+        "records": [[key, params, meta_to_wire(meta)]
+                    for key, params, meta in shard_records],
+        "max_coalesce": int(max_coalesce),
+        "agg": [bool(agg_cfg.use_pallas), bool(agg_cfg.sequential_fast_path)],
+        "masker": (None if masker is None
+                   else [int(masker.seed), float(masker.mask_scale)]),
+    })
+
+
+# ------------------------------------------------------------------- worker
+
+class ShardWorker:
+    """One shard server's executable logic.
+
+    Owns working copies of the shard's cluster models, their pending queues,
+    their secure-round buckets, and the shard's slice of the global queue.
+    Folds reuse ``coalesced_aggregate`` byte-for-byte with the in-thread
+    stores, so the Algorithm-2 semantics cannot drift between topologies.
+    Single-threaded by construction (one consumer per SPSC queue), so it
+    needs no locks.
+    """
+
+    def __init__(self, shard_idx: int, seed_blob: bytes):
+        from repro.core.aggregation import AggregationConfig
+
+        blob = unpackb(seed_blob)
+        self.idx = shard_idx
+        self.max_coalesce = max(int(blob["max_coalesce"]), 1)
+        use_pallas, fast_path = blob["agg"]
+        self.agg_cfg = AggregationConfig(use_pallas=use_pallas,
+                                         sequential_fast_path=fast_path)
+        self.masker = None
+        if blob["masker"] is not None:
+            from repro.privacy.secure_agg import PairwiseMasker
+
+            seed, scale = blob["masker"]
+            self.masker = PairwiseMasker(seed=seed, mask_scale=scale)
+        # key -> {"params", "meta", "pending": deque[(seq, p, m, d)],
+        #         "secure": {round_id: [(seq, client_id, masked, delta)]}}
+        self.records: dict[str, dict] = {}
+        for key, params, meta_w in blob["records"]:
+            self._ensure(key, params, meta_from_wire(meta_w))
+        self.gslice: deque = deque()       # (seq, params, meta, delta)
+        # errors raised by fire-and-forget commands (which must not emit
+        # unpaired replies) are deferred and surfaced as the error reply of
+        # the NEXT replying command — never swallowed: the journaled update
+        # they stranded stays unacked, so a silent drop here would inflate
+        # effective_round/pending_depth forever
+        self.pending_errors: list[str] = []
+
+    def _ensure(self, key: str, params, meta=None):
+        from repro.core.aggregation import ModelMeta
+
+        if key not in self.records:
+            self.records[key] = {"params": params,
+                                 "meta": meta if meta is not None
+                                 else ModelMeta(),
+                                 "pending": deque(), "secure": {}}
+
+    # --------------------------------------------------------------- dispatch
+    def handle(self, msg):
+        """One decoded command -> reply tuple (or None for fire-and-forget).
+        The real worker main loop and the in-process emulation both route
+        every message through here, after the identical codec round trip."""
+        op = msg[0]
+        if op in REPLY_OPS and self.pending_errors:
+            errs = "; ".join(self.pending_errors)
+            self.pending_errors = []
+            return ["error", op, f"deferred submit-path errors: {errs}"]
+        if op == "batch":
+            # one queue message carrying many fire-and-forget commands: the
+            # parent coalesces submits per shard because the per-message
+            # transport cost (queue wakeups + pipe round trips) dwarfs the
+            # marginal bytes — see ProcessShardedModelStore._flush_outbox.
+            # One poison item must not strand its batchmates: per-item
+            # errors are deferred, the rest of the batch still lands.
+            for raw in msg[1]:
+                try:
+                    self.handle(unpackb(raw))
+                except BaseException as e:
+                    self.pending_errors.append(
+                        f"batch-item: {type(e).__name__}: {e}")
+            return None
+        if op == "sub":
+            _, seq, key, params, meta_w, delta_w = msg
+            self.records[key]["pending"].append(
+                (seq, params, meta_from_wire(meta_w), delta_from_wire(delta_w)))
+            return None
+        if op == "gsub":
+            _, seq, params, meta_w, delta_w = msg
+            self.gslice.append((seq, params, meta_from_wire(meta_w),
+                                delta_from_wire(delta_w)))
+            return None
+        if op == "ssub":
+            _, seq, key, round_id, client_id, masked, delta_w = msg
+            bucket = self.records[key]["secure"].setdefault(int(round_id), [])
+            bucket.append((seq, client_id, masked, delta_from_wire(delta_w)))
+            return None
+        if op == "ensure":
+            _, key, params = msg
+            self._ensure(key, params)
+            return None
+        if op == "drain":
+            return self._drain_key(msg[1])
+        if op == "drain_shard":
+            out = []
+            for key in self.records:
+                r = self._drain_key(key)
+                if r[0] == "error":
+                    return r           # fold error fails the whole beat
+                out.append(r[1:])
+            return ["shard_drained", out]
+        if op == "gmeta":
+            # metadata snapshot of the global slice — the cheap half of the
+            # cross-server merge (the parent plans over metas; params stay
+            # here until greduce folds them into one partial)
+            return ["gmetas", [[seq, meta_to_wire(m), delta_to_wire(d)]
+                               for seq, _, m, d in self.gslice]]
+        if op == "greduce":
+            return self._greduce(msg[1])
+        if op == "sdrain":
+            _, key, round_id, expected_ids = msg
+            return self._drain_secure(key, int(round_id), expected_ids)
+        if op == "ping":
+            return ["pong", self.idx, sorted(self.records)]
+        raise ValueError(f"unknown worker op {op!r}")
+
+    # ----------------------------------------------------------------- drains
+    def _drain_key(self, key: str):
+        """Fold every pending update for one model, ``max_coalesce`` at a
+        time — the worker-side twin of ``_drain_record_once`` loops.  On a
+        fold error the popped batch is restored at the queue head so the
+        journaled updates stay consistent with the worker's queue."""
+        from repro.core.aggregation import coalesced_aggregate
+
+        rec = self.records[key]
+        folded = fast = batches = 0
+        acked: list[int] = []
+        while rec["pending"]:
+            take = min(len(rec["pending"]), self.max_coalesce)
+            batch = [rec["pending"].popleft() for _ in range(take)]
+            try:
+                res = coalesced_aggregate(
+                    rec["params"], rec["meta"],
+                    [(p, m, d) for _, p, m, d in batch], self.agg_cfg)
+            except BaseException as e:
+                rec["pending"].extendleft(reversed(batch))
+                return ["error", key, f"{type(e).__name__}: {e}"]
+            rec["params"], rec["meta"] = res.params, res.meta
+            folded += res.n_folded
+            fast += res.n_fast_path
+            batches += 1
+            acked.extend(seq for seq, _, _, _ in batch)
+        if not folded:
+            return ["drained", key, 0, 0, 0, [], None, None]
+        return ["drained", key, folded, fast, batches, acked,
+                rec["params"], meta_to_wire(rec["meta"])]
+
+    def _greduce(self, pairs):
+        """Reduce this server's slice members to one convex partial.
+
+        ``pairs`` is ``[[seq, weight], ...]`` — the planned telescoped
+        coefficients (``plan_coalesce`` run parent-side over every server's
+        metas) for exactly the seqs of the parent's gmeta snapshot.  The
+        selected members leave the slice (newer arrivals stay for the next
+        drain); the nonzero-weight survivors fold through the unchanged
+        ``multi_aggregate``, whose internal normalization makes the result
+        the convex partial ``sum_i (w_i / W) p_i`` with mass ``W = sum w_i``
+        — the parent's mass-weighted merge of partials then reassembles the
+        exact flat Algorithm-2 sum (same algebra as
+        ``two_level_coalesced_aggregate``, distributed)."""
+        from repro.core.aggregation import (
+            chunked_convex_reduce,
+            multi_aggregate,
+        )
+
+        want = {int(s): float(w) for s, w in pairs}
+        keep = deque()
+        take = []
+        for item in self.gslice:
+            (take if item[0] in want else keep).append(item)
+        entries = [(p, want[seq]) for seq, p, _, _ in take
+                   if want[seq] != 0.0]
+        partial, mass = None, 0.0
+        if entries:
+            try:
+                # arity-bounded exactly like the thread-sharded fold: every
+                # fused sum stays <= max_coalesce wide, so the worker's jit
+                # cache sees only the warm power-of-two buckets
+                entries = chunked_convex_reduce(entries, self.max_coalesce,
+                                                self.agg_cfg)
+                partial = (entries[0][0] if len(entries) == 1 else
+                           multi_aggregate([p for p, _ in entries],
+                                           [m for _, m in entries],
+                                           self.agg_cfg))
+            except BaseException as e:
+                return ["error", "greduce", f"{type(e).__name__}: {e}"]
+            mass = float(sum(m for _, m in entries))
+        self.gslice = keep
+        return ["gpartial", [seq for seq, _, _, _ in take], mass, partial]
+
+    def _drain_secure(self, key: str, round_id: int, expected_ids):
+        """Model-local secure full-round fold: pairwise masks cancel inside
+        one fused sum that never leaves this worker; dropouts are recovered
+        from the worker's own masker (seed reconstruction)."""
+        from repro.core.aggregation import secure_coalesced_aggregate
+
+        rec = self.records[key]
+        batch = rec["secure"].pop(round_id, [])
+        if not batch:
+            return ["sdrained", key, 0, 0, [], None, None]
+        try:
+            submitted = {cid for _, cid, _, _ in batch}
+            missing = sorted(set(expected_ids) - submitted)
+            correction = None
+            if missing:
+                if self.masker is None:
+                    raise RuntimeError(
+                        "secure round has dropouts but no masker is attached "
+                        "for seed reconstruction")
+                correction = self.masker.reconstruct(
+                    rec["params"], missing, sorted(submitted), round_id, key)
+            res = secure_coalesced_aggregate(
+                rec["params"], rec["meta"],
+                [(masked, d) for _, _, masked, d in batch],
+                self.agg_cfg, correction)
+        except BaseException as e:
+            rec["secure"][round_id] = batch + rec["secure"].get(round_id, [])
+            return ["error", key, f"{type(e).__name__}: {e}"]
+        rec["params"], rec["meta"] = res.params, res.meta
+        return ["sdrained", key, len(batch), len(missing),
+                [seq for seq, _, _, _ in batch],
+                rec["params"], meta_to_wire(rec["meta"])]
+
+
+def worker_main(shard_idx: int, cmd_q, rsp_q, seed_blob: bytes):
+    """Spawned shard-server entry point: decode, dispatch, reply.  Errors on
+    fire-and-forget commands must not produce unpaired replies (RPC pairing
+    is positional), so they are deferred into ``pending_errors`` and become
+    the error reply of the next replying command."""
+    worker = ShardWorker(shard_idx, seed_blob)
+    while True:
+        raw = cmd_q.get()
+        msg = unpackb(raw)
+        op = msg[0]
+        if op == "stop":
+            rsp_q.put(packb(["stopped", shard_idx]))
+            return
+        try:
+            reply = worker.handle(msg)
+        except BaseException as e:
+            reply = ["error", op, f"{type(e).__name__}: {e}"]
+            if op not in REPLY_OPS:
+                worker.pending_errors.append(f"{op}: {type(e).__name__}: {e}")
+        if op in REPLY_OPS:
+            rsp_q.put(packb(reply))
+
+
+# ----------------------------------------------------------------- transports
+
+class ProcessWorkerHandle:
+    """Parent-side endpoint of one spawned shard server.
+
+    ``cmd_q`` is SPSC in spirit: many parent threads may ``put`` (mp.Queue
+    is thread-safe and buffers through its feeder thread, so submits never
+    block on a busy worker), exactly one worker consumes.  Replying
+    commands pair positionally, so callers serialize them per shard (the
+    store's ``_ProcShard.rpc_lock``).
+    """
+
+    def __init__(self, shard_idx: int, seed_blob: bytes):
+        self.idx = shard_idx
+        self.spawns = 0
+        self._ctx = mp.get_context("spawn")   # fork-after-jax is unsafe
+        self._start(seed_blob)
+
+    def _start(self, seed_blob: bytes):
+        self.cmd_q = self._ctx.Queue()
+        self.rsp_q = self._ctx.Queue()
+        self.proc = self._ctx.Process(
+            target=worker_main,
+            args=(self.idx, self.cmd_q, self.rsp_q, seed_blob),
+            daemon=True, name=f"fedccl-shard-{self.idx}")
+        self.proc.start()
+        self.spawns += 1
+
+    def put(self, raw: bytes):
+        self.cmd_q.put(raw)
+
+    def rpc(self, raw: bytes, timeout: float) -> bytes:
+        """Send one replying command and await its reply.  Caller holds
+        the shard's rpc lock."""
+        self.cmd_q.put(raw)
+        return self.rpc_recv(timeout)
+
+    def rpc_recv(self, timeout: float) -> bytes:
+        """Await one reply for an already-sent command (the scatter half of
+        a scatter-gather drain sends first, gathers later), polling
+        liveness: a dead worker raises ``WorkerUnavailable`` immediately
+        instead of burning the whole deadline; a live-but-silent one raises
+        ``WorkerTimeout`` at the deadline.  Caller holds the shard's rpc
+        lock."""
+        deadline = time.monotonic() + timeout
+        while True:
+            remaining = deadline - time.monotonic()
+            try:
+                return self.rsp_q.get(timeout=max(min(remaining, 0.2), 0.01))
+            except _queue.Empty:
+                if not self.proc.is_alive():
+                    raise WorkerUnavailable(
+                        f"shard worker {self.idx} died "
+                        f"(exitcode {self.proc.exitcode})") from None
+                if remaining <= 0:
+                    raise WorkerTimeout(
+                        f"shard worker {self.idx} missed the {timeout:.1f}s "
+                        f"drain deadline") from None
+
+    def restart(self, seed_blob: bytes):
+        """Replace a dead/stuck worker with a fresh one on fresh queues
+        (stale buffered commands and unpaired replies die with the old
+        pair).  Caller replays the journal right after."""
+        self.discard()
+        self._start(seed_blob)
+
+    def alive(self) -> bool:
+        return self.proc.is_alive()
+
+    def kill(self):
+        """SIGKILL — the crash-injection hook used by the respawn tests."""
+        self.proc.kill()
+        self.proc.join(5.0)
+
+    def discard(self):
+        """Tear down without ceremony: the worker is dead, stuck, or being
+        replaced — SIGKILL works even on a SIGSTOPped process, where a
+        polite SIGTERM would sit queued behind the stop forever."""
+        if self.proc.is_alive():
+            self.proc.kill()
+            self.proc.join(5.0)
+        for q in (self.cmd_q, self.rsp_q):
+            q.close()
+            q.cancel_join_thread()
+
+    def stop(self, timeout: float):
+        """Graceful bounded shutdown; escalates to terminate/kill.
+        Caller holds the shard's rpc lock."""
+        try:
+            reply = unpackb(self.rpc(packb(["stop"]), timeout))
+            assert reply[0] == "stopped"
+            self.proc.join(timeout)
+        except WorkerUnavailable:
+            pass
+        finally:
+            self.discard()
+
+
+class InprocessWorkerHandle:
+    """Deterministic in-process emulation of a shard server — the transport
+    ``runtime_sim`` and the fast test matrix use.  Every message still round
+    trips the wire codec and dispatches through the identical
+    ``ShardWorker.handle``, so the only thing the emulation removes is the
+    OS process (and with it, nondeterministic scheduling)."""
+
+    def __init__(self, shard_idx: int, seed_blob: bytes):
+        self.idx = shard_idx
+        self.spawns = 0
+        # a real worker's command queue serializes every message; the
+        # emulation dispatches inline, so this lock plays the queue's role
+        # (ShardWorker itself is single-threaded by design)
+        self._dispatch_lock = threading.Lock()
+        self._start(seed_blob)
+
+    def _start(self, seed_blob: bytes):
+        self.worker = ShardWorker(self.idx, seed_blob)
+        self._dead = False
+        self.spawns += 1
+
+    def put(self, raw: bytes):
+        if self._dead:
+            return                      # a dead worker's queue eats messages
+        msg = unpackb(raw)
+        try:
+            with self._dispatch_lock:
+                self.worker.handle(msg)
+        except BaseException as e:      # deferred, like worker_main
+            if msg[0] in REPLY_OPS:
+                raise
+            self.worker.pending_errors.append(
+                f"{msg[0]}: {type(e).__name__}: {e}")
+
+    def rpc_recv(self, timeout: float) -> bytes:
+        raise NotImplementedError(
+            "the in-process emulation dispatches inline; scatter-gather "
+            "degenerates to sequential rpc() calls")
+
+    def rpc(self, raw: bytes, timeout: float) -> bytes:
+        if self._dead:
+            raise WorkerUnavailable(
+                f"shard worker {self.idx} died (in-process emulation)")
+        msg = unpackb(raw)
+        try:
+            with self._dispatch_lock:
+                reply = self.worker.handle(msg)
+        except BaseException as e:      # mirror worker_main's error envelope
+            reply = ["error", msg[0], f"{type(e).__name__}: {e}"]
+        return packb(reply)
+
+    def restart(self, seed_blob: bytes):
+        self._start(seed_blob)
+
+    def alive(self) -> bool:
+        return not self._dead
+
+    def kill(self):
+        self._dead = True
+        self.worker = None
+
+    def discard(self):
+        self.kill()
+
+    def stop(self, timeout: float):
+        self.kill()

@@ -36,6 +36,15 @@ the shard slices and only the parameter *sums* are partitioned, which
 commutes exactly (see ``two_level_coalesced_aggregate``).  Secure rounds are
 never split across shards: a model's full-round fold stays on its owning
 shard, because pairwise masks only cancel inside one fused sum.
+
+Process-sharded mode (``ProcessShardedModelStore``): the same K-shard
+topology with every shard promoted to a worker **process**
+(``repro.core.server_proc``) — submits cross per-shard msgpack SPSC queues,
+cluster folds run inside the workers, and the global model merges via a
+cross-server plan/partial/merge split of the identical two-level algebra.
+The parent journals every update until its fold is acked, so crashed or
+stuck workers are respawned and replayed without losing updates or
+double-counting rounds.  See the class docstring for the full design.
 """
 
 from __future__ import annotations
@@ -47,17 +56,37 @@ from collections import deque
 from dataclasses import dataclass
 from typing import Optional
 
+from repro.core import server_proc
 from repro.core.aggregation import (
     AggregationConfig,
     ModelMeta,
     UpdateDelta,
     aggregate_models,
+    chunked_convex_reduce,
     coalesced_aggregate,
+    multi_aggregate,
+    plan_coalesce,
     secure_coalesced_aggregate,
     two_level_coalesced_aggregate,
 )
+from repro.core.server_proc import (
+    delta_from_wire,
+    delta_to_wire,
+    meta_from_wire,
+    meta_to_wire,
+)
 
 GLOBAL_KEY = "__global__"
+
+
+def stable_shard(key: str, n_shards: int) -> int:
+    """Stable cluster-key -> shard assignment (crc32, never Python's
+    randomized ``hash``): a pure function of the key, reproducible across
+    threads, processes and restarts, so no ownership table exists to drift
+    out of sync with the registry."""
+    if key == GLOBAL_KEY:
+        return 0
+    return zlib.crc32(str(key).encode()) % n_shards
 
 
 @dataclass(frozen=True)
@@ -318,11 +347,16 @@ class _StoreBase(_RegistryBase):
     def __init__(self, init_params, cluster_keys=(),
                  agg_cfg: AggregationConfig = AggregationConfig(),
                  batch_aggregation: bool = False, max_coalesce: int = 16,
-                 masker=None):
+                 masker=None, drain_timeout_s: float = 30.0):
         super().__init__(init_params, cluster_keys)
         self.agg_cfg = agg_cfg
         self.batch_aggregation = batch_aggregation
         self.max_coalesce = max(int(max_coalesce), 1)
+        # bounded-drain deadline (FedCCLConfig.drain_timeout_s): worker-reply
+        # waits in the process store and drain-worker joins in the threaded
+        # runtime; expiries are counted (``drain_timeouts`` in agg_stats())
+        # instead of silently returning partial drains
+        self.drain_timeout_s = float(drain_timeout_s)
         # secure aggregation: a repro.privacy.secure_agg.PairwiseMasker (its
         # presence switches both runtimes to full-round secure drains)
         self.masker = masker
@@ -340,22 +374,55 @@ class _StoreBase(_RegistryBase):
         self.n_drained = 0                     # updates consumed by drains
         self.n_secure_rounds = 0               # secure drains performed
         self.n_secure_recoveries = 0           # dropped clients recovered
+        self.n_drain_timeouts = 0              # bounded-drain deadline misses
 
-    # ----------------------------------------------------------- flavor hook
+    # ----------------------------------------------------------- flavor hooks
     def _submit_stats(self, key: str) -> _SubmitStats:
         """The submit-side stats sink the given model key bills to."""
         raise NotImplementedError
 
+    def _all_submit_stats(self) -> list:
+        """Every submit-side sink, for the aggregate counter properties."""
+        raise NotImplementedError
+
     def _count_drain(self, folded: int, fast: int,
-                     secure: bool = False, recovered: int = 0):
+                     secure: bool = False, recovered: int = 0,
+                     batches: int = 1):
         with self._drain_lock:
             self._n_drain_updates += folded
             self._n_drain_fast_path += fast
-            self.n_drain_batches += 1
+            self.n_drain_batches += batches
             self.n_drained += folded
             if secure:
                 self.n_secure_rounds += 1
                 self.n_secure_recoveries += recovered
+
+    def _count_drain_timeout(self):
+        with self._drain_lock:
+            self.n_drain_timeouts += 1
+
+    # ---------------------------------- aggregate counters (drain + submit)
+    @property
+    def n_updates(self) -> int:
+        return self._n_drain_updates + sum(s.n_updates
+                                           for s in self._all_submit_stats())
+
+    @property
+    def n_fast_path(self) -> int:
+        return self._n_drain_fast_path + sum(s.n_fast_path
+                                             for s in self._all_submit_stats())
+
+    @property
+    def n_lock_waits(self) -> int:
+        return sum(s.n_lock_waits for s in self._all_submit_stats())
+
+    @property
+    def n_enqueued(self) -> int:
+        return sum(s.n_enqueued for s in self._all_submit_stats())
+
+    @property
+    def max_queue_depth(self) -> int:
+        return max(s.max_queue_depth for s in self._all_submit_stats())
 
     # -------------------------------------------------------------- protocol
     def handle_model_update(self, level: str, cluster_key: Optional[str],
@@ -497,13 +564,17 @@ class ModelStore(_StoreBase):
     def __init__(self, init_params, cluster_keys=(),
                  agg_cfg: AggregationConfig = AggregationConfig(),
                  batch_aggregation: bool = False, max_coalesce: int = 16,
-                 masker=None):
+                 masker=None, drain_timeout_s: float = 30.0):
         super().__init__(init_params, cluster_keys, agg_cfg,
-                         batch_aggregation, max_coalesce, masker)
+                         batch_aggregation, max_coalesce, masker,
+                         drain_timeout_s)
         self._submit = _SubmitStats()
 
     def _submit_stats(self, key: str) -> _SubmitStats:
         return self._submit
+
+    def _all_submit_stats(self) -> list:
+        return [self._submit]
 
     def drain(self, level: str, cluster_key: Optional[str] = None) -> int:
         """Fold all queued updates for one model, `max_coalesce` at a time,
@@ -515,27 +586,6 @@ class ModelStore(_StoreBase):
         for key in self.keys():
             total += self.drain("cluster", key)
         return total
-
-    # aggregate counters (drain-side + the submit sink)
-    @property
-    def n_updates(self) -> int:
-        return self._n_drain_updates + self._submit.n_updates
-
-    @property
-    def n_fast_path(self) -> int:
-        return self._n_drain_fast_path + self._submit.n_fast_path
-
-    @property
-    def n_lock_waits(self) -> int:
-        return self._submit.n_lock_waits
-
-    @property
-    def n_enqueued(self) -> int:
-        return self._submit.n_enqueued
-
-    @property
-    def max_queue_depth(self) -> int:
-        return self._submit.max_queue_depth
 
     def agg_stats(self) -> dict:
         # snapshot order matters: drain counters FIRST, then the submit sink
@@ -551,6 +601,7 @@ class ModelStore(_StoreBase):
             coalesce = self.coalesce_factor()
             secure_rounds = self.n_secure_rounds
             secure_recoveries = self.n_secure_recoveries
+            drain_timeouts = self.n_drain_timeouts
         direct, fast, lock_waits, enqueued, max_depth = self._submit.snapshot()
         updates = drain_updates + direct
         out = {
@@ -561,6 +612,7 @@ class ModelStore(_StoreBase):
             "drain_batches": drain_batches,
             "max_queue_depth": max_depth,
             "coalesce_factor": coalesce,
+            "drain_timeouts": drain_timeouts,
         }
         if self.masker is not None:
             out["secure_rounds"] = secure_rounds
@@ -618,10 +670,12 @@ class ShardedModelStore(_StoreBase):
     def __init__(self, init_params, cluster_keys=(),
                  agg_cfg: AggregationConfig = AggregationConfig(),
                  n_shards: int = 4, batch_aggregation: bool = False,
-                 max_coalesce: int = 16, masker=None):
+                 max_coalesce: int = 16, masker=None,
+                 drain_timeout_s: float = 30.0):
         self.n_shards = max(int(n_shards), 1)
         super().__init__(init_params, cluster_keys, agg_cfg,
-                         batch_aggregation, max_coalesce, masker)
+                         batch_aggregation, max_coalesce, masker,
+                         drain_timeout_s)
         self._shards = [_Shard(i) for i in range(self.n_shards)]
         self._gseq = itertools.count()      # global-queue arrival order
         # two-level fold instrumentation (under the shared _drain_lock)
@@ -632,12 +686,12 @@ class ShardedModelStore(_StoreBase):
     def _submit_stats(self, key: str) -> _SubmitStats:
         return self._shards[self.shard_of(key)].stats
 
+    def _all_submit_stats(self) -> list:
+        return [s.stats for s in self._shards]
+
     def shard_of(self, key: str) -> int:
-        """Stable cluster-key -> shard assignment (pure function of the key,
-        so there is no ownership table to keep in sync with the registry)."""
-        if key == GLOBAL_KEY:
-            return 0
-        return zlib.crc32(str(key).encode()) % self.n_shards
+        """Stable cluster-key -> shard assignment — see ``stable_shard``."""
+        return stable_shard(key, self.n_shards)
 
     def shard_cluster_keys(self, shard: int):
         """Cluster keys owned by one shard (that shard's drain beat)."""
@@ -762,72 +816,659 @@ class ShardedModelStore(_StoreBase):
             total += self.drain_shard(shard)
         return total
 
-    # ModelStore-compatible aggregate counters (summed across shards)
-    @property
-    def n_updates(self) -> int:
-        return self._n_drain_updates + sum(s.stats.n_updates
-                                           for s in self._shards)
-
-    @property
-    def n_fast_path(self) -> int:
-        return self._n_drain_fast_path + sum(s.stats.n_fast_path
-                                             for s in self._shards)
-
-    @property
-    def n_lock_waits(self) -> int:
-        return sum(s.stats.n_lock_waits for s in self._shards)
-
-    @property
-    def n_enqueued(self) -> int:
-        return sum(s.stats.n_enqueued for s in self._shards)
-
-    @property
-    def max_queue_depth(self) -> int:
-        return max(s.stats.max_queue_depth for s in self._shards)
-
     def agg_stats(self) -> dict:
-        # snapshot order matters: drain counters FIRST, then each shard's
-        # counters as one locked read.  Enqueues are counted before publish
-        # and folds happen after it, so any fold visible in the drain
-        # snapshot has its enqueue visible in the (later) shard snapshots —
-        # every snapshot keeps updates <= enqueued and fast_path_frac <= 1
-        with self._drain_lock:
-            drain_updates = self._n_drain_updates
-            drain_fast = self._n_drain_fast_path
-            drain = {
-                "drain_batches": self.n_drain_batches,
-                "coalesce_factor": self.coalesce_factor(),
-                "global_drains": self.n_global_drains,
-                "global_partials": self.n_global_partials,
-                "secure_rounds": self.n_secure_rounds,
-                "secure_recoveries": self.n_secure_recoveries,
-            }
-        updates, fast, lock_waits, enqueued, max_depth = 0, 0, 0, 0, 0
-        shard_enqueued = []
-        for s in self._shards:
-            u, f, lw, enq, depth = s.stats.snapshot()
-            updates += u
-            fast += f
-            lock_waits += lw
-            enqueued += enq
-            max_depth = max(max_depth, depth)
-            shard_enqueued.append(enq)
-        updates += drain_updates
-        fast += drain_fast
-        out = {
-            "updates": updates,
-            "fast_path_frac": fast / max(updates, 1),
-            "lock_waits": lock_waits,
-            "enqueued": enqueued,
-            "drain_batches": drain["drain_batches"],
-            "max_queue_depth": max_depth,
-            "coalesce_factor": drain["coalesce_factor"],
-            "shards": self.n_shards,
-            "global_drains": drain["global_drains"],
-            "global_partials": drain["global_partials"],
-            "shard_enqueued": shard_enqueued,
+        return _sharded_agg_stats(self, self._shards)
+
+
+def _sharded_agg_stats(store, shards, extra: Optional[dict] = None) -> dict:
+    """Shared agg_stats assembly for the sharded store flavors (thread
+    shards and process shards expose the same counter layout).
+
+    Snapshot order matters: drain counters FIRST, then each shard's
+    counters as one locked read.  Enqueues are counted before publish
+    and folds happen after it, so any fold visible in the drain
+    snapshot has its enqueue visible in the (later) shard snapshots —
+    every snapshot keeps updates <= enqueued and fast_path_frac <= 1.
+    """
+    with store._drain_lock:
+        drain_updates = store._n_drain_updates
+        drain_fast = store._n_drain_fast_path
+        drain = {
+            "drain_batches": store.n_drain_batches,
+            "coalesce_factor": store.coalesce_factor(),
+            "global_drains": store.n_global_drains,
+            "global_partials": store.n_global_partials,
+            "secure_rounds": store.n_secure_rounds,
+            "secure_recoveries": store.n_secure_recoveries,
+            "drain_timeouts": store.n_drain_timeouts,
         }
-        if self.masker is not None:
-            out["secure_rounds"] = drain["secure_rounds"]
-            out["secure_recoveries"] = drain["secure_recoveries"]
-        return out
+    updates, fast, lock_waits, enqueued, max_depth = 0, 0, 0, 0, 0
+    shard_enqueued = []
+    for s in shards:
+        u, f, lw, enq, depth = s.stats.snapshot()
+        updates += u
+        fast += f
+        lock_waits += lw
+        enqueued += enq
+        max_depth = max(max_depth, depth)
+        shard_enqueued.append(enq)
+    updates += drain_updates
+    fast += drain_fast
+    out = {
+        "updates": updates,
+        "fast_path_frac": fast / max(updates, 1),
+        "lock_waits": lock_waits,
+        "enqueued": enqueued,
+        "drain_batches": drain["drain_batches"],
+        "max_queue_depth": max_depth,
+        "coalesce_factor": drain["coalesce_factor"],
+        "drain_timeouts": drain["drain_timeouts"],
+        "shards": store.n_shards,
+        "global_drains": drain["global_drains"],
+        "global_partials": drain["global_partials"],
+        "shard_enqueued": shard_enqueued,
+    }
+    if extra:
+        out.update(extra)
+    if store.masker is not None:
+        out["secure_rounds"] = drain["secure_rounds"]
+        out["secure_recoveries"] = drain["secure_recoveries"]
+    return out
+
+
+# =========================================================================
+# Process-sharded store: shard servers as worker processes
+# =========================================================================
+
+
+class _JournalEntry:
+    """One unacked update the parent still owns.  ``raw`` is the exact wire
+    message sent to the worker, so a respawn replays it byte-for-byte.
+    ``custody`` marks global updates whose payload a ``gpop`` reply has
+    already handed back to the parent — replay must skip those or the
+    in-flight two-level fold would double-count them."""
+
+    __slots__ = ("kind", "key", "rounds", "raw", "custody")
+
+    def __init__(self, kind: str, key: str, rounds: int, raw: bytes):
+        self.kind = kind          # "sub" | "gsub" | "secure"
+        self.key = key
+        self.rounds = rounds
+        self.raw = raw
+        self.custody = False
+
+
+class _ProcShard:
+    """Parent-side bookkeeping for one worker process: its transport handle,
+    submit stats, and the journal of unacked updates (the crash-replay
+    source of truth).  ``rpc_lock`` serializes replying commands (and
+    respawns) per worker; ``journal_lock`` is the leaf lock guarding the
+    journal, the per-key pending counters, and handle puts (so a respawn's
+    replay can never interleave with a half-published submit)."""
+
+    __slots__ = ("idx", "stats", "handle", "rpc_lock", "journal",
+                 "journal_lock", "pending_counts", "pending_rounds",
+                 "secure_counts", "outbox")
+
+    def __init__(self, idx: int):
+        self.idx = idx
+        self.stats = _SubmitStats()
+        self.handle = None
+        self.rpc_lock = threading.RLock()
+        self.journal: dict[int, _JournalEntry] = {}     # seq -> entry
+        self.journal_lock = threading.Lock()
+        self.pending_counts: dict[str, int] = {}        # key -> unacked subs
+        self.pending_rounds: dict[str, int] = {}        # key -> their rounds
+        self.secure_counts: dict[tuple, int] = {}       # (key, round) -> n
+        self.outbox: list = []                          # unflushed raw msgs
+
+
+class ProcessShardedModelStore(_StoreBase):
+    """``ShardedModelStore`` semantics with every shard promoted to a worker
+    **process** — aggregation escapes the GIL and scales with cores.
+
+    Topology: the parent keeps the authoritative registry (all reads —
+    ``request_model``/``meta``/``params`` — stay parent-local snapshots,
+    zero IPC) plus a per-shard **journal** of unacked updates; each worker
+    owns working copies of its shard's cluster models, their pending queues
+    and secure-round buckets, and its slice of the global queue.  Submits
+    msgpack-serialize the update once (the checkpoint codec) and land on the
+    shard's SPSC command queue without blocking; drain RPCs make the worker
+    fold with the identical ``coalesced_aggregate`` and ship the folded
+    ``(params, meta)`` back, which the parent swaps into its mirror and acks
+    against the journal in one atomic step.
+
+    The global model folds by a **cross-server two-level merge**: the
+    parent snapshots every worker's seq-tagged slice metadata (``gmeta``),
+    runs the unchanged ``plan_coalesce`` over the seq-sorted concatenation
+    (the flat Algorithm-2 telescoped coefficients), each worker reduces its
+    own members to one convex partial (``greduce`` via the unchanged
+    ``multi_aggregate`` — only K partials ever cross process boundaries,
+    not N updates), and a mass-weighted merge reassembles the exact flat
+    sum — the same algebra ``two_level_coalesced_aggregate`` uses for
+    thread shards, distributed (see ``tests/test_store_equivalence.py``).
+
+    Crash safety: a worker that dies or misses the ``drain_timeout_s``
+    deadline is respawned from the parent mirrors and its journal replayed.
+    Updates are acked only after their fold's result is applied parent-side,
+    and folds are deterministic, so a crash anywhere in the submit->fold->
+    reply pipeline neither loses updates nor double-counts rounds (heavy
+    kill-mid-round test in ``tests/test_process_store.py``).  Timeouts are
+    surfaced as ``drain_timeouts`` in ``agg_stats()``.
+
+    Secure aggregation stays model-local per server process: a cluster
+    model's full-round masked fold (and its dropout seed-reconstruction)
+    runs entirely inside the owning worker; the parent-owned global model
+    folds its secure rounds parent-locally.
+
+    ``inprocess=True`` swaps the spawned processes for the deterministic
+    in-process emulation (same messages, same codec, same ``ShardWorker``
+    logic) — what ``runtime_sim`` uses so schedules stay bit-reproducible.
+    """
+
+    # drains are scatter-gather beats: the threaded runtime runs ONE pump
+    # thread calling drain_all() instead of one thread per shard (the
+    # parallelism lives in the workers; extra parent threads only add GIL
+    # convoy on the submit hot path)
+    scatter_drains = True
+
+    def __init__(self, init_params, cluster_keys=(),
+                 agg_cfg: AggregationConfig = AggregationConfig(),
+                 n_shards: int = 4, batch_aggregation: bool = True,
+                 max_coalesce: int = 16, masker=None,
+                 drain_timeout_s: float = 30.0, inprocess: bool = False):
+        self.n_shards = max(int(n_shards), 1)
+        super().__init__(init_params, cluster_keys, agg_cfg,
+                         batch_aggregation, max_coalesce, masker,
+                         drain_timeout_s)
+        self.inprocess = bool(inprocess)
+        self._gseq = itertools.count()
+        self.n_global_drains = 0
+        self.n_global_partials = 0
+        self.n_respawns = 0
+        self._closed = False
+        self._proc_shards = [_ProcShard(i) for i in range(self.n_shards)]
+        handle_cls = (server_proc.InprocessWorkerHandle if self.inprocess
+                      else server_proc.ProcessWorkerHandle)
+        for sh in self._proc_shards:
+            sh.handle = handle_cls(sh.idx, self._seed_blob(sh.idx))
+
+    # --------------------------------------------------------------- lifecycle
+    def _seed_blob(self, shard_idx: int) -> bytes:
+        recs = []
+        for key in self.shard_cluster_keys(shard_idx):
+            params, meta = self._records[key].snapshot()
+            recs.append((key, params, meta))
+        return server_proc.make_seed_blob(recs, self.max_coalesce,
+                                          self.agg_cfg, self.masker)
+
+    def close(self, timeout: Optional[float] = None):
+        """Stop every worker with a bounded join (terminate/kill fallback).
+        Idempotent; pending-but-undrained updates stay journaled parent-side
+        (they were never acked), so closing loses no federation state that a
+        checkpoint of the mirrors would not capture."""
+        if self._closed:
+            return
+        self._closed = True
+        t = self.drain_timeout_s if timeout is None else float(timeout)
+        for sh in self._proc_shards:
+            with sh.rpc_lock:
+                try:
+                    sh.handle.stop(min(t, 10.0))
+                except BaseException:
+                    sh.handle.discard()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    def worker_spawns(self) -> list:
+        """Per-shard spawn counts (1 = never respawned) — respawn-path
+        observability for tests and ``agg_stats``."""
+        return [sh.handle.spawns for sh in self._proc_shards]
+
+    def _debug_kill_worker(self, shard: int):
+        """Crash injection (tests): SIGKILL the worker / poison the
+        emulation.  The next drain touching the shard detects and respawns."""
+        self._proc_shards[shard].handle.kill()
+
+    # ------------------------------------------------------------------ keys
+    def _submit_stats(self, key: str) -> _SubmitStats:
+        return self._proc_shards[self.shard_of(key)].stats
+
+    def _all_submit_stats(self) -> list:
+        return [s.stats for s in self._proc_shards]
+
+    def shard_of(self, key: str) -> int:
+        """Same stable assignment as ``ShardedModelStore.shard_of`` — the
+        two sharded topologies are drop-in replacements for each other."""
+        return stable_shard(key, self.n_shards)
+
+    def shard_cluster_keys(self, shard: int):
+        return [k for k in self._records
+                if k != GLOBAL_KEY and self.shard_of(k) == shard]
+
+    def ensure_cluster(self, cluster_key: str, init_params=None):
+        key = str(cluster_key)
+        with self._registry_lock:
+            if key in self._records:
+                return
+            seed = (init_params if init_params is not None
+                    else self._records[GLOBAL_KEY].params)
+            updated = dict(self._records)
+            updated[key] = ModelRecord(seed)
+            self._records = updated
+        # command-queue FIFO makes the worker register the model before any
+        # subsequently submitted update for it; a respawn between the
+        # registry swap and this put re-seeds from the registry (idempotent)
+        sh = self._proc_shards[self.shard_of(key)]
+        raw = server_proc.packb(["ensure", key, seed])
+        with sh.journal_lock:
+            self._outbox_put(sh, raw)
+
+    # ------------------------------------------------------- submit paths
+    def handle_model_update(self, level: str, cluster_key: Optional[str],
+                            updated_params, updated_meta: ModelMeta,
+                            delta: UpdateDelta, *, blocking: bool = True) -> bool:
+        # every update crosses a process boundary, so the store is
+        # queue-based even in "direct" mode: a non-batched config folds
+        # synchronously right after the enqueue (a coalesced fold of each
+        # single update — identical Algorithm-2 semantics)
+        self.enqueue_update(level, cluster_key, updated_params, updated_meta,
+                            delta)
+        if not self.batch_aggregation:
+            self.drain(level, cluster_key)
+        return True
+
+    def enqueue_update(self, level: str, cluster_key: Optional[str],
+                       updated_params, updated_meta: ModelMeta,
+                       delta: UpdateDelta) -> int:
+        key = self._key(level, cluster_key)
+        seq = next(self._gseq)
+        if key == GLOBAL_KEY:
+            # global tier: strike a round-robin worker slice (the two-level
+            # fold is seq-sorted, so slice assignment is semantically free)
+            sh = self._proc_shards[seq % self.n_shards]
+            kind = "gsub"
+            raw = server_proc.packb(
+                ["gsub", seq, updated_params, meta_to_wire(updated_meta),
+                 delta_to_wire(delta)])
+        else:
+            self._record(key)          # unknown cluster -> KeyError, as flat
+            sh = self._proc_shards[self.shard_of(key)]
+            kind = "sub"
+            raw = server_proc.packb(
+                ["sub", seq, key, updated_params, meta_to_wire(updated_meta),
+                 delta_to_wire(delta)])
+        sh.stats.count_enqueue()        # before publish — see _SubmitStats
+        with sh.journal_lock:
+            sh.journal[seq] = _JournalEntry(kind, key, delta.rounds, raw)
+            sh.pending_counts[key] = sh.pending_counts.get(key, 0) + 1
+            sh.pending_rounds[key] = sh.pending_rounds.get(key, 0) + delta.rounds
+            depth = sh.pending_counts[key]
+            self._outbox_put(sh, raw)
+        sh.stats.observe_depth(depth)
+        return depth
+
+    def pending_depth(self, level: str, cluster_key: Optional[str] = None) -> int:
+        key = self._key(level, cluster_key)
+        if key == GLOBAL_KEY:
+            total = 0
+            for sh in self._proc_shards:
+                with sh.journal_lock:
+                    total += sh.pending_counts.get(GLOBAL_KEY, 0)
+            return total
+        sh = self._proc_shards[self.shard_of(key)]
+        with sh.journal_lock:
+            return sh.pending_counts.get(key, 0)
+
+    def effective_round(self, level: str, cluster_key: Optional[str] = None) -> int:
+        """Same staleness reference as the in-thread stores.  The journal
+        holds every queued *and* in-flight (popped by a worker fold, not yet
+        acked) update, and acks land in the same ``journal_lock`` section
+        that swaps the folded meta in — readers can never watch the round
+        count regress mid-drain."""
+        key = self._key(level, cluster_key)
+        rec = self._record(key)
+        if key == GLOBAL_KEY:
+            with rec.pending_lock:
+                queued = 0
+                for sh in self._proc_shards:
+                    with sh.journal_lock:
+                        queued += sh.pending_rounds.get(GLOBAL_KEY, 0)
+                return rec.meta.round + queued
+        sh = self._proc_shards[self.shard_of(key)]
+        with sh.journal_lock:
+            return rec.meta.round + sh.pending_rounds.get(key, 0)
+
+    # ---------------------------------------------------------------- drains
+    @staticmethod
+    def _ack(sh: _ProcShard, seqs):
+        """Retire acked journal entries.  Caller holds ``sh.journal_lock``
+        and has already applied the fold result they correspond to."""
+        for seq in seqs:
+            e = sh.journal.pop(seq, None)
+            if e is None:
+                continue
+            if e.kind in ("sub", "gsub"):
+                sh.pending_counts[e.key] = sh.pending_counts.get(e.key, 1) - 1
+                sh.pending_rounds[e.key] = \
+                    sh.pending_rounds.get(e.key, e.rounds) - e.rounds
+
+    def _respawn(self, sh: _ProcShard):
+        """Replace a dead/stuck worker: fresh process seeded from the parent
+        mirrors, journal replayed in seq order (parent-custody global
+        entries skipped — their payload is already in the in-flight fold's
+        hands).  Caller holds ``sh.rpc_lock``."""
+        with sh.journal_lock:
+            handle_cls = type(sh.handle)
+            prior_spawns = sh.handle.spawns
+            sh.handle.discard()
+            sh.outbox = []     # journaled (subs) or registry-derived (ensure)
+            sh.handle = handle_cls(sh.idx, self._seed_blob(sh.idx))
+            sh.handle.spawns += prior_spawns     # cumulative per-shard count
+            for seq in sorted(sh.journal):
+                e = sh.journal[seq]
+                if not e.custody:
+                    self._outbox_put(sh, e.raw)
+            self._flush_outbox(sh)
+        with self._drain_lock:
+            self.n_respawns += 1
+
+    # extra reply allowance for the first command after a respawn: a fresh
+    # worker pays a cold interpreter + jax import before its first fold
+    SPAWN_ALLOWANCE_S = 60.0
+
+    # submits coalesce into one queue message per shard: the per-message
+    # transport cost (queue wakeups, pipe round trips) dominates marginal
+    # bytes, so batching widens the submit pipe ~FLUSH_N-fold.  Every RPC
+    # flushes first, which keeps command-queue FIFO semantics intact.
+    FLUSH_N = 8
+
+    def _flush_outbox(self, sh: _ProcShard):
+        """Ship the shard's buffered fire-and-forget messages as one batch.
+        Caller holds ``sh.journal_lock`` (the outbox's lock)."""
+        if not sh.outbox:
+            return
+        if len(sh.outbox) == 1:
+            sh.handle.put(sh.outbox[0])
+        else:
+            sh.handle.put(server_proc.packb(["batch", sh.outbox]))
+        sh.outbox = []
+
+    def _outbox_put(self, sh: _ProcShard, raw: bytes):
+        """Buffer one fire-and-forget message, flushing at the batch
+        threshold.  Caller holds ``sh.journal_lock``."""
+        sh.outbox.append(raw)
+        if len(sh.outbox) >= self.FLUSH_N:
+            self._flush_outbox(sh)
+
+    def _exchange(self, sh: _ProcShard, raw: bytes,
+                  timeout: Optional[float] = None):
+        """Send one replying command and decode its reply, with crash and
+        timeout handling: on ``WorkerUnavailable`` the worker is respawned
+        (journal replay) and the command retried once.  Caller holds
+        ``sh.rpc_lock``."""
+        timeout = self.drain_timeout_s if timeout is None else timeout
+        for attempt in (0, 1):
+            try:
+                return server_proc.unpackb(sh.handle.rpc(raw, timeout))
+            except server_proc.WorkerUnavailable as e:
+                if isinstance(e, server_proc.WorkerTimeout):
+                    self._count_drain_timeout()
+                self._respawn(sh)
+                timeout = self.drain_timeout_s + self.SPAWN_ALLOWANCE_S
+                if attempt:
+                    raise RuntimeError(
+                        f"shard {sh.idx} worker unavailable even after "
+                        f"respawn: {e}") from e
+
+    @staticmethod
+    def _check_error(sh: _ProcShard, reply):
+        if reply[0] == "error":
+            raise RuntimeError(
+                f"shard {sh.idx} worker error on {reply[1]!r}: {reply[2]}")
+
+    def _rpc(self, sh: _ProcShard, raw: bytes, on_reply):
+        """One replying worker command.  ``on_reply`` runs inside the
+        critical section so its acks/custody marks are visible before any
+        later respawn could replay the entries it consumed."""
+        with sh.rpc_lock:
+            with sh.journal_lock:
+                self._flush_outbox(sh)
+            reply = self._exchange(sh, raw)
+            self._check_error(sh, reply)
+            return on_reply(reply)
+
+    def _scatter_gather(self, raws, on_reply) -> list:
+        """Broadcast one replying command per worker, then gather — the K
+        folds run truly concurrently while the parent waits once.  This is
+        the process-pool drain beat: one parent thread, K busy workers
+        (per-shard pump threads would serialize on the parent's GIL
+        instead).  ``raws`` is one bytes command for all shards or a
+        per-shard list.  Holds every shard's rpc_lock (acquired in index
+        order) across the exchange; per-shard crashes respawn and retry
+        that shard alone.  Returns ``on_reply(sh, reply)`` per shard."""
+        if isinstance(raws, bytes):
+            raws = [raws] * self.n_shards
+        if self.inprocess:
+            # the emulation dispatches inline — scatter degenerates to a
+            # deterministic sequential sweep over the single-shard RPC path
+            return [self._rpc(sh, raw, lambda reply, sh=sh: on_reply(sh, reply))
+                    for sh, raw in zip(self._proc_shards, raws)]
+        for sh in self._proc_shards:
+            sh.rpc_lock.acquire()
+        try:
+            for sh, raw in zip(self._proc_shards, raws):
+                with sh.journal_lock:
+                    self._flush_outbox(sh)
+                sh.handle.put(raw)               # scatter: no waiting yet
+            out = []
+            for sh, raw in zip(self._proc_shards, raws):
+                try:
+                    reply = server_proc.unpackb(
+                        sh.handle.rpc_recv(self.drain_timeout_s))
+                except server_proc.WorkerUnavailable as e:
+                    if isinstance(e, server_proc.WorkerTimeout):
+                        self._count_drain_timeout()
+                    self._respawn(sh)
+                    reply = self._exchange(        # journal replayed
+                        sh, raw,
+                        self.drain_timeout_s + self.SPAWN_ALLOWANCE_S)
+                self._check_error(sh, reply)
+                out.append(on_reply(sh, reply))
+            return out
+        finally:
+            for sh in self._proc_shards:
+                sh.rpc_lock.release()
+
+    def _apply_drained(self, sh: _ProcShard, reply) -> int:
+        _, key, folded, fast, batches, acked, params, meta_w = reply
+        if not folded:
+            return 0
+        rec = self._record(key)
+        with sh.journal_lock:
+            rec.swap(params, meta_from_wire(meta_w))
+            self._ack(sh, acked)
+        self._count_drain(folded, fast, batches=batches)
+        return folded
+
+    def drain(self, level: str, cluster_key: Optional[str] = None) -> int:
+        key = self._key(level, cluster_key)
+        if key == GLOBAL_KEY:
+            return self.drain_global()
+        sh = self._proc_shards[self.shard_of(key)]
+        return self._rpc(sh, server_proc.packb(["drain", key]),
+                         lambda reply: self._apply_drained(sh, reply))
+
+    def _apply_shard_beat(self, sh: _ProcShard, reply) -> int:
+        """Apply one ``shard_drained`` reply: per-key folded states swapped
+        into the mirrors and acked.  Shared by the single-shard drain and
+        the scatter-gather ``drain_all`` beat."""
+        total = 0
+        for per_key in reply[1]:
+            total += self._apply_drained(sh, ["drained"] + list(per_key))
+        return total
+
+    def drain_shard(self, shard: int) -> int:
+        """One drain beat for a whole worker: every cluster model it owns,
+        folded worker-side in one RPC round trip."""
+        sh = self._proc_shards[shard]
+        return self._rpc(sh, server_proc.packb(["drain_shard"]),
+                         lambda reply: self._apply_shard_beat(sh, reply))
+
+    def _abort_global_drain(self):
+        """Undo a half-done cross-server merge: clear custody so the
+        journal is authoritative again, then respawn every worker — fresh
+        queues discard any stale half-gathered replies, and the journal
+        replay restores each slice exactly (nothing was acked)."""
+        for sh in self._proc_shards:
+            with sh.journal_lock:
+                for e in sh.journal.values():
+                    e.custody = False
+            with sh.rpc_lock:
+                self._respawn(sh)
+
+    def drain_global(self) -> int:
+        """Cross-server two-level global merge, distributed: the parent
+        scatter-gathers each server's slice *metadata* (``gmeta``), runs
+        the unchanged ``plan_coalesce`` over the seq-sorted concatenation
+        to fix every update's flat telescoped coefficient, then each
+        worker reduces its own members to one convex partial (``greduce``
+        — params never cross a process boundary individually, only K
+        partials do), and a mass-weighted K-way merge reassembles the
+        exact flat Algorithm-2 sum.  Same algebra as the thread-sharded
+        ``two_level_coalesced_aggregate``, with the partial reduction
+        running on the servers instead of the parent."""
+        rec = self._record(GLOBAL_KEY)
+        with rec.lock:
+            # phase 1 — plan over metas (read-only snapshot of the slices)
+            metas = self._scatter_gather(server_proc.packb(["gmeta"]),
+                                         lambda sh, reply: reply[1])
+            flat = sorted((int(it[0]), k, meta_from_wire(it[1]),
+                           delta_from_wire(it[2]))
+                          for k, items in enumerate(metas) for it in items)
+            n = len(flat)
+            if n == 0:
+                return 0
+            plan = plan_coalesce(rec.meta, [(m, d) for _, _, m, d in flat],
+                                 self.agg_cfg)
+            by_shard: dict[int, list] = {k: [] for k in range(self.n_shards)}
+            for (seq, k, _, _), w in zip(flat, plan.weights[1:]):
+                by_shard[k].append([seq, w])
+            try:
+                # phase 2 — per-server partial reduction; custody marks the
+                # reduced entries so a concurrent respawn cannot replay
+                # them while the merge is in flight
+                def collect(sh, reply):
+                    with sh.journal_lock:
+                        for seq in reply[1]:
+                            e = sh.journal.get(int(seq))
+                            if e is not None:
+                                e.custody = True
+                    return reply
+                raws = [server_proc.packb(["greduce", by_shard[k]])
+                        for k in range(self.n_shards)]
+                replies = self._scatter_gather(raws, collect)
+                acked = [[int(s) for s in reply[1]] for reply in replies]
+                partials = [(reply[3], reply[2]) for reply in replies
+                            if reply[3] is not None and reply[2] > 0.0]
+                base_w = plan.weights[0]
+                entries = (([(rec.params, base_w)] if base_w != 0.0 else [])
+                           + partials)
+                if not entries:
+                    new_params = rec.params
+                else:
+                    entries = chunked_convex_reduce(entries,
+                                                    self.max_coalesce,
+                                                    self.agg_cfg)
+                    new_params = (entries[0][0] if len(entries) == 1 else
+                                  multi_aggregate([p for p, _ in entries],
+                                                  [m for _, m in entries],
+                                                  self.agg_cfg))
+            except BaseException:
+                self._abort_global_drain()
+                raise
+            with rec.pending_lock:
+                rec.swap(new_params, plan.meta)
+                for sh, sq in zip(self._proc_shards, acked):
+                    with sh.journal_lock:
+                        self._ack(sh, sq)
+        with self._drain_lock:
+            self._n_drain_updates += n
+            self._n_drain_fast_path += plan.n_fast_path
+            self.n_drain_batches += 1
+            self.n_drained += n
+            self.n_global_drains += 1
+            self.n_global_partials += len(partials)
+        return n
+
+    def drain_all(self) -> int:
+        """One full drain beat: the cross-server global merge, then one
+        ``drain_shard`` broadcast — every worker folds its cluster queues
+        concurrently while the parent gathers (the threaded runtime's
+        process-pool pump calls exactly this in a loop)."""
+        total = self.drain_global()
+        total += sum(self._scatter_gather(server_proc.packb(["drain_shard"]),
+                                          self._apply_shard_beat))
+        return total
+
+    # ---------------------------------------------------- secure aggregation
+    def submit_secure(self, level: str, cluster_key: Optional[str],
+                      client_id: str, round_id: int, masked_delta,
+                      delta: UpdateDelta) -> int:
+        key = self._key(level, cluster_key)
+        if key == GLOBAL_KEY:
+            # the parent owns the global model, so its secure rounds stay
+            # parent-local — model-local per server, like every other model
+            return super().submit_secure(level, cluster_key, client_id,
+                                         round_id, masked_delta, delta)
+        self._record(key)
+        seq = next(self._gseq)
+        sh = self._proc_shards[self.shard_of(key)]
+        sh.stats.count_enqueue()        # before publish — see _SubmitStats
+        raw = server_proc.packb(
+            ["ssub", seq, key, int(round_id), str(client_id), masked_delta,
+             delta_to_wire(delta)])
+        bucket = (key, int(round_id))
+        with sh.journal_lock:
+            sh.journal[seq] = _JournalEntry("secure", key, delta.rounds, raw)
+            sh.secure_counts[bucket] = sh.secure_counts.get(bucket, 0) + 1
+            depth = sh.secure_counts[bucket]
+            self._outbox_put(sh, raw)
+        sh.stats.observe_depth(depth)
+        return depth
+
+    def drain_secure(self, level: str, cluster_key: Optional[str],
+                     round_id: int, expected_ids) -> int:
+        key = self._key(level, cluster_key)
+        if key == GLOBAL_KEY:
+            return super().drain_secure(level, cluster_key, round_id,
+                                        expected_ids)
+        sh = self._proc_shards[self.shard_of(key)]
+
+        def apply(reply):
+            _, _, folded, recovered, acked, params, meta_w = reply
+            if not folded:
+                return 0
+            rec = self._record(key)
+            with sh.journal_lock:
+                rec.swap(params, meta_from_wire(meta_w))
+                self._ack(sh, acked)
+                sh.secure_counts.pop((key, int(round_id)), None)
+            self._count_drain(folded, 0, secure=True, recovered=recovered)
+            return folded
+
+        return self._rpc(
+            sh, server_proc.packb(["sdrain", key, int(round_id),
+                                   [str(i) for i in expected_ids]]), apply)
+
+    # ------------------------------------------------------------- inspection
+    def agg_stats(self) -> dict:
+        with self._drain_lock:
+            extra = {"processes": 0 if self.inprocess else self.n_shards,
+                     "respawns": self.n_respawns}
+        return _sharded_agg_stats(self, self._proc_shards, extra)

@@ -18,9 +18,7 @@ dataset (repro gate, see DESIGN.md §1).  Physics-grounded so the paper's
 
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Optional
 
 import numpy as np
 

@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels import INTERPRET
 from repro.kernels.fedavg_agg.fedavg_agg import TILE, agg_tiled

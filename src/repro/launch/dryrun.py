@@ -30,7 +30,6 @@ from repro.configs import (
 )
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import (
-    RooflineTerms,
     analytic_costs,
     collective_bytes_from_hlo,
     model_flops,
@@ -40,7 +39,7 @@ from repro.models.blocks import stack_layout
 from repro.models.model import build_model
 from repro.optim.optimizers import adamw
 from repro.serving.kv_cache import cache_shapes, cache_specs
-from repro.sharding.logical import logical_to_spec, make_rules, specs_from_schema
+from repro.sharding.logical import logical_to_spec, make_rules
 from repro.training.train_step import TrainState, build_train_step
 
 

@@ -276,7 +276,6 @@ def analytic_costs(cfg, shape, n_chips: int, mesh_shape: dict, *,
                 when the unfused sdpa path materializes (s<=flash threshold).
       decode:   weights read per token + KV-cache read/write per step.
     """
-    from repro.configs.base import INPUT_SHAPES  # noqa: F401 (doc aid)
 
     B, S = shape.global_batch, shape.seq_len
     d = cfg.d_model

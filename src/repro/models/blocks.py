@@ -14,9 +14,7 @@ model can scan homogeneous stacks with stacked params and stacked caches.
 
 from __future__ import annotations
 
-from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig

@@ -12,7 +12,6 @@ on CPU in the smoke tests.  All stacks scan over layers so the HLO (and
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

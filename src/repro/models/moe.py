@@ -13,7 +13,6 @@ MODEL_FLOPS / HLO_FLOPs ratio honest for MoE archs.
 
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,6 @@ runs are deterministic given ``FedCCLConfig.seed``.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ including recurrent/SSM states), then greedy/temperature sampling.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

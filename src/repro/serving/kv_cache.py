@@ -12,7 +12,6 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from jax.tree_util import DictKey
 
-from repro.configs.base import ModelConfig
 from repro.sharding.logical import Rules, logical_to_spec
 
 # leaf name -> logical axes after the batch axis

@@ -17,7 +17,7 @@ then auto-drops "embed" for activations.
 from __future__ import annotations
 
 import hashlib
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 import jax

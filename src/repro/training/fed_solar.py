@@ -13,8 +13,6 @@ plus the §IV.E population-independent evaluation on held-out sites.
 
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -25,9 +23,9 @@ from repro.core.fedccl import ClusterSpaceConfig, FedCCL, FedCCLConfig
 from repro.core.protocol import ClientSpec
 from repro.data.solar import generate_fleet
 from repro.data.windows import batch_iter, make_windows, split_windows
-from repro.models.lstm import SolarForecaster, build_forecaster
+from repro.models.lstm import SolarForecaster
 from repro.training.losses import solar_loss
-from repro.training.metrics import aggregate_runs, summarize_errors
+from repro.training.metrics import summarize_errors
 
 
 # ---------------------------------------------------------------------------

@@ -1,7 +1,6 @@
 """DBSCAN + incremental DBSCAN properties (paper §II.B)."""
 
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:      # bare CI env: seeded-random fallback shim

@@ -15,7 +15,6 @@ import pytest
 
 from repro.configs import ALL_ARCHS, INPUT_SHAPES, get_config
 from repro.launch.roofline import (
-    RooflineTerms,
     analytic_costs,
     collective_bytes_from_hlo,
     model_flops,

@@ -1,6 +1,5 @@
 """Paper metrics formulas + from-scratch optimizers."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -6,7 +6,6 @@ their names.
 """
 
 import jax
-import numpy as np
 import pytest
 
 from repro.configs import ALL_ARCHS, get_config, reduced_for_smoke

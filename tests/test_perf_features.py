@@ -7,7 +7,6 @@ decode tests), and the Pallas attention backend switch.
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config, reduced_for_smoke
 from repro.data.lm_synth import lm_batch
@@ -54,7 +53,7 @@ def test_microbatching_grad_clip_path(rng):
 def test_sequence_parallel_rules_single_device(rng):
     """seq->model rules must be a no-op numerically (single device here:
     constraints degrade to identity) and not break tracing."""
-    from repro.sharding.logical import Rules, make_rules
+    from repro.sharding.logical import make_rules
 
     cfg = reduced_for_smoke(get_config("deepseek-7b"))
     model = build_model(cfg)

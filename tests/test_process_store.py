@@ -1,0 +1,334 @@
+"""Real-process coverage for the multi-process federation server.
+
+The equivalence matrix (``test_store_equivalence.py``) drives the
+process-sharded flavor through its deterministic in-process emulation; this
+file spawns the actual worker processes and checks what only they can show:
+
+  * schedule parity with the flat fold across real process boundaries
+    (msgpack wire round trips, worker-side folds, cross-server merge),
+  * the threaded runtime's process-pool drain mode end to end,
+  * secure-aggregation rounds folded model-locally inside the owning worker
+    (dropout seed-reconstruction included),
+  * crash recovery: a shard worker SIGKILLed mid-round is respawned and its
+    journaled queue replayed without losing updates or double-counting
+    ``effective_round`` (heavy), and a stuck (SIGSTOPped) worker surfaces a
+    counted drain timeout instead of a silent partial drain (heavy).
+"""
+
+import os
+import signal
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import (
+    AggregationConfig,
+    ModelMeta,
+    UpdateDelta,
+    coalesced_aggregate,
+)
+from repro.core.runtime_threaded import AsyncThreadedRuntime
+from repro.core.store import GLOBAL_KEY, ModelStore, ProcessShardedModelStore
+from repro.privacy.secure_agg import PairwiseMasker
+from repro.utils.tree import unflatten_params
+
+from test_store_equivalence import (
+    NOFAST,
+    apply_sequential,
+    assert_trees_close,
+    make_schedule,
+    make_tree,
+    replay_through_store,
+)
+
+
+@pytest.fixture
+def init_tree():
+    return make_tree(np.random.default_rng(0))
+
+
+@pytest.mark.slow
+def test_real_process_parity_with_flat(init_tree):
+    """Same schedule through the flat drain and real spawned workers: every
+    tier's weights/meta/stats agree — process boundaries are invisible."""
+    rng = np.random.default_rng(51)
+    keys = [f"loc:{i}" for i in range(4)]
+    models = [GLOBAL_KEY] + keys
+    events = make_schedule(rng, models, n_updates=40)
+    seq = apply_sequential(init_tree, models, events, AggregationConfig())
+
+    flat = ModelStore(init_tree, keys, batch_aggregation=True, max_coalesce=6)
+    replay_through_store(flat, events, np.random.default_rng(1))
+    with ProcessShardedModelStore(init_tree, keys, n_shards=2,
+                                  batch_aggregation=True, max_coalesce=6,
+                                  drain_timeout_s=60.0) as proc:
+        replay_through_store(proc, events, np.random.default_rng(2))
+        for m in models:
+            lk = ("global", None) if m == GLOBAL_KEY else ("cluster", m)
+            assert proc.meta(*lk) == seq[m][1], m
+            assert_trees_close(proc.params(*lk), seq[m][0], msg=f"proc {m}")
+        fs, ps = flat.agg_stats(), proc.agg_stats()
+        for k in ("updates", "enqueued", "fast_path_frac"):
+            assert fs[k] == ps[k], k
+        assert ps["respawns"] == 0 and ps["drain_timeouts"] == 0
+        assert proc.pending_depth("global") == 0
+        assert proc.worker_spawns() == [1, 1]
+
+
+@pytest.mark.slow
+def test_threaded_runtime_process_pool_drain_mode(init_tree):
+    """Client threads against real workers with the per-shard drain pumps:
+    accounting closes, pumps shut down inside the bounded join, and the
+    result matches the order-independent reference fold."""
+    keys = ["p0", "p1", "p2"]
+    n_threads, per_thread = 4, 15
+    with ProcessShardedModelStore(init_tree, keys, agg_cfg=NOFAST,
+                                  n_shards=2, batch_aggregation=True,
+                                  max_coalesce=6,
+                                  drain_timeout_s=60.0) as store:
+        per_model = {m: [] for m in [GLOBAL_KEY] + keys}
+
+        def submitter(t):
+            trng = np.random.default_rng(100 + t)
+            for i in range(per_thread):
+                s = 10 + (t * per_thread + i) % 40
+                tree = make_tree(np.random.default_rng(7_000 + t * 1_000 + i))
+                key = keys[(t + i) % len(keys)]
+                store.handle_model_update("cluster", key, tree,
+                                          ModelMeta(s, 1, 1),
+                                          UpdateDelta(s, 1, 1))
+                store.handle_model_update("global", None, tree,
+                                          ModelMeta(s, 1, 1),
+                                          UpdateDelta(s, 1, 1))
+                per_model[key].append((tree, ModelMeta(s, 1, 1),
+                                       UpdateDelta(s, 1, 1)))
+                per_model[GLOBAL_KEY].append((tree, ModelMeta(s, 1, 1),
+                                              UpdateDelta(s, 1, 1)))
+
+        rt = AsyncThreadedRuntime([], store, drain_poll=1e-3)
+        assert rt.join_timeout == store.drain_timeout_s    # config-lifted
+        stop = threading.Event()
+        rt._start_drain_workers(stop)
+        # one scatter-gather pump, not one thread per shard
+        assert len(rt.drain_workers) == 1
+        subs = [threading.Thread(target=submitter, args=(t,))
+                for t in range(n_threads)]
+        for t in subs:
+            t.start()
+        for t in subs:
+            t.join(60.0)
+            assert not t.is_alive()
+        rt._join_drain_workers(stop)
+        assert not rt.errors
+        total = n_threads * per_thread * 2
+        assert store.n_enqueued == total
+        assert store.n_updates == total
+        # NOFAST folds are order-independent: any interleaving lands on the
+        # sample-weighted average of the same update multiset
+        for m, ups in per_model.items():
+            lk = ("global", None) if m == GLOBAL_KEY else ("cluster", m)
+            ref = coalesced_aggregate(init_tree, ModelMeta(), ups, NOFAST)
+            assert store.meta(*lk) == ref.meta, m
+            assert_trees_close(store.params(*lk), ref.params, atol=1e-4,
+                               msg=f"threaded proc {m}")
+
+
+@pytest.mark.slow
+def test_real_process_secure_rounds_stay_worker_local(init_tree):
+    """Secure cluster rounds fold inside the owning worker (masks + dropout
+    recovery never reach the parent): a dropped round recovers to the
+    unmasked fold, and a clean round on the other worker's model is
+    untouched by it."""
+    probe = ProcessShardedModelStore(init_tree, n_shards=2, inprocess=True)
+    key_a = "s0"
+    key_b = next(k for k in (f"s{i}" for i in range(1, 16))
+                 if probe.shard_of(k) != probe.shard_of(key_a))
+    keys = [key_a, key_b]
+    ids = [f"m{j}" for j in range(3)]
+
+    def drive(with_dropout, mask_scale):
+        mk = PairwiseMasker(seed=2, mask_scale=mask_scale)
+        with ProcessShardedModelStore(init_tree, keys, n_shards=2,
+                                      masker=mk,
+                                      drain_timeout_s=60.0) as store:
+            for key in keys:
+                mkey = store.model_key("cluster", key)
+                subs = ids[:-1] if (with_dropout and key == key_a) else ids
+                for cid in subs:
+                    crng = np.random.default_rng(hash((cid, key)) % 2**31)
+                    d = jnp.asarray(crng.standard_normal(17), jnp.float32)
+                    masked = unflatten_params(
+                        mk.mask_delta_flat(d, cid, ids, 0, mkey, weight=10.0),
+                        init_tree)
+                    store.submit_secure("cluster", key, cid, 0, masked,
+                                        UpdateDelta(10, 1, 1))
+                store.drain_secure("cluster", key, 0, ids)
+            return ({k: store.params("cluster", k) for k in keys},
+                    store.agg_stats())
+
+    dropped, dstats = drive(True, 2.0)
+    clean, _ = drive(False, 2.0)
+    unmasked_dropped, _ = drive(True, 0.0)
+    assert dstats["secure_rounds"] == 2
+    assert dstats["secure_recoveries"] == 1
+    for k in init_tree:
+        np.testing.assert_array_equal(np.asarray(dropped[key_b][k]),
+                                      np.asarray(clean[key_b][k]))
+    assert_trees_close(dropped[key_a], unmasked_dropped[key_a], atol=1e-4)
+
+
+# =========================================================================
+# crash recovery                                                [satellite]
+# =========================================================================
+
+def test_inprocess_kill_respawn_replays_journal(init_tree):
+    """Fast deterministic twin of the heavy kill test: the emulation's
+    killed worker loses its queues, the journal replays them on respawn."""
+    keys = ["c0", "c1"]
+    store = ProcessShardedModelStore(init_tree, keys, n_shards=2,
+                                     batch_aggregation=True, max_coalesce=4,
+                                     inprocess=True)
+    rng = np.random.default_rng(3)
+    for i in range(8):
+        for key in keys:
+            store.handle_model_update("cluster", key, make_tree(rng),
+                                      ModelMeta(5, 1, 1), UpdateDelta(5, 1, 1))
+        store.handle_model_update("global", None, make_tree(rng),
+                                  ModelMeta(5, 1, 1), UpdateDelta(5, 1, 1))
+    before = {("cluster", k): store.effective_round("cluster", k)
+              for k in keys}
+    before[("global", None)] = store.effective_round("global")
+    store._debug_kill_worker(0)
+    store._debug_kill_worker(1)
+    assert store.drain_all() == 24          # nothing lost to the dead queues
+    stats = store.agg_stats()
+    assert stats["respawns"] == 2
+    assert stats["updates"] == stats["enqueued"] == 24
+    for lk, er in before.items():
+        assert store.effective_round(*lk) == er     # no double-counting
+        assert store.meta(*lk).round == er
+        assert store.pending_depth(*lk) == 0
+
+
+def test_submit_path_errors_deferred_to_next_drain(init_tree):
+    """A fire-and-forget command that fails worker-side must not be
+    swallowed (the journal would stay inflated forever): the error is
+    deferred and becomes the error reply of the next drain, without
+    stranding the batchmates it shipped with."""
+    from repro.core import server_proc
+
+    store = ProcessShardedModelStore(init_tree, ["c0"], n_shards=1,
+                                     inprocess=True)
+    sh = store._proc_shards[0]
+    with sh.journal_lock:                  # a corrupt wire message
+        store._outbox_put(sh, server_proc.packb(
+            ["sub", 99, "unknown-key", init_tree, [1, 1, 1], [1, 1, 1]]))
+    store.handle_model_update("cluster", "c0", init_tree,
+                              ModelMeta(5, 1, 1), UpdateDelta(5, 1, 1))
+    with pytest.raises(RuntimeError, match="deferred submit-path errors"):
+        store.drain("cluster", "c0")
+    # the poison item did not strand its batchmate: the next drain folds it
+    assert store.drain("cluster", "c0") == 1
+    assert store.meta("cluster", "c0").round == 1
+
+
+@pytest.mark.heavy
+def test_kill_worker_mid_round_respawn_replays_queue(init_tree):
+    """SIGKILL both shard workers while client threads are mid-round and
+    the drain pumps are live: the respawn path must replay each journaled
+    queue — no lost updates, no double-counted ``effective_round``."""
+    keys = [f"k{i}" for i in range(6)]
+    n_threads, per_thread = 4, 20
+    with ProcessShardedModelStore(init_tree, keys, agg_cfg=NOFAST,
+                                  n_shards=2, batch_aggregation=True,
+                                  max_coalesce=5,
+                                  drain_timeout_s=60.0) as store:
+        store.drain_all()                   # both workers warm
+        per_model = {m: [] for m in [GLOBAL_KEY] + keys}
+        record_lock = threading.Lock()
+
+        def submitter(t):
+            trng = np.random.default_rng(500 + t)
+            for i in range(per_thread):
+                s = int(trng.integers(1, 80))
+                tree = make_tree(np.random.default_rng(9_000 + t * 997 + i))
+                key = keys[int(trng.integers(len(keys)))]
+                store.handle_model_update("cluster", key, tree,
+                                          ModelMeta(s, 1, 1),
+                                          UpdateDelta(s, 1, 1))
+                store.handle_model_update("global", None, tree,
+                                          ModelMeta(s, 1, 1),
+                                          UpdateDelta(s, 1, 1))
+                with record_lock:
+                    per_model[key].append((tree, ModelMeta(s, 1, 1),
+                                           UpdateDelta(s, 1, 1)))
+                    per_model[GLOBAL_KEY].append((tree, ModelMeta(s, 1, 1),
+                                                  UpdateDelta(s, 1, 1)))
+                time.sleep(1e-3)
+
+        def killer():
+            time.sleep(0.05)
+            store._debug_kill_worker(0)
+            time.sleep(0.05)
+            store._debug_kill_worker(1)
+
+        rt = AsyncThreadedRuntime([], store, drain_poll=1e-3,
+                                  join_timeout=120.0)
+        stop = threading.Event()
+        rt._start_drain_workers(stop)
+        threads = [threading.Thread(target=submitter, args=(t,))
+                   for t in range(n_threads)] + \
+                  [threading.Thread(target=killer)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(120.0)
+            assert not t.is_alive()
+        rt._join_drain_workers(stop)
+        assert not rt.errors
+
+        total = n_threads * per_thread * 2
+        stats = store.agg_stats()
+        assert stats["respawns"] >= 2
+        assert store.n_enqueued == total
+        assert store.n_updates == total     # replay lost nothing...
+        rounds = store.meta("global").round + \
+            sum(store.meta("cluster", k).round for k in keys)
+        assert rounds == total              # ...and double-counted nothing
+        for lk in [("global", None)] + [("cluster", k) for k in keys]:
+            assert store.effective_round(*lk) == store.meta(*lk).round
+            assert store.pending_depth(*lk) == 0
+        for m, ups in per_model.items():
+            lk = ("global", None) if m == GLOBAL_KEY else ("cluster", m)
+            ref = coalesced_aggregate(init_tree, ModelMeta(), ups, NOFAST)
+            assert store.meta(*lk) == ref.meta, m
+            assert_trees_close(store.params(*lk), ref.params, atol=1e-4,
+                               msg=f"post-respawn {m}")
+
+
+@pytest.mark.heavy
+def test_stuck_worker_surfaces_drain_timeout_and_respawns(init_tree):
+    """A SIGSTOPped (alive but unresponsive) worker must not silently
+    return a partial drain: the bounded deadline expires, the timeout is
+    counted in agg_stats, and the respawned worker folds the replayed
+    queue on the retry."""
+    with ProcessShardedModelStore(init_tree, ["c0"], n_shards=1,
+                                  batch_aggregation=True,
+                                  drain_timeout_s=2.0) as store:
+        rng = np.random.default_rng(4)
+        store.handle_model_update("cluster", "c0", make_tree(rng),
+                                  ModelMeta(5, 1, 1), UpdateDelta(5, 1, 1))
+        assert store.drain("cluster", "c0") == 1    # worker warm + folding
+        os.kill(store._proc_shards[0].handle.proc.pid, signal.SIGSTOP)
+        for _ in range(3):
+            store.handle_model_update("cluster", "c0", make_tree(rng),
+                                      ModelMeta(5, 1, 1), UpdateDelta(5, 1, 1))
+        assert store.drain("cluster", "c0") == 3    # retried post-respawn
+        stats = store.agg_stats()
+        assert stats["drain_timeouts"] >= 1
+        assert stats["respawns"] >= 1
+        assert store.meta("cluster", "c0").round == 4
+        assert store.effective_round("cluster", "c0") == 4

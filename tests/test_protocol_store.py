@@ -1,17 +1,14 @@
 """Three-tier store, Algorithm 1 protocol, and both async runtimes."""
 
-import threading
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.aggregation import AggregationConfig, ModelMeta, UpdateDelta
+from repro.core.aggregation import ModelMeta, UpdateDelta
 from repro.core.fedccl import ClusterSpaceConfig, FedCCL, FedCCLConfig
-from repro.core.protocol import Client, ClientSpec
-from repro.core.runtime_sim import AsyncSimRuntime
-from repro.core.runtime_threaded import AsyncThreadedRuntime
-from repro.core.store import GLOBAL_KEY, ModelStore
+from repro.core.protocol import ClientSpec
+from repro.core.store import ModelStore
 
 
 def scalar_train_fn(params, dataset, rng, anchor):

@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 
 from repro.configs.solar_lstm import FEATURES, HISTORY_STEPS, HORIZON_STEPS
-from repro.data.solar import RANGES, SiteSpec, SolarDataGenerator, generate_fleet
+from repro.data.solar import generate_fleet
 from repro.data.windows import make_windows, split_windows
 
 

@@ -6,8 +6,12 @@ offers —
   1. sequential pairwise Algorithm-2 fold (``aggregate_models``),
   2. flat coalescing drain (``ModelStore`` batched),
   3. sharded two-level drain (``ShardedModelStore``),
-  4. the deterministic sim runtime,
-  5. the threaded runtime,
+  4. process-sharded drain (``ProcessShardedModelStore`` — shard servers as
+     worker processes; the matrix runs the deterministic in-process
+     emulation, which round-trips the identical wire codec and worker fold
+     code; real spawned workers are covered by ``test_process_store.py``),
+  5. the deterministic sim runtime,
+  6. the threaded runtime,
 
 — and asserts parity of every tier's weights (atol <= 1e-5), metadata,
 ``agg_stats()`` accounting, staleness, and privacy accounting, including
@@ -52,7 +56,12 @@ from repro.core.aggregation import (
 from repro.core.protocol import Client, ClientSpec, build_update
 from repro.core.runtime_sim import AsyncSimRuntime
 from repro.core.runtime_threaded import AsyncThreadedRuntime
-from repro.core.store import GLOBAL_KEY, ModelStore, ShardedModelStore
+from repro.core.store import (
+    GLOBAL_KEY,
+    ModelStore,
+    ProcessShardedModelStore,
+    ShardedModelStore,
+)
 from repro.privacy.secure_agg import PairwiseMasker
 
 NOFAST = AggregationConfig(sequential_fast_path=False)
@@ -119,7 +128,8 @@ def replay_through_store(store, events, drain_rng=None, drain_prob=0.3):
 @pytest.mark.parametrize("fast_path", [True, False])
 def test_sequential_flat_sharded_parity(n_shards, fast_path):
     """Same pre-built schedule through the pairwise fold, the flat drain,
-    and the sharded two-level drain: all tiers must agree."""
+    the sharded two-level drain, and the process-sharded drain: all tiers
+    must agree."""
     rng = np.random.default_rng(100 * n_shards + fast_path)
     cfg = AggregationConfig(sequential_fast_path=fast_path)
     init = make_tree(rng)
@@ -133,28 +143,37 @@ def test_sequential_flat_sharded_parity(n_shards, fast_path):
     sharded = ShardedModelStore(init, cluster_keys, agg_cfg=cfg,
                                 n_shards=n_shards, batch_aggregation=True,
                                 max_coalesce=7)
+    proc = ProcessShardedModelStore(init, cluster_keys, agg_cfg=cfg,
+                                    n_shards=n_shards, batch_aggregation=True,
+                                    max_coalesce=7, inprocess=True)
     replay_through_store(flat, events, np.random.default_rng(1))
     replay_through_store(sharded, events, np.random.default_rng(2))
+    replay_through_store(proc, events, np.random.default_rng(3))
 
     for m in models:
         level, key = ("global", None) if m == GLOBAL_KEY else ("cluster", m)
         sp, sm = seq[m]
         assert flat.meta(level, key) == sm, m
         assert sharded.meta(level, key) == sm, m
+        assert proc.meta(level, key) == sm, m
         assert_trees_close(flat.params(level, key), sp, msg=f"flat {m}")
         assert_trees_close(sharded.params(level, key), sp, msg=f"sharded {m}")
+        assert_trees_close(proc.params(level, key), sp, msg=f"process {m}")
 
-    fs, ss = flat.agg_stats(), sharded.agg_stats()
+    fs, ss, ps = flat.agg_stats(), sharded.agg_stats(), proc.agg_stats()
     for k in ("updates", "enqueued"):
-        assert fs[k] == ss[k] == len(events), k
-    assert fs["lock_waits"] == ss["lock_waits"] == 0
-    # the plan replays fast-path resets identically across both drains
-    assert fs["fast_path_frac"] == ss["fast_path_frac"]
+        assert fs[k] == ss[k] == ps[k] == len(events), k
+    assert fs["lock_waits"] == ss["lock_waits"] == ps["lock_waits"] == 0
+    # the plan replays fast-path resets identically across all drains
+    assert fs["fast_path_frac"] == ss["fast_path_frac"] == ps["fast_path_frac"]
     assert sharded.pending_depth("global") == 0
+    assert proc.pending_depth("global") == 0
+    assert ps["respawns"] == 0 and ps["drain_timeouts"] == 0
 
 
 def test_effective_round_parity_flat_vs_sharded():
-    """The staleness reference must not depend on the store topology."""
+    """The staleness reference must not depend on the store topology —
+    thread shards and worker processes included."""
     rng = np.random.default_rng(7)
     init = make_tree(rng)
     keys = ["c0", "c1", "c2"]
@@ -162,17 +181,24 @@ def test_effective_round_parity_flat_vs_sharded():
     flat = ModelStore(init, keys, batch_aggregation=True)
     sharded = ShardedModelStore(init, keys, n_shards=3,
                                 batch_aggregation=True)
+    proc = ProcessShardedModelStore(init, keys, n_shards=3,
+                                    batch_aggregation=True, inprocess=True)
     for i, (m, p, um, d) in enumerate(events):
         level, key = ("global", None) if m == GLOBAL_KEY else ("cluster", m)
         flat.handle_model_update(level, key, p, um, d)
         sharded.handle_model_update(level, key, p, um, d)
+        proc.handle_model_update(level, key, p, um, d)
         for lk in [("global", None)] + [("cluster", k) for k in keys]:
             assert flat.effective_round(*lk) == sharded.effective_round(*lk)
+            assert flat.effective_round(*lk) == proc.effective_round(*lk)
     flat.drain_all()
     sharded.drain_all()
+    proc.drain_all()
     for lk in [("global", None)] + [("cluster", k) for k in keys]:
         assert flat.effective_round(*lk) == sharded.effective_round(*lk)
+        assert flat.effective_round(*lk) == proc.effective_round(*lk)
         assert flat.meta(*lk).round == sharded.meta(*lk).round
+        assert flat.meta(*lk).round == proc.meta(*lk).round
 
 
 # =========================================================================
@@ -246,7 +272,10 @@ def test_random_drain_orderings_property(seed):
     for store in (ModelStore(init, keys, batch_aggregation=True,
                              max_coalesce=3),
                   ShardedModelStore(init, keys, n_shards=2, batch_aggregation=True,
-                                    max_coalesce=3)):
+                                    max_coalesce=3),
+                  ProcessShardedModelStore(init, keys, n_shards=2,
+                                           batch_aggregation=True,
+                                           max_coalesce=3, inprocess=True)):
         replay_through_store(store, events, np.random.default_rng(seed + 1),
                              drain_prob=0.5)
         for m in models:
@@ -325,6 +354,14 @@ def make_store(kind, init, masker=None):
         return ModelStore(init, keys, agg_cfg=NOFAST,
                           batch_aggregation=True, max_coalesce=5,
                           masker=masker)
+    if kind == "process":
+        # deterministic in-process emulation: identical wire codec + worker
+        # fold code, minus the OS processes (real spawns are exercised by
+        # tests/test_process_store.py)
+        return ProcessShardedModelStore(init, keys, agg_cfg=NOFAST,
+                                        n_shards=4, batch_aggregation=True,
+                                        max_coalesce=5, masker=masker,
+                                        inprocess=True)
     return ShardedModelStore(init, keys, agg_cfg=NOFAST, n_shards=4,
                              batch_aggregation=True, max_coalesce=5,
                              masker=masker)
@@ -351,7 +388,7 @@ def test_runtimes_match_reference_all_tiers():
     ref = scripted_reference(init)
     runs = {}
     for runtime in ("sim", "threaded"):
-        for kind in ("flat", "sharded"):
+        for kind in ("flat", "sharded", "process"):
             store, _ = run_runtime(runtime, kind, init)
             runs[(runtime, kind)] = store
             for m, res in ref.items():
@@ -363,11 +400,14 @@ def test_runtimes_match_reference_all_tiers():
             assert stats["updates"] == N_CLIENTS * ROUNDS * 2
             assert stats["enqueued"] == N_CLIENTS * ROUNDS * 2
             assert store.pending_depth("global") == 0
-    # sim schedules are deterministic: flat and sharded stores see the
-    # identical event stream, so staleness logs must match exactly
+    # sim schedules are deterministic: flat, sharded and process-sharded
+    # stores see the identical event stream, so staleness logs (measured
+    # against effective_round) must match exactly
     _, rt_flat = run_runtime("sim", "flat", init, seed=3)
     _, rt_shard = run_runtime("sim", "sharded", init, seed=3)
+    _, rt_proc = run_runtime("sim", "process", init, seed=3)
     assert rt_flat.staleness_log == rt_shard.staleness_log
+    assert rt_flat.staleness_log == rt_proc.staleness_log
     assert all(s >= 0 for s in rt_flat.staleness_log)
 
 
@@ -397,7 +437,7 @@ def test_secure_equivalence_across_paths():
     baseline = run_secure("sim", "flat", init, mask_scale=0.0)
     models = [("global", None)] + [("cluster", k) for k in baseline.keys()]
     for runtime in ("sim", "threaded"):
-        for kind in ("flat", "sharded"):
+        for kind in ("flat", "sharded", "process"):
             store = run_secure(runtime, kind, init, mask_scale=1.5)
             assert store.n_secure_rounds == baseline.n_secure_rounds
             for lk in models:
@@ -432,7 +472,7 @@ def test_secure_sharded_dropout_isolated_per_shard():
             for cid in submitters:
                 crng = np.random.default_rng(hash((cid, key)) % 2**31)
                 d = jnp.asarray(crng.standard_normal(17), jnp.float32)
-                from repro.utils.tree import unflatten_params, flatten_params
+                from repro.utils.tree import unflatten_params
                 masked = unflatten_params(
                     mk.mask_delta_flat(d, cid, ids, 0, mkey, weight=10.0),
                     init)
@@ -457,13 +497,16 @@ def test_secure_sharded_dropout_isolated_per_shard():
 
 
 @pytest.mark.slow
-def test_secure_sim_dropout_recovery_sharded_matches_unmasked():
-    """Runtime-level: sharded secure sim with dropouts lands on the same
-    models as the unmasked run with an identical schedule."""
+@pytest.mark.parametrize("kind", ["sharded", "process"])
+def test_secure_sim_dropout_recovery_sharded_matches_unmasked(kind):
+    """Runtime-level: sharded/process-sharded secure sim with dropouts lands
+    on the same models as the unmasked run with an identical schedule (for
+    the process flavor the seed-reconstruction recovery runs inside the
+    owning worker, never in the parent)."""
     rng = np.random.default_rng(17)
     init = make_tree(rng)
-    masked = run_secure("sim", "sharded", init, mask_scale=2.0, dropout=0.3)
-    plain = run_secure("sim", "sharded", init, mask_scale=0.0, dropout=0.3)
+    masked = run_secure("sim", kind, init, mask_scale=2.0, dropout=0.3)
+    plain = run_secure("sim", kind, init, mask_scale=0.0, dropout=0.3)
     assert masked.n_secure_recoveries == plain.n_secure_recoveries
     assert masked.n_secure_recoveries > 0
     for lk in [("global", None)] + [("cluster", k) for k in masked.keys()]:
@@ -580,6 +623,9 @@ def test_threaded_runtime_sharded_clients_end_to_end():
                             max_coalesce=4),
     lambda init: ShardedModelStore(init, ["c0"], n_shards=2,
                                    batch_aggregation=True, max_coalesce=4),
+    lambda init: ProcessShardedModelStore(init, ["c0"], n_shards=2,
+                                          batch_aggregation=True,
+                                          max_coalesce=4, inprocess=True),
 ])
 def test_effective_round_never_regresses_during_drain(make):
     """Regression: a drain used to pop the queue before publishing the new
@@ -622,6 +668,9 @@ def test_effective_round_never_regresses_during_drain(make):
     lambda init: ModelStore(init, ["c0"], batch_aggregation=True),
     lambda init: ShardedModelStore(init, ["c0"], n_shards=2,
                                    batch_aggregation=True),
+    lambda init: ProcessShardedModelStore(init, ["c0"], n_shards=2,
+                                          batch_aggregation=True,
+                                          inprocess=True),
 ])
 def test_failed_drain_requeues_batch_and_retires_inflight(make):
     """Regression: a drain that raises mid-fold (malformed update) must not
