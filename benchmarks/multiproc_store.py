@@ -1,4 +1,5 @@
-"""Multi-process federation server benchmark — threaded-K vs process-K.
+"""Multi-process federation server benchmark — threaded-K vs process-K
+vs TCP-loopback, plus the lazy-mirror-sync bytes-on-wire comparison.
 
 Scenario: the federation server's real serving mix.  W writer threads
 hammer cluster + global submits (the Algorithm-1 HandleModelUpdate hot
@@ -16,6 +17,18 @@ clock stops.  Compared at matched K:
                queue, cluster folds run in the workers, the global model
                merges via the cross-server partial merge — so aggregation
                *overlaps* request serving instead of stealing its GIL.
+  tcp_K        the same store over ``server_hosts`` — K standalone shard
+               servers (``repro.launch.shard_server``) on loopback TCP,
+               the multi-host topology.  Rows carry the bytes-on-wire
+               counters (``wire_tx_bytes``/``wire_rx_bytes``).
+
+Mirror-sync phase (``mirror_sync``): one deterministic single-threaded
+schedule replayed through two TCP stores — ``mirror_sync_every=1``
+(eager) vs ``=4`` (lazy) — drained identically, mirrors synced, final
+weights checksummed.  The lazy run must land on the SAME weights with a
+fraction of the reply bytes; ``reply_bytes_ratio`` is the gated metric
+(``scripts/bench_gate.py``) and ``weights_match`` is asserted here, so a
+semantics regression fails the benchmark itself.
 
 Fold route: the accelerator aggregation path (``use_pallas=True`` —
 ``kernels/fedavg_agg``; Pallas interpret mode on CPU hosts), the
@@ -49,6 +62,7 @@ from repro.checkpoint.msgpack_ckpt import packb
 from repro.core.aggregation import AggregationConfig, ModelMeta, UpdateDelta
 from repro.core.runtime_threaded import AsyncThreadedRuntime
 from repro.core.store import ProcessShardedModelStore, ShardedModelStore
+from repro.core.transport import LoopbackShardServers
 
 N_CLUSTERS = 16
 MAX_COALESCE = 16
@@ -122,8 +136,56 @@ def bench_mixed(name, store, *, n_writers, per_writer, n_fetchers,
     if "respawns" in stats:
         row["respawns"] = stats["respawns"]
         row["drain_timeouts"] = stats["drain_timeouts"]
+    if "wire_tx_bytes" in stats:                # bytes-on-wire (process/tcp)
+        row["transport"] = stats["transport"]
+        row["wire_tx_bytes"] = stats["wire_tx_bytes"]
+        row["wire_rx_bytes"] = stats["wire_rx_bytes"]
     assert store.n_updates - n_warm == submits, "lost updates in benchmark"
     return row
+
+
+def bench_mirror_sync(init, hosts, agg_cfg, n_updates):
+    """Deterministic lazy-mirror-sync comparison: identical schedule,
+    identical drain points, eager (sync_every=1) vs lazy (=4) TCP stores.
+    Returns the phase report; asserts the final weights match."""
+    keys = [f"c{i}" for i in range(N_CLUSTERS)]
+    out = {}
+    sums = {}
+    for sync_every in (1, 4):
+        rng = np.random.default_rng(7)
+        pool = _make_pool(rng, 20_000, 8)
+        store = ProcessShardedModelStore(
+            init, keys, agg_cfg=agg_cfg, server_hosts=hosts,
+            batch_aggregation=True, max_coalesce=MAX_COALESCE,
+            mirror_sync_every=sync_every, drain_timeout_s=180.0)
+        try:
+            for i in range(n_updates):
+                key = keys[i % N_CLUSTERS]
+                s = int(rng.integers(20, 200))
+                store.handle_model_update(
+                    "cluster", key, pool[i % len(pool)],
+                    ModelMeta(s, 1, 1), UpdateDelta(s, 1, 1))
+                store.drain("cluster", key)     # one drain reply per update
+            store.sync_mirrors()
+            tx, rx = store.wire_bytes()
+            sums[sync_every] = np.array(
+                [float(np.asarray(store.params("cluster", k)["w"]).sum())
+                 for k in keys])
+            out[f"sync{sync_every}"] = {
+                "mirror_sync_every": sync_every,
+                "updates": n_updates,
+                "wire_tx_bytes": tx,
+                "reply_bytes": rx,
+                "mirror_syncs": store.agg_stats()["mirror_syncs"],
+            }
+        finally:
+            store.close()
+    match = bool(np.allclose(sums[1], sums[4], atol=1e-4))
+    assert match, "lazy mirror sync changed the final weights"
+    out["weights_match"] = match
+    out["reply_bytes_ratio"] = \
+        out["sync4"]["reply_bytes"] / out["sync1"]["reply_bytes"]
+    return out
 
 
 def _bench_pair(tag, init, agg_cfg, k, kw):
@@ -159,9 +221,11 @@ def run(fast: bool = False, out_path: str = "BENCH_multiproc.json") -> dict:
     rows = []
     ratios = {}
     kernel_cfg = AggregationConfig(use_pallas=True)
+    threaded_at_k = {}
     for k in ks:
         threaded, proc = _bench_pair("kernel", init, kernel_cfg, k, kw)
         rows += [threaded, proc]
+        threaded_at_k[k] = threaded
         ratios[f"K{k}"] = proc["submits_per_s"] / threaded["submits_per_s"]
     # the nothing-to-offload counter-regime, one K for scale reference
     threaded, proc = _bench_pair("jnp", init, AggregationConfig(),
@@ -170,14 +234,35 @@ def run(fast: bool = False, out_path: str = "BENCH_multiproc.json") -> dict:
     ratios[f"jnp_K{max(ks)}"] = \
         proc["submits_per_s"] / threaded["submits_per_s"]
 
+    # multi-host topology: the same mixed storm over loopback TCP at the
+    # largest K, plus the deterministic lazy-mirror-sync comparison —
+    # both share one group of standalone shard servers
+    k_tcp = max(ks)
+    with LoopbackShardServers(k_tcp) as srv:
+        store = ProcessShardedModelStore(
+            init, [f"c{i}" for i in range(N_CLUSTERS)],
+            agg_cfg=kernel_cfg, server_hosts=srv.hosts,
+            batch_aggregation=True, max_coalesce=MAX_COALESCE,
+            drain_timeout_s=180.0)
+        try:
+            tcp = bench_mixed(f"tcp_kernel_{k_tcp}", store, **kw)
+        finally:
+            store.close()
+        rows.append(tcp)
+        ratios[f"tcp_K{k_tcp}"] = \
+            tcp["submits_per_s"] / threaded_at_k[k_tcp]["submits_per_s"]
+        mirror_sync = bench_mirror_sync(init, srv.hosts, kernel_cfg,
+                                        n_updates=48 if fast else 96)
+
     report = {
         "config": {"writers": n_writers, "fetchers": n_fetchers,
                    "per_writer": per_writer, "per_fetcher": per_fetcher,
                    "clusters": N_CLUSTERS, "params": t_params,
                    "max_coalesce": MAX_COALESCE, "shard_counts": list(ks),
-                   "fold_route": "kernel"},
+                   "tcp_shards": k_tcp, "fold_route": "kernel"},
         "rows": rows,
         "process_vs_threaded": ratios,
+        "mirror_sync": mirror_sync,
     }
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2)
@@ -188,14 +273,18 @@ def csv_rows(report: dict):
     out = []
     for r in report["rows"]:
         k = r["shards"]
-        tag = "kernel" if "_kernel_" in r["store"] else "jnp"
-        key = f"K{k}" if tag == "kernel" else f"jnp_K{k}"
+        if r["store"].startswith("tcp_"):
+            key = f"tcp_K{k}"
+        elif "_kernel_" in r["store"]:
+            key = f"K{k}"
+        else:
+            key = f"jnp_K{k}"
         ratio = report["process_vs_threaded"].get(key, 0.0)
         out.append((f"multiproc_store_{r['store']}",
                     r["wall_s"] * 1e6 / max(r["submits"], 1),
                     f"submits_per_s={r['submits_per_s']:.0f};"
                     f"fetches_per_s={r['fetches_per_s']:.0f};"
-                    f"proc_vs_thread_{key}={ratio:.2f}"))
+                    f"vs_thread_{key}={ratio:.2f}"))
     return out
 
 
@@ -203,6 +292,10 @@ if __name__ == "__main__":
     rep = run(fast=os.environ.get("REPRO_BENCH_FAST", "0") == "1")
     for row in rep["rows"]:
         print(row)
-    print("process vs threaded (submits/s ratio):", {
+    print("vs threaded (submits/s ratio):", {
         k: round(v, 2) for k, v in rep["process_vs_threaded"].items()})
+    ms = rep["mirror_sync"]
+    print(f"lazy mirror sync: reply bytes x{ms['reply_bytes_ratio']:.2f} "
+          f"({ms['sync4']['reply_bytes']} vs {ms['sync1']['reply_bytes']}), "
+          f"weights_match={ms['weights_match']}")
     print("report -> BENCH_multiproc.json")

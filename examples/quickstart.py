@@ -1,4 +1,4 @@
-"""Quickstart: FedCCL in ~60 lines.
+"""Quickstart: FedCCL in ~80 lines, on any server topology.
 
 Three organizations in two geographic regions federate a (reduced) Gemma
 model: pre-training DBSCAN clusters them, each trains locally, the server
@@ -6,8 +6,22 @@ aggregates per Algorithm 2 into cluster + global models, and a fourth org
 joining later immediately receives its region's specialized model
 (Predict & Evolve).
 
-    PYTHONPATH=src python examples/quickstart.py
+``--topology`` selects the federation server flavor (one runnable
+command per row of the README topology table; details in
+docs/ARCHITECTURE.md):
+
+    PYTHONPATH=src python examples/quickstart.py --topology single
+    PYTHONPATH=src python examples/quickstart.py --topology sharded
+    PYTHONPATH=src python examples/quickstart.py --topology process
+    PYTHONPATH=src python examples/quickstart.py --topology tcp
+
+``tcp`` spawns two standalone shard servers (``repro.launch.
+shard_server``) on loopback ports via ``LoopbackShardServers`` — the
+same entrypoint you run per host in a real multi-host deployment — and
+points ``FedCCLConfig.server_hosts`` at them.
 """
+
+import argparse
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +36,33 @@ from repro.optim.optimizers import adamw
 from repro.training.train_step import TrainState, build_train_step
 
 
+def make_config(topology: str, hosts) -> FedCCLConfig:
+    base = dict(spaces=(ClusterSpaceConfig(
+        "loc", eps=150.0, min_samples=2, metric="haversine"),),
+        ewc_lambda=0.01, seed=0)
+    if topology == "single":
+        return FedCCLConfig(**base)
+    base["batch_aggregation"] = True
+    if topology == "sharded":
+        return FedCCLConfig(server_shards=2, **base)
+    if topology == "process":
+        return FedCCLConfig(server_processes=2, **base)
+    if topology == "tcp":
+        return FedCCLConfig(server_hosts=tuple(hosts),
+                            mirror_sync_every=4, drain_timeout_s=120.0,
+                            **base)
+    raise ValueError(f"unknown topology {topology!r}")
+
+
 def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--topology",
+                    choices=("single", "sharded", "process", "tcp"),
+                    default="single",
+                    help="federation server flavor (see the README "
+                         "topology table / docs/ARCHITECTURE.md)")
+    args = ap.parse_args()
+
     cfg = reduced_for_smoke(get_config("gemma-2b"))
     model = build_model(cfg)
     opt = adamw(1e-3)
@@ -38,34 +78,54 @@ def main():
                                           for k, v in batch.items()})
         return state.params, n_batches * bsz, 1
 
-    fed = FedCCL(
-        FedCCLConfig(spaces=(ClusterSpaceConfig(
-            "loc", eps=150.0, min_samples=2, metric="haversine"),),
-            ewc_lambda=0.01, seed=0),
-        init_params=model.init(jax.random.key(0)),
-        train_fn=train_fn)
+    servers = None
+    if args.topology == "tcp":
+        from repro.core.transport import LoopbackShardServers
 
-    orgs = [
-        ClientSpec("org-vienna-1", {"loc": np.array([48.21, 16.37])}, None),
-        ClientSpec("org-vienna-2", {"loc": np.array([48.30, 16.40])}, None),
-        ClientSpec("org-berlin-1", {"loc": np.array([52.52, 13.40])}, None),
-        ClientSpec("org-berlin-2", {"loc": np.array([52.45, 13.30])}, None),
-    ]
-    assignments = fed.setup(orgs)
-    print("cluster assignments:", assignments)
+        servers = LoopbackShardServers(2)
+        print("loopback shard servers:", servers.hosts)
+    try:
+        fed = FedCCL(make_config(args.topology, servers.hosts if servers
+                                 else ()),
+                     init_params=model.init(jax.random.key(0)),
+                     train_fn=train_fn)
 
-    stats = fed.run(rounds=2)
-    print("async stats:", stats)
-    for key in fed.store.keys():
-        meta = fed.store.meta("cluster", key)
-        print(f"  cluster {key}: round={meta.round} "
-              f"samples={meta.samples_learned}")
+        orgs = [
+            ClientSpec("org-vienna-1", {"loc": np.array([48.21, 16.37])},
+                       None),
+            ClientSpec("org-vienna-2", {"loc": np.array([48.30, 16.40])},
+                       None),
+            ClientSpec("org-berlin-1", {"loc": np.array([52.52, 13.40])},
+                       None),
+            ClientSpec("org-berlin-2", {"loc": np.array([52.45, 13.30])},
+                       None),
+        ]
+        assignments = fed.setup(orgs)
+        print(f"topology {args.topology}: cluster assignments:", assignments)
 
-    # Predict & Evolve: a new Vienna org joins and gets the Vienna model
-    keys, params = fed.join(
-        ClientSpec("org-vienna-new", {"loc": np.array([48.25, 16.35])}, None))
-    print(f"new org assigned to {keys}; received specialized params "
-          f"({sum(x.size for x in jax.tree.leaves(params)):,} weights)")
+        stats = fed.run(rounds=2)
+        print("async stats:", stats)
+        fed.store.sync_mirrors()       # no-op except under lazy mirror sync
+        for key in fed.store.keys():
+            meta = fed.store.meta("cluster", key)
+            print(f"  cluster {key}: round={meta.round} "
+                  f"samples={meta.samples_learned}")
+        server_stats = fed.store.agg_stats()
+        if "transport" in server_stats:
+            print(f"  transport={server_stats['transport']} "
+                  f"respawns={server_stats['respawns']} "
+                  f"wire_rx_bytes={server_stats['wire_rx_bytes']}")
+
+        # Predict & Evolve: a new Vienna org joins, gets the Vienna model
+        keys, params = fed.join(
+            ClientSpec("org-vienna-new", {"loc": np.array([48.25, 16.35])},
+                       None))
+        print(f"new org assigned to {keys}; received specialized params "
+              f"({sum(x.size for x in jax.tree.leaves(params)):,} weights)")
+        fed.shutdown()
+    finally:
+        if servers is not None:
+            servers.close()
 
 
 if __name__ == "__main__":

@@ -62,6 +62,20 @@ def _multiproc_metrics(report: dict) -> dict:
             (r["submits_per_s"], None)
         out[f"multiproc/{r['store']}/fetches_per_s"] = \
             (r["fetches_per_s"], None)
+        if "wire_rx_bytes" in r:
+            out[f"multiproc/{r['store']}/wire_rx_bytes"] = \
+                (r["wire_rx_bytes"], None)
+    ms = report.get("mirror_sync")
+    if ms:
+        # deterministic replay: lazy (sync4) reply bytes over eager
+        # (sync1) — lower is better; weights equality is asserted inside
+        # the benchmark itself, so a semantics break fails the run
+        out["multiproc/tcp_reply_bytes_sync4_vs_sync1"] = \
+            (ms["reply_bytes_ratio"], False)
+        out["multiproc/tcp_sync1_reply_bytes"] = \
+            (ms["sync1"]["reply_bytes"], None)
+        out["multiproc/tcp_sync4_reply_bytes"] = \
+            (ms["sync4"]["reply_bytes"], None)
     return out
 
 

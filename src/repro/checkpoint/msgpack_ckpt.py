@@ -9,6 +9,7 @@ restart without losing federation progress.
 from __future__ import annotations
 
 import pathlib
+import sys
 
 import jax.numpy as jnp
 import msgpack
@@ -20,8 +21,27 @@ _EXT_ARRAY = 1
 def _default(obj):
     if isinstance(obj, (jnp.ndarray, np.ndarray)):
         arr = np.asarray(obj)
+        dt = arr.dtype
+        # canonical byte order on the wire is little-endian: the codec
+        # also carries cross-HOST traffic (repro.core.transport).  The
+        # dtype STRING must say so explicitly — str() drops the order
+        # character for native dtypes ('<f4' -> 'float32'), which a
+        # big-endian consumer would decode in its own order — and the
+        # BYTES are swapped when the producer's are big-endian.  Neither
+        # costs a copy on the (little-endian) hot path.
+        if str(dt) == "bfloat16":              # no numpy byteorder support
+            dtype_str = "bfloat16"
+            if sys.byteorder == "big":
+                arr = arr.view(np.uint16).astype("<u2")
+        elif dt.itemsize > 1 and dt.byteorder != "|":
+            if dt.byteorder == ">" or (dt.byteorder == "="
+                                       and sys.byteorder == "big"):
+                arr = arr.astype(dt.newbyteorder("<"))
+            dtype_str = dt.newbyteorder("<").str
+        else:
+            dtype_str = str(dt)
         payload = msgpack.packb(
-            (str(arr.dtype), list(arr.shape), arr.tobytes()), use_bin_type=True)
+            (dtype_str, list(arr.shape), arr.tobytes()), use_bin_type=True)
         return msgpack.ExtType(_EXT_ARRAY, payload)
     if isinstance(obj, (np.integer,)):
         return int(obj)
@@ -33,8 +53,17 @@ def _default(obj):
 def _decode_array(data):
     dtype, shape, raw = msgpack.unpackb(data, raw=False)
     if dtype == "bfloat16":
-        return np.frombuffer(raw, np.uint16).view(jnp.bfloat16).reshape(shape)
-    return np.frombuffer(raw, dtype).reshape(shape)
+        u16 = np.frombuffer(raw, "<u2")
+        if sys.byteorder == "big":
+            u16 = u16.astype(np.uint16)        # swap to native for the view
+        return u16.view(jnp.bfloat16).reshape(shape)
+    arr = np.frombuffer(raw, dtype).reshape(shape)
+    if arr.dtype.byteorder in ("<", ">"):
+        # numpy canonicalizes native-order specs to '=', so an explicit
+        # order here means non-native: hand consumers native order (jax
+        # rejects non-native arrays).  No copy on matching-order hosts.
+        arr = arr.astype(arr.dtype.newbyteorder("="))
+    return arr
 
 
 def _ext_hook(code, data):
@@ -90,6 +119,9 @@ def load_pytree(path):
 def save_store(path, store):
     from repro.core.store import GLOBAL_KEY
 
+    # lazy mirror sync (process/TCP stores): pull any folded-but-unshipped
+    # params before reading the mirrors, so checkpoints are never stale
+    store.sync_mirrors()
     blob = {}
     for key in [GLOBAL_KEY] + store.keys():
         params = store._records[key].params

@@ -63,9 +63,26 @@ class FedCCLConfig:
     # The sim runtime uses the deterministic in-process emulation; the
     # threaded runtime spawns real workers with crash detection + respawn.
     server_processes: int = 0
+    # multi-host federation server: "host:port" addresses of standalone
+    # shard servers (repro.launch.shard_server) — one worker per entry,
+    # reached over the framed-msgpack TCP transport (docs/WIRE_PROTOCOL.md)
+    # instead of spawning local processes.  Takes precedence over
+    # server_processes/server_shards; len(server_hosts) fixes the shard
+    # count.  Crash recovery carries over: a lost connection reconnects,
+    # re-seeds and replays the journal (idempotent by update seq).
+    server_hosts: tuple = ()
+    # lazy mirror sync (process/TCP stores): workers ship full params only
+    # every Nth drain reply per model and ack with seq-stamped metadata
+    # otherwise — cuts reply bandwidth ~N-fold on the drain path.  Reads,
+    # checkpoints and shutdown re-sync dirty mirrors through the
+    # store.sync_mirrors() barrier, so served snapshots are never stale.
+    # 1 = every reply ships params (the eager default).
+    mirror_sync_every: int = 1
     # bounded drain deadline: worker-reply waits in the process store and
     # drain-worker joins in the threaded runtime; expiries surface as
     # agg_stats()["drain_timeouts"] instead of silent partial drains
+    # (per-worker attribution in agg_stats()["shard_drain_timeouts"] for
+    # the process/TCP topologies)
     drain_timeout_s: float = 30.0
     # ---- privacy subsystem (repro.privacy) --------------------------------
     dp_clip: Optional[float] = None  # L2 clip of update deltas; None = DP off
@@ -88,12 +105,21 @@ class FedCCL:
         self.accountant = (RDPAccountant(target_delta=cfg.target_delta)
                            if cfg.dp_clip is not None else None)
         agg_cfg = AggregationConfig(use_pallas=cfg.use_pallas_agg)
-        if cfg.server_processes > 0:
+        if cfg.server_hosts:
+            self.store = ProcessShardedModelStore(
+                init_params, agg_cfg=agg_cfg,
+                server_hosts=list(cfg.server_hosts),
+                batch_aggregation=cfg.batch_aggregation,
+                max_coalesce=cfg.max_coalesce, masker=self.masker,
+                drain_timeout_s=cfg.drain_timeout_s,
+                mirror_sync_every=cfg.mirror_sync_every)
+        elif cfg.server_processes > 0:
             self.store = ProcessShardedModelStore(
                 init_params, agg_cfg=agg_cfg, n_shards=cfg.server_processes,
                 batch_aggregation=cfg.batch_aggregation,
                 max_coalesce=cfg.max_coalesce, masker=self.masker,
                 drain_timeout_s=cfg.drain_timeout_s,
+                mirror_sync_every=cfg.mirror_sync_every,
                 inprocess=(cfg.runtime == "sim"))
         elif cfg.server_shards > 0:
             self.store = ShardedModelStore(
@@ -177,7 +203,19 @@ class FedCCL:
     # --------------------------------------------------------------- privacy
     def privacy_report(self) -> dict:
         """(epsilon, delta) budgets and secure-aggregation round accounting
-        for the run so far (see ``repro.privacy``)."""
+        for the run so far (see ``repro.privacy``).
+
+        Topology-independent by construction: the report reads the store's
+        aggregate secure counters, which every flavor maintains identically
+        — on the sharded store each secure round folds on the model's
+        owning shard, and on the process/TCP stores it folds **inside the
+        owning worker** (masks and dropout seed-reconstruction never cross
+        the wire; only the counted totals come back in drain replies).
+        ``secure_agg.rounds`` therefore counts full-round folds across all
+        workers, and ``dropout_recoveries`` the worker-local seed
+        reconstructions.  Pair with ``store.agg_stats()`` for the
+        operational side (per-shard ``drain_timeouts``, respawns, wire
+        bytes) — see docs/OPERATIONS.md."""
         report = {
             "dp": {
                 "enabled": self.cfg.dp_clip is not None,

@@ -23,7 +23,10 @@ With a ``ProcessShardedModelStore`` the same drain-worker layout becomes a
 RPC that makes the shard's worker *process* fold its queues off-GIL, and
 the global worker's ``drain_global`` runs the cross-server two-level merge
 in the parent.  Worker crash detection and respawn (journal replay) live in
-the store's RPC layer, so the pump threads stay oblivious to failures.
+the store's RPC layer, so the pump threads stay oblivious to failures —
+including when the workers are remote TCP shard servers
+(``FedCCLConfig.server_hosts``): a dropped connection just makes one pump
+beat reconnect-and-replay inside the store.
 
 With a secure-aggregation masker on the store the runtime switches to
 full-round drains: client threads synchronize on a per-round barrier whose

@@ -14,20 +14,32 @@ This module holds the pieces that must be importable from a spawned child:
     (``repro.checkpoint.msgpack_ckpt.packb``/``unpackb``), so the update
     payloads crossing process boundaries use the identical format models are
     checkpointed in;
-  * ``ShardWorker`` — the executable shard-server logic, process-agnostic:
-    the spawned main loop drives it in real mode, and the deterministic
-    in-process emulation (used by ``runtime_sim`` and the fast tests) calls
-    it synchronously through the same serialized messages;
-  * ``ProcessWorkerHandle`` / ``InprocessWorkerHandle`` — the parent-side
-    transport pair, sharing one interface: ``put`` (fire-and-forget
-    submit), ``rpc`` (command awaiting one reply, with bounded timeout +
-    liveness checks), ``kill``/``stop``.
+  * ``ShardWorker`` — the executable shard-server logic, transport-agnostic:
+    the spawned main loop drives it in real mode, the standalone TCP server
+    (``repro.launch.shard_server``) drives it across hosts, and the
+    deterministic in-process emulation (used by ``runtime_sim`` and the fast
+    tests) calls it synchronously through the same serialized messages;
+  * ``ProcessWorkerHandle`` / ``InprocessWorkerHandle`` — two of the three
+    parent-side ``repro.core.transport.Transport`` flavors (the TCP flavor
+    lives in ``repro.core.transport``): ``put`` (fire-and-forget submit),
+    ``rpc`` (command awaiting one reply, with bounded timeout + liveness
+    checks), ``restart``/``kill``/``stop``.
 
 Crash safety is the *parent's* job (see the store's journal): workers are
 intentionally stateless beyond their working copies — every update a worker
 holds is journaled in the parent until the drain that folded it is acked, so
 a killed worker is respawned from the parent's mirrors and its journal
-replayed without losing updates or double-counting rounds.
+replayed without losing updates or double-counting rounds.  Replays are
+idempotent: submits carry a monotone per-store ``seq`` and the worker drops
+any seq it already holds (``held``), so a replay racing a
+message that DID arrive (TCP reconnects) cannot double-apply it.
+
+Lazy mirror sync (``mirror_sync_every`` in the seed blob): drain replies
+ship the folded params only every Nth reply per model and ack with
+seq-stamped metadata otherwise; the accumulated acks ride along with the
+next params-carrying reply (or an explicit ``sync`` command — the
+``sync_mirrors()`` barrier).  See ``docs/WIRE_PROTOCOL.md`` for the
+normative message-by-message semantics.
 """
 
 from __future__ import annotations
@@ -40,18 +52,15 @@ from collections import deque
 
 from repro.checkpoint.msgpack_ckpt import packb
 from repro.checkpoint.msgpack_ckpt import unpackb_np as unpackb
+from repro.core.transport import (      # noqa: F401  (re-exported: the
+    Transport,                          # exceptions predate transport.py and
+    WorkerTimeout,                      # are imported from here by old code)
+    WorkerUnavailable,
+)
 
 # commands that produce exactly one reply; everything else is fire-and-forget
 REPLY_OPS = frozenset({"drain", "drain_shard", "gmeta", "greduce", "sdrain",
-                       "ping", "stop"})
-
-
-class WorkerUnavailable(RuntimeError):
-    """The shard worker died (or was never reachable) mid-command."""
-
-
-class WorkerTimeout(WorkerUnavailable):
-    """The shard worker is alive but missed the bounded reply deadline."""
+                       "sync", "ping", "stop"})
 
 
 # ------------------------------------------------------------------ wire fmt
@@ -77,10 +86,11 @@ def delta_from_wire(w):
 
 
 def make_seed_blob(shard_records, max_coalesce: int, agg_cfg,
-                   masker) -> bytes:
+                   masker, mirror_sync_every: int = 1) -> bytes:
     """Everything a fresh worker needs, in wire format: its owned cluster
-    records, the fold config, and the masker parameters (the masker must
-    live worker-side — secure rounds are model-local per server process)."""
+    records, the fold config, the masker parameters (the masker must live
+    worker-side — secure rounds are model-local per server process), and
+    the lazy-mirror-sync cadence."""
     return packb({
         "records": [[key, params, meta_to_wire(meta)]
                     for key, params, meta in shard_records],
@@ -88,6 +98,7 @@ def make_seed_blob(shard_records, max_coalesce: int, agg_cfg,
         "agg": [bool(agg_cfg.use_pallas), bool(agg_cfg.sequential_fast_path)],
         "masker": (None if masker is None
                    else [int(masker.seed), float(masker.mask_scale)]),
+        "sync_every": int(mirror_sync_every),
     })
 
 
@@ -110,6 +121,7 @@ class ShardWorker:
         blob = unpackb(seed_blob)
         self.idx = shard_idx
         self.max_coalesce = max(int(blob["max_coalesce"]), 1)
+        self.sync_every = max(int(blob.get("sync_every", 1)), 1)
         use_pallas, fast_path = blob["agg"]
         self.agg_cfg = AggregationConfig(use_pallas=use_pallas,
                                          sequential_fast_path=fast_path)
@@ -120,11 +132,23 @@ class ShardWorker:
             seed, scale = blob["masker"]
             self.masker = PairwiseMasker(seed=seed, mask_scale=scale)
         # key -> {"params", "meta", "pending": deque[(seq, p, m, d)],
-        #         "secure": {round_id: [(seq, client_id, masked, delta)]}}
+        #         "secure": {round_id: [(seq, client_id, masked, delta)]},
+        #         "unsynced": [seqs folded but not yet shipped with params],
+        #         "drains": replies since the last params-carrying one}
         self.records: dict[str, dict] = {}
         for key, params, meta_w in blob["records"]:
             self._ensure(key, params, meta_from_wire(meta_w))
         self.gslice: deque = deque()       # (seq, params, meta, delta)
+        # replay dedup: seqs this worker currently HOLDS (queued, not yet
+        # folded).  A journal replay racing messages that already arrived
+        # (TCP reconnects) redelivers exactly the unacked entries, so a
+        # duplicate is a submit whose seq is still held — drop it.  NOT a
+        # watermark: concurrent submitters can publish a shard's seqs
+        # slightly out of order (seq is allocated before the outbox lock),
+        # and a failed submit never enters the set, so its replay is
+        # re-attempted.  Seqs leave on fold, keeping the set bounded by
+        # queue depth; a fresh seed resets it with the state it described.
+        self.held: set[int] = set()
         # errors raised by fire-and-forget commands (which must not emit
         # unpaired replies) are deferred and surfaced as the error reply of
         # the NEXT replying command — never swallowed: the journaled update
@@ -139,7 +163,15 @@ class ShardWorker:
             self.records[key] = {"params": params,
                                  "meta": meta if meta is not None
                                  else ModelMeta(),
-                                 "pending": deque(), "secure": {}}
+                                 "pending": deque(), "secure": {},
+                                 "unsynced": [], "drains": 0}
+
+    def _is_replay_dup(self, seq: int) -> bool:
+        """True if this submit seq is already held and must be dropped as
+        a replay duplicate.  The caller registers the seq only after the
+        apply succeeds: a submit that errored never entered worker state,
+        so its replay must be re-attempted, not swallowed."""
+        return seq in self.held
 
     # --------------------------------------------------------------- dispatch
     def handle(self, msg):
@@ -167,18 +199,27 @@ class ShardWorker:
             return None
         if op == "sub":
             _, seq, key, params, meta_w, delta_w = msg
-            self.records[key]["pending"].append(
-                (seq, params, meta_from_wire(meta_w), delta_from_wire(delta_w)))
+            if not self._is_replay_dup(int(seq)):
+                self.records[key]["pending"].append(
+                    (seq, params, meta_from_wire(meta_w),
+                     delta_from_wire(delta_w)))
+                self.held.add(int(seq))
             return None
         if op == "gsub":
             _, seq, params, meta_w, delta_w = msg
-            self.gslice.append((seq, params, meta_from_wire(meta_w),
-                                delta_from_wire(delta_w)))
+            if not self._is_replay_dup(int(seq)):
+                self.gslice.append((seq, params, meta_from_wire(meta_w),
+                                    delta_from_wire(delta_w)))
+                self.held.add(int(seq))
             return None
         if op == "ssub":
             _, seq, key, round_id, client_id, masked, delta_w = msg
-            bucket = self.records[key]["secure"].setdefault(int(round_id), [])
-            bucket.append((seq, client_id, masked, delta_from_wire(delta_w)))
+            if not self._is_replay_dup(int(seq)):
+                bucket = self.records[key]["secure"].setdefault(
+                    int(round_id), [])
+                bucket.append((seq, client_id, masked,
+                               delta_from_wire(delta_w)))
+                self.held.add(int(seq))
             return None
         if op == "ensure":
             _, key, params = msg
@@ -205,6 +246,17 @@ class ShardWorker:
         if op == "sdrain":
             _, key, round_id, expected_ids = msg
             return self._drain_secure(key, int(round_id), expected_ids)
+        if op == "sync":
+            # the sync_mirrors() barrier: ship params + accumulated acks
+            # for every model with meta-only (provisional) acks outstanding
+            out = []
+            for key, rec in self.records.items():
+                if not rec["unsynced"]:
+                    continue
+                acked, rec["unsynced"], rec["drains"] = rec["unsynced"], [], 0
+                out.append([key, acked, rec["params"],
+                            meta_to_wire(rec["meta"])])
+            return ["synced", out]
         if op == "ping":
             return ["pong", self.idx, sorted(self.records)]
         raise ValueError(f"unknown worker op {op!r}")
@@ -214,7 +266,14 @@ class ShardWorker:
         """Fold every pending update for one model, ``max_coalesce`` at a
         time — the worker-side twin of ``_drain_record_once`` loops.  On a
         fold error the popped batch is restored at the queue head so the
-        journaled updates stay consistent with the worker's queue."""
+        journaled updates stay consistent with the worker's queue.
+
+        Lazy mirror sync: only every ``sync_every``-th non-empty reply per
+        model carries the folded params; the others ack with seq-stamped
+        metadata (the parent keeps the entries journaled as
+        folded-but-unsynced and marks its mirror dirty).  A params-carrying
+        reply flushes ALL accumulated acks, so the parent's full ack and
+        mirror swap stay one atomic step."""
         from repro.core.aggregation import coalesced_aggregate
 
         rec = self.records[key]
@@ -235,9 +294,16 @@ class ShardWorker:
             fast += res.n_fast_path
             batches += 1
             acked.extend(seq for seq, _, _, _ in batch)
+            self.held.difference_update(int(s) for s, _, _, _ in batch)
         if not folded:
             return ["drained", key, 0, 0, 0, [], None, None]
-        return ["drained", key, folded, fast, batches, acked,
+        rec["unsynced"].extend(acked)
+        rec["drains"] += 1
+        if self.sync_every > 1 and rec["drains"] < self.sync_every:
+            return ["drained", key, folded, fast, batches, acked,
+                    None, meta_to_wire(rec["meta"])]
+        full_acked, rec["unsynced"], rec["drains"] = rec["unsynced"], [], 0
+        return ["drained", key, folded, fast, batches, full_acked,
                 rec["params"], meta_to_wire(rec["meta"])]
 
     def _greduce(self, pairs):
@@ -281,6 +347,7 @@ class ShardWorker:
                 return ["error", "greduce", f"{type(e).__name__}: {e}"]
             mass = float(sum(m for _, m in entries))
         self.gslice = keep
+        self.held.difference_update(int(s) for s, _, _, _ in take)
         return ["gpartial", [seq for seq, _, _, _ in take], mass, partial]
 
     def _drain_secure(self, key: str, round_id: int, expected_ids):
@@ -312,8 +379,13 @@ class ShardWorker:
             rec["secure"][round_id] = batch + rec["secure"].get(round_id, [])
             return ["error", key, f"{type(e).__name__}: {e}"]
         rec["params"], rec["meta"] = res.params, res.meta
-        return ["sdrained", key, len(batch), len(missing),
-                [seq for seq, _, _, _ in batch],
+        self.held.difference_update(int(s) for s, _, _, _ in batch)
+        # secure replies always carry params (full-round folds are the sync
+        # points of secure mode) and therefore flush any accumulated lazy
+        # acks — the shipped params already include those earlier folds
+        acked = rec["unsynced"] + [seq for seq, _, _, _ in batch]
+        rec["unsynced"], rec["drains"] = [], 0
+        return ["sdrained", key, len(batch), len(missing), acked,
                 rec["params"], meta_to_wire(rec["meta"])]
 
 
@@ -342,7 +414,7 @@ def worker_main(shard_idx: int, cmd_q, rsp_q, seed_blob: bytes):
 
 # ----------------------------------------------------------------- transports
 
-class ProcessWorkerHandle:
+class ProcessWorkerHandle(Transport):
     """Parent-side endpoint of one spawned shard server.
 
     ``cmd_q`` is SPSC in spirit: many parent threads may ``put`` (mp.Queue
@@ -355,6 +427,8 @@ class ProcessWorkerHandle:
     def __init__(self, shard_idx: int, seed_blob: bytes):
         self.idx = shard_idx
         self.spawns = 0
+        self.tx_bytes = 0
+        self.rx_bytes = 0
         self._ctx = mp.get_context("spawn")   # fork-after-jax is unsafe
         self._start(seed_blob)
 
@@ -369,11 +443,13 @@ class ProcessWorkerHandle:
         self.spawns += 1
 
     def put(self, raw: bytes):
+        self.tx_bytes += len(raw)
         self.cmd_q.put(raw)
 
     def rpc(self, raw: bytes, timeout: float) -> bytes:
         """Send one replying command and await its reply.  Caller holds
         the shard's rpc lock."""
+        self.tx_bytes += len(raw)
         self.cmd_q.put(raw)
         return self.rpc_recv(timeout)
 
@@ -388,7 +464,9 @@ class ProcessWorkerHandle:
         while True:
             remaining = deadline - time.monotonic()
             try:
-                return self.rsp_q.get(timeout=max(min(remaining, 0.2), 0.01))
+                reply = self.rsp_q.get(timeout=max(min(remaining, 0.2), 0.01))
+                self.rx_bytes += len(reply)
+                return reply
             except _queue.Empty:
                 if not self.proc.is_alive():
                     raise WorkerUnavailable(
@@ -438,16 +516,20 @@ class ProcessWorkerHandle:
             self.discard()
 
 
-class InprocessWorkerHandle:
+class InprocessWorkerHandle(Transport):
     """Deterministic in-process emulation of a shard server — the transport
     ``runtime_sim`` and the fast test matrix use.  Every message still round
     trips the wire codec and dispatches through the identical
     ``ShardWorker.handle``, so the only thing the emulation removes is the
-    OS process (and with it, nondeterministic scheduling)."""
+    OS process (and with it, nondeterministic scheduling).  Byte counters
+    count the serialized payloads, so reply-bandwidth tests (lazy mirror
+    sync) run deterministically without sockets."""
 
     def __init__(self, shard_idx: int, seed_blob: bytes):
         self.idx = shard_idx
         self.spawns = 0
+        self.tx_bytes = 0
+        self.rx_bytes = 0
         # a real worker's command queue serializes every message; the
         # emulation dispatches inline, so this lock plays the queue's role
         # (ShardWorker itself is single-threaded by design)
@@ -462,6 +544,7 @@ class InprocessWorkerHandle:
     def put(self, raw: bytes):
         if self._dead:
             return                      # a dead worker's queue eats messages
+        self.tx_bytes += len(raw)
         msg = unpackb(raw)
         try:
             with self._dispatch_lock:
@@ -481,13 +564,16 @@ class InprocessWorkerHandle:
         if self._dead:
             raise WorkerUnavailable(
                 f"shard worker {self.idx} died (in-process emulation)")
+        self.tx_bytes += len(raw)
         msg = unpackb(raw)
         try:
             with self._dispatch_lock:
                 reply = self.worker.handle(msg)
         except BaseException as e:      # mirror worker_main's error envelope
             reply = ["error", msg[0], f"{type(e).__name__}: {e}"]
-        return packb(reply)
+        out = packb(reply)
+        self.rx_bytes += len(out)
+        return out
 
     def restart(self, seed_blob: bytes):
         self._start(seed_blob)

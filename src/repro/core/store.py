@@ -56,7 +56,7 @@ from collections import deque
 from dataclasses import dataclass
 from typing import Optional
 
-from repro.core import server_proc
+from repro.core import server_proc, transport
 from repro.core.aggregation import (
     AggregationConfig,
     ModelMeta,
@@ -397,7 +397,11 @@ class _StoreBase(_RegistryBase):
                 self.n_secure_rounds += 1
                 self.n_secure_recoveries += recovered
 
-    def _count_drain_timeout(self):
+    def _count_drain_timeout(self, shard: Optional[int] = None):
+        """Record a bounded-drain deadline miss.  ``shard`` attributes the
+        expiry to one worker where the topology has them (the process/TCP
+        store overrides this to keep per-shard counts — see
+        ``agg_stats()["shard_drain_timeouts"]``)."""
         with self._drain_lock:
             self.n_drain_timeouts += 1
 
@@ -556,6 +560,13 @@ class _StoreBase(_RegistryBase):
             return 0.0
         return self.n_drained / self.n_drain_batches
 
+    def sync_mirrors(self) -> int:
+        """Mirror-staleness barrier.  In-thread stores hold the models
+        directly, so there is nothing to sync (always 0); the process/TCP
+        store overrides this to pull lazily-synced params from its workers
+        (``FedCCLConfig.mirror_sync_every``)."""
+        return 0
+
 
 class ModelStore(_StoreBase):
     """Thread-safe store for global + cluster models: one submit-side stats
@@ -588,6 +599,11 @@ class ModelStore(_StoreBase):
         return total
 
     def agg_stats(self) -> dict:
+        """Single-store flavor of the cross-topology ``agg_stats`` surface
+        (the sharded/process/TCP flavors add shard, respawn, mirror-sync
+        and wire-byte counters on top of these shared keys —
+        ``drain_timeouts`` included, which those flavors also attribute
+        per shard)."""
         # snapshot order matters: drain counters FIRST, then the submit sink
         # as one locked read.  Enqueues are counted before publish and folds
         # happen after it, so any fold visible in the drain snapshot has its
@@ -822,7 +838,13 @@ class ShardedModelStore(_StoreBase):
 
 def _sharded_agg_stats(store, shards, extra: Optional[dict] = None) -> dict:
     """Shared agg_stats assembly for the sharded store flavors (thread
-    shards and process shards expose the same counter layout).
+    shards, process workers and TCP workers expose the same counter
+    layout; the process/TCP store passes its flavor extras — ``transport``,
+    ``respawns``, ``mirror_syncs``, per-worker ``shard_drain_timeouts``,
+    ``wire_tx_bytes``/``wire_rx_bytes`` — through ``extra``).  Secure-round
+    counters aggregate worker-local folds: each secure round runs entirely
+    on the model's owning shard/worker, and only the counted totals land
+    here.
 
     Snapshot order matters: drain counters FIRST, then each shard's
     counters as one locked read.  Enqueues are counted before publish
@@ -908,7 +930,7 @@ class _ProcShard:
 
     __slots__ = ("idx", "stats", "handle", "rpc_lock", "journal",
                  "journal_lock", "pending_counts", "pending_rounds",
-                 "secure_counts", "outbox")
+                 "secure_counts", "outbox", "dirty", "deferred")
 
     def __init__(self, idx: int):
         self.idx = idx
@@ -921,6 +943,12 @@ class _ProcShard:
         self.pending_rounds: dict[str, int] = {}        # key -> their rounds
         self.secure_counts: dict[tuple, int] = {}       # (key, round) -> n
         self.outbox: list = []                          # unflushed raw msgs
+        # lazy mirror sync (mirror_sync_every > 1): keys whose worker-side
+        # params are ahead of the parent mirror (meta-only acks received),
+        # and the drain stats deferred until their params land — both
+        # guarded by journal_lock
+        self.dirty: set[str] = set()
+        self.deferred: dict[str, list] = {}   # key -> [folded, fast, batches]
 
 
 class ProcessShardedModelStore(_StoreBase):
@@ -964,6 +992,26 @@ class ProcessShardedModelStore(_StoreBase):
     ``inprocess=True`` swaps the spawned processes for the deterministic
     in-process emulation (same messages, same codec, same ``ShardWorker``
     logic) — what ``runtime_sim`` uses so schedules stay bit-reproducible.
+
+    ``server_hosts=["host:port", ...]`` promotes the workers to **separate
+    hosts**: instead of spawning, the parent connects to one standalone
+    shard server (``repro.launch.shard_server``) per entry over TCP
+    (length-prefixed msgpack frames — ``repro.core.transport``, normative
+    spec in ``docs/WIRE_PROTOCOL.md``) and seeds it over the wire.  The
+    fold algebra, journal crash recovery (now covering connection loss:
+    reconnect, re-seed, replay — idempotent via the worker's seq
+    dedup set), and drain-timeout accounting carry over unchanged.
+
+    ``mirror_sync_every=N`` (lazy mirror sync) cuts reply bandwidth for
+    all remote flavors: workers ship full params only every Nth drain
+    reply per model and ack with seq-stamped metadata otherwise.  Dirty
+    mirrors are re-synced by an explicit ``sync_mirrors()`` barrier, which
+    the read paths (``request_model``/``params``/``meta``), checkpointing
+    (``save_store``) and ``close`` invoke per dirty key — parent mirrors
+    are provably never stale when read.  Folded-but-unsynced updates stay
+    journaled, so a crash between syncs replays and refolds them from the
+    last synced mirror (nothing is lost, nothing double-counted — their
+    stats are deferred until their params land).
     """
 
     # drains are scatter-gather beats: the threaded runtime runs ONE pump
@@ -976,39 +1024,66 @@ class ProcessShardedModelStore(_StoreBase):
                  agg_cfg: AggregationConfig = AggregationConfig(),
                  n_shards: int = 4, batch_aggregation: bool = True,
                  max_coalesce: int = 16, masker=None,
-                 drain_timeout_s: float = 30.0, inprocess: bool = False):
+                 drain_timeout_s: float = 30.0, inprocess: bool = False,
+                 server_hosts=None, mirror_sync_every: int = 1):
+        if server_hosts:
+            # one worker per remote server; addresses fix the shard count
+            self.server_hosts = [transport.parse_host(h)
+                                 for h in server_hosts]
+            n_shards = len(self.server_hosts)
+        else:
+            self.server_hosts = None
         self.n_shards = max(int(n_shards), 1)
         super().__init__(init_params, cluster_keys, agg_cfg,
                          batch_aggregation, max_coalesce, masker,
                          drain_timeout_s)
-        self.inprocess = bool(inprocess)
+        self.inprocess = bool(inprocess) and self.server_hosts is None
+        self.mirror_sync_every = max(int(mirror_sync_every), 1)
         self._gseq = itertools.count()
         self.n_global_drains = 0
         self.n_global_partials = 0
         self.n_respawns = 0
+        self.n_mirror_syncs = 0           # explicit sync RPCs issued
+        self.n_shard_drain_timeouts = [0] * self.n_shards
         self._closed = False
         self._proc_shards = [_ProcShard(i) for i in range(self.n_shards)]
-        handle_cls = (server_proc.InprocessWorkerHandle if self.inprocess
-                      else server_proc.ProcessWorkerHandle)
         for sh in self._proc_shards:
-            sh.handle = handle_cls(sh.idx, self._seed_blob(sh.idx))
+            sh.handle = self._make_handle(sh.idx)
 
     # --------------------------------------------------------------- lifecycle
+    def _make_handle(self, shard_idx: int) -> transport.Transport:
+        blob = self._seed_blob(shard_idx)
+        if self.server_hosts is not None:
+            return transport.TcpWorkerHandle(
+                shard_idx, blob, self.server_hosts[shard_idx],
+                connect_timeout=max(self.drain_timeout_s, 10.0))
+        cls = (server_proc.InprocessWorkerHandle if self.inprocess
+               else server_proc.ProcessWorkerHandle)
+        return cls(shard_idx, blob)
+
     def _seed_blob(self, shard_idx: int) -> bytes:
         recs = []
         for key in self.shard_cluster_keys(shard_idx):
             params, meta = self._records[key].snapshot()
             recs.append((key, params, meta))
         return server_proc.make_seed_blob(recs, self.max_coalesce,
-                                          self.agg_cfg, self.masker)
+                                          self.agg_cfg, self.masker,
+                                          self.mirror_sync_every)
 
     def close(self, timeout: Optional[float] = None):
-        """Stop every worker with a bounded join (terminate/kill fallback).
-        Idempotent; pending-but-undrained updates stay journaled parent-side
-        (they were never acked), so closing loses no federation state that a
-        checkpoint of the mirrors would not capture."""
+        """Stop every worker with a bounded join (terminate/kill fallback;
+        TCP sessions end and the remote servers return to accepting).
+        Syncs dirty mirrors first, so post-close reads see the freshest
+        folded state.  Idempotent; pending-but-undrained updates stay
+        journaled parent-side (they were never acked), so closing loses no
+        federation state that a checkpoint of the mirrors would not
+        capture."""
         if self._closed:
             return
+        try:
+            self.sync_mirrors()
+        except BaseException:
+            pass                  # a dead worker's folds are replay-covered
         self._closed = True
         t = self.drain_timeout_s if timeout is None else float(timeout)
         for sh in self._proc_shards:
@@ -1159,17 +1234,22 @@ class ProcessShardedModelStore(_StoreBase):
                     sh.pending_rounds.get(e.key, e.rounds) - e.rounds
 
     def _respawn(self, sh: _ProcShard):
-        """Replace a dead/stuck worker: fresh process seeded from the parent
-        mirrors, journal replayed in seq order (parent-custody global
-        entries skipped — their payload is already in the in-flight fold's
-        hands).  Caller holds ``sh.rpc_lock``."""
+        """Replace a dead/stuck worker: ``Transport.restart`` resets it from
+        the parent mirrors (fresh process for the spawned flavor; reconnect
+        + re-seed for TCP — a supervisor-restarted server on the same
+        address is picked up transparently), then the journal is replayed
+        in seq order (parent-custody global entries skipped — their payload
+        is already in the in-flight fold's hands; the worker's seq
+        held-seq dedup makes the replay idempotent if some messages survived).
+        Folded-but-unsynced entries (lazy mirror sync) are still journaled,
+        so the replay refolds them from the last synced mirror — their
+        deferred stats are dropped here and recounted by the refold.
+        Caller holds ``sh.rpc_lock``."""
         with sh.journal_lock:
-            handle_cls = type(sh.handle)
-            prior_spawns = sh.handle.spawns
-            sh.handle.discard()
             sh.outbox = []     # journaled (subs) or registry-derived (ensure)
-            sh.handle = handle_cls(sh.idx, self._seed_blob(sh.idx))
-            sh.handle.spawns += prior_spawns     # cumulative per-shard count
+            sh.dirty.clear()   # reseeded worker == mirror: nothing stale
+            sh.deferred.clear()
+            sh.handle.restart(self._seed_blob(sh.idx))
             for seq in sorted(sh.journal):
                 e = sh.journal[seq]
                 if not e.custody:
@@ -1218,7 +1298,7 @@ class ProcessShardedModelStore(_StoreBase):
                 return server_proc.unpackb(sh.handle.rpc(raw, timeout))
             except server_proc.WorkerUnavailable as e:
                 if isinstance(e, server_proc.WorkerTimeout):
-                    self._count_drain_timeout()
+                    self._count_drain_timeout(sh.idx)
                 self._respawn(sh)
                 timeout = self.drain_timeout_s + self.SPAWN_ALLOWANCE_S
                 if attempt:
@@ -1273,7 +1353,7 @@ class ProcessShardedModelStore(_StoreBase):
                         sh.handle.rpc_recv(self.drain_timeout_s))
                 except server_proc.WorkerUnavailable as e:
                     if isinstance(e, server_proc.WorkerTimeout):
-                        self._count_drain_timeout()
+                        self._count_drain_timeout(sh.idx)
                     self._respawn(sh)
                     reply = self._exchange(        # journal replayed
                         sh, raw,
@@ -1290,10 +1370,27 @@ class ProcessShardedModelStore(_StoreBase):
         if not folded:
             return 0
         rec = self._record(key)
+        if params is None:
+            # meta-only (provisional) ack — lazy mirror sync: the fold
+            # happened worker-side but its params ship with a later reply
+            # (or the sync_mirrors barrier).  Keep the entries journaled
+            # (a crash replays + refolds them from the last synced
+            # mirror), mark the mirror dirty, and defer the drain stats so
+            # the refold can't double-count them.
+            with sh.journal_lock:
+                sh.dirty.add(key)
+                d = sh.deferred.setdefault(key, [0, 0, 0])
+                d[0] += folded
+                d[1] += fast
+                d[2] += batches
+            return folded
         with sh.journal_lock:
             rec.swap(params, meta_from_wire(meta_w))
-            self._ack(sh, acked)
-        self._count_drain(folded, fast, batches=batches)
+            self._ack(sh, acked)     # flushes earlier provisional acks too
+            sh.dirty.discard(key)
+            dfolded, dfast, dbatches = sh.deferred.pop(key, (0, 0, 0))
+        self._count_drain(folded + dfolded, fast + dfast,
+                          batches=batches + dbatches)
         return folded
 
     def drain(self, level: str, cluster_key: Optional[str] = None) -> int:
@@ -1416,6 +1513,73 @@ class ProcessShardedModelStore(_StoreBase):
                                           self._apply_shard_beat))
         return total
 
+    # ---------------------------------------------------- lazy mirror sync
+    def _apply_synced(self, sh: _ProcShard, reply) -> int:
+        """Apply one ``synced`` reply: swap each shipped (params, meta)
+        into the mirror, retire the accumulated provisional acks, and
+        release the deferred drain stats — the mirror is authoritative for
+        those keys again."""
+        n = 0
+        for key, acked, params, meta_w in reply[1]:
+            rec = self._record(key)
+            with sh.journal_lock:
+                rec.swap(params, meta_from_wire(meta_w))
+                self._ack(sh, acked)
+                sh.dirty.discard(key)
+                counts = sh.deferred.pop(key, None)
+            if counts:
+                self._count_drain(counts[0], counts[1], batches=counts[2])
+            n += 1
+        return n
+
+    def _sync_shard(self, sh: _ProcShard) -> int:
+        with self._drain_lock:
+            self.n_mirror_syncs += 1
+        return self._rpc(sh, server_proc.packb(["sync"]),
+                         lambda reply: self._apply_synced(sh, reply))
+
+    def _sync_key(self, key: str):
+        """Read barrier for one model: if its mirror is dirty (lazy mirror
+        sync), pull the worker's params before the read.  Clean keys — and
+        the parent-owned global model — cost one set lookup."""
+        if self.mirror_sync_every <= 1 or key == GLOBAL_KEY or self._closed:
+            return
+        sh = self._proc_shards[self.shard_of(key)]
+        with sh.journal_lock:
+            if key not in sh.dirty:
+                return
+        self._sync_shard(sh)
+
+    def sync_mirrors(self) -> int:
+        """Barrier: flush every worker's folded-but-unshipped params into
+        the parent mirrors.  After it returns, every mirror reflects every
+        fold whose drain reply the parent has processed — the invariant
+        the read paths, ``save_store`` and ``close`` rely on.  Returns the
+        number of models synced (0 when ``mirror_sync_every`` is 1: every
+        drain reply already ships params)."""
+        if self.mirror_sync_every <= 1 or self._closed:
+            return 0
+        synced = 0
+        for sh in self._proc_shards:
+            with sh.journal_lock:
+                dirty = bool(sh.dirty)
+            if dirty:
+                synced += self._sync_shard(sh)
+        return synced
+
+    # ------------------------------------------------- reads (sync barrier)
+    def request_model(self, level: str, cluster_key: Optional[str] = None):
+        self._sync_key(self._key(level, cluster_key))
+        return super().request_model(level, cluster_key)
+
+    def params(self, level: str, cluster_key: Optional[str] = None):
+        self._sync_key(self._key(level, cluster_key))
+        return super().params(level, cluster_key)
+
+    def meta(self, level: str, cluster_key: Optional[str] = None) -> ModelMeta:
+        self._sync_key(self._key(level, cluster_key))
+        return super().meta(level, cluster_key)
+
     # ---------------------------------------------------- secure aggregation
     def submit_secure(self, level: str, cluster_key: Optional[str],
                       client_id: str, round_id: int, masked_delta,
@@ -1457,8 +1621,14 @@ class ProcessShardedModelStore(_StoreBase):
             rec = self._record(key)
             with sh.journal_lock:
                 rec.swap(params, meta_from_wire(meta_w))
+                # secure replies always ship params, flushing any earlier
+                # provisional acks for the key along with them
                 self._ack(sh, acked)
                 sh.secure_counts.pop((key, int(round_id)), None)
+                sh.dirty.discard(key)
+                counts = sh.deferred.pop(key, None)
+            if counts:
+                self._count_drain(counts[0], counts[1], batches=counts[2])
             self._count_drain(folded, 0, secure=True, recovered=recovered)
             return folded
 
@@ -1467,8 +1637,36 @@ class ProcessShardedModelStore(_StoreBase):
                                    [str(i) for i in expected_ids]]), apply)
 
     # ------------------------------------------------------------- inspection
+    def _count_drain_timeout(self, shard: Optional[int] = None):
+        """Deadline misses are attributed per worker here: one stuck host
+        must be findable without grepping logs (the runbook in
+        ``docs/OPERATIONS.md`` keys on ``shard_drain_timeouts``)."""
+        with self._drain_lock:
+            self.n_drain_timeouts += 1
+            if shard is not None:
+                self.n_shard_drain_timeouts[shard] += 1
+
+    def transport_kind(self) -> str:
+        if self.server_hosts is not None:
+            return "tcp"
+        return "inprocess" if self.inprocess else "process"
+
+    def wire_bytes(self) -> tuple[int, int]:
+        """(tx, rx) payload bytes across every worker transport — the
+        bytes-on-wire metric (``benchmarks/multiproc_store.py``)."""
+        tx = sum(sh.handle.tx_bytes for sh in self._proc_shards)
+        rx = sum(sh.handle.rx_bytes for sh in self._proc_shards)
+        return tx, rx
+
     def agg_stats(self) -> dict:
+        tx, rx = self.wire_bytes()
         with self._drain_lock:
             extra = {"processes": 0 if self.inprocess else self.n_shards,
-                     "respawns": self.n_respawns}
+                     "transport": self.transport_kind(),
+                     "respawns": self.n_respawns,
+                     "mirror_syncs": self.n_mirror_syncs,
+                     "shard_drain_timeouts":
+                         list(self.n_shard_drain_timeouts),
+                     "wire_tx_bytes": tx,
+                     "wire_rx_bytes": rx}
         return _sharded_agg_stats(self, self._proc_shards, extra)

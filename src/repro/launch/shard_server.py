@@ -1,0 +1,142 @@
+"""Standalone shard server — one federation worker on its own host.
+
+Runs the exact ``repro.core.server_proc.ShardWorker`` logic behind a TCP
+listener speaking the framed msgpack wire protocol
+(``repro.core.transport``; normative spec in ``docs/WIRE_PROTOCOL.md``).
+A parent ``ProcessShardedModelStore`` configured with
+``FedCCLConfig.server_hosts=["host:port", ...]`` connects to one of these
+per entry instead of spawning local processes.
+
+Usage:
+
+    PYTHONPATH=src python -m repro.launch.shard_server --port 9701
+    PYTHONPATH=src python -m repro.launch.shard_server --port 0   # ephemeral
+
+On startup the server prints one machine-readable line::
+
+    SHARD_SERVER_LISTENING host=0.0.0.0 port=9701
+
+(the loopback spawner in tests/benchmarks parses it to learn the ephemeral
+port).  Sessions are sequential: one parent at a time, each beginning with
+a ``seed`` command that (re)builds the worker state from the parent's
+mirrors — so a reconnecting parent always re-seeds, and journal replay
+plus the worker's held-seq dedup make the hand-off exact.  A parent's
+``stop`` (or a dropped connection) ends the session; the server keeps
+listening for the next parent.  The server's own lifecycle belongs to its
+supervisor (systemd/k8s/the loopback helper) — see ``docs/OPERATIONS.md``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import socket
+import sys
+
+from repro.checkpoint.msgpack_ckpt import packb
+from repro.checkpoint.msgpack_ckpt import unpackb_np as unpackb
+from repro.core.server_proc import REPLY_OPS, ShardWorker
+from repro.core.transport import (
+    KIND_REPLY,
+    FrameProtocolError,
+    recv_frame,
+    send_frame,
+)
+
+
+def serve_session(conn: socket.socket) -> bool:
+    """One parent session: seed handshake, then the dispatch loop (the TCP
+    twin of ``server_proc.worker_main``).  Returns False if the parent
+    asked the whole server to exit (``shutdown``), True to keep
+    listening."""
+    worker = None
+    while True:
+        try:
+            _, raw = recv_frame(conn)
+        except FrameProtocolError as e:
+            # a malformed or version-mismatched frame is answered loudly
+            # (the parent raises it verbatim) and ends the session — a
+            # desynced stream cannot be trusted for params
+            try:
+                send_frame(conn, packb(["error", "frame", str(e)]),
+                           KIND_REPLY)
+            except OSError:
+                pass
+            return True
+        except (ConnectionError, OSError):
+            return True                      # parent went away; next session
+        msg = unpackb(raw)
+        op = msg[0]
+        if op == "seed":
+            # (re)build the worker from the parent's mirrors; replays that
+            # follow are deduplicated by the fresh worker's held-seq set
+            try:
+                worker = ShardWorker(int(msg[1]), msg[2])
+                reply = ["seeded", worker.idx]
+            except BaseException as e:
+                reply = ["error", "seed", f"{type(e).__name__}: {e}"]
+            send_frame(conn, packb(reply), KIND_REPLY)
+            continue
+        if op == "shutdown":
+            send_frame(conn, packb(["stopped", -1]), KIND_REPLY)
+            return False
+        if worker is None:
+            send_frame(conn, packb(
+                ["error", op, "session not seeded: the first command of a "
+                              "connection must be 'seed'"]), KIND_REPLY)
+            continue
+        if op == "stop":
+            send_frame(conn, packb(["stopped", worker.idx]), KIND_REPLY)
+            return True
+        try:
+            reply = worker.handle(msg)
+        except BaseException as e:
+            reply = ["error", op, f"{type(e).__name__}: {e}"]
+            if op not in REPLY_OPS:          # deferred, like worker_main
+                worker.pending_errors.append(
+                    f"{op}: {type(e).__name__}: {e}")
+        if op in REPLY_OPS:
+            send_frame(conn, packb(reply), KIND_REPLY)
+
+
+def serve(host: str, port: int, announce=print) -> None:
+    srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    srv.bind((host, port))
+    srv.listen(1)
+    bound = srv.getsockname()
+    announce(f"SHARD_SERVER_LISTENING host={bound[0]} port={bound[1]}",
+             flush=True)
+    try:
+        while True:
+            conn, peer = srv.accept()
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            try:
+                keep_going = serve_session(conn)
+            finally:
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+            if not keep_going:
+                return
+    finally:
+        srv.close()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="FedCCL standalone shard server (see "
+                    "docs/WIRE_PROTOCOL.md and docs/OPERATIONS.md)")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="bind address (default loopback; use 0.0.0.0 to "
+                         "serve other hosts)")
+    ap.add_argument("--port", type=int, default=9701,
+                    help="bind port; 0 picks an ephemeral port (announced "
+                         "on stdout)")
+    args = ap.parse_args(argv)
+    serve(args.host, args.port)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

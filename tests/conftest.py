@@ -12,6 +12,20 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture(scope="session")
+def tcp_loopback_hosts():
+    """Four standalone shard servers on loopback ephemeral ports, shared by
+    every TCP-topology test in the session (each new store connection
+    re-seeds its worker, so sequential stores don't see each other's
+    state).  Tests that SIGKILL a *server* spawn their own
+    ``LoopbackShardServers`` instead — dropping a connection is fine here
+    (the server just returns to accepting), killing the process is not."""
+    from repro.core.transport import LoopbackShardServers
+
+    with LoopbackShardServers(4) as srv:
+        yield srv.hosts
+
+
 def pytest_addoption(parser):
     parser.addoption("--run-slow", action="store_true", default=False,
                      help="run heavy (subprocess-scale) gated tests")

@@ -329,6 +329,9 @@ def test_stuck_worker_surfaces_drain_timeout_and_respawns(init_tree):
         assert store.drain("cluster", "c0") == 3    # retried post-respawn
         stats = store.agg_stats()
         assert stats["drain_timeouts"] >= 1
+        # deadline misses are attributed to the stuck worker (the runbook
+        # in docs/OPERATIONS.md keys on this)
+        assert stats["shard_drain_timeouts"][0] == stats["drain_timeouts"]
         assert stats["respawns"] >= 1
         assert store.meta("cluster", "c0").round == 4
         assert store.effective_round("cluster", "c0") == 4

@@ -10,8 +10,11 @@ offers —
      worker processes; the matrix runs the deterministic in-process
      emulation, which round-trips the identical wire codec and worker fold
      code; real spawned workers are covered by ``test_process_store.py``),
-  5. the deterministic sim runtime,
-  6. the threaded runtime,
+  5. loopback-TCP drain (the same store over ``server_hosts`` — real
+     standalone shard servers on loopback sockets; transport-level failure
+     tests live in ``test_tcp_transport.py``),
+  6. the deterministic sim runtime,
+  7. the threaded runtime,
 
 — and asserts parity of every tier's weights (atol <= 1e-5), metadata,
 ``agg_stats()`` accounting, staleness, and privacy accounting, including
@@ -348,7 +351,7 @@ def scripted_reference(init, order=("cluster", "global")):
     return out
 
 
-def make_store(kind, init, masker=None):
+def make_store(kind, init, masker=None, hosts=None):
     keys = sorted({cluster_of(i) for i in range(N_CLIENTS)})
     if kind == "flat":
         return ModelStore(init, keys, agg_cfg=NOFAST,
@@ -362,13 +365,21 @@ def make_store(kind, init, masker=None):
                                         n_shards=4, batch_aggregation=True,
                                         max_coalesce=5, masker=masker,
                                         inprocess=True)
+    if kind == "tcp":
+        # real standalone shard servers over loopback sockets (the
+        # tcp_loopback_hosts session fixture) — the multi-host topology
+        return ProcessShardedModelStore(init, keys, agg_cfg=NOFAST,
+                                        batch_aggregation=True,
+                                        max_coalesce=5, masker=masker,
+                                        server_hosts=hosts,
+                                        drain_timeout_s=60.0)
     return ShardedModelStore(init, keys, agg_cfg=NOFAST, n_shards=4,
                              batch_aggregation=True, max_coalesce=5,
                              masker=masker)
 
 
-def run_runtime(runtime, store_kind, init, seed=0):
-    store = make_store(store_kind, init)
+def run_runtime(runtime, store_kind, init, seed=0, hosts=None):
+    store = make_store(store_kind, init, hosts=hosts)
     clients = make_scripted_clients(init)
     if runtime == "sim":
         rt = AsyncSimRuntime(clients, store, seed=seed)
@@ -376,6 +387,8 @@ def run_runtime(runtime, store_kind, init, seed=0):
     else:
         rt = AsyncThreadedRuntime(clients, store, ROUNDS, stagger=0.001)
         rt.run()
+    if store_kind == "tcp":
+        store.close()          # end the TCP sessions; mirrors stay readable
     return store, rt
 
 
@@ -412,12 +425,191 @@ def test_runtimes_match_reference_all_tiers():
 
 
 # =========================================================================
+# loopback-TCP flavor: multi-host topology in the same matrix
+# =========================================================================
+
+@pytest.mark.slow
+def test_tcp_loopback_runtimes_match_reference(tcp_loopback_hosts):
+    """Both runtimes against real loopback shard servers: every tier's
+    weights/meta/stats and the sim staleness log agree with the flat
+    reference — the TCP hop is semantically invisible."""
+    rng = np.random.default_rng(0)
+    init = make_tree(rng)
+    ref = scripted_reference(init)
+    for runtime in ("sim", "threaded"):
+        store, _ = run_runtime(runtime, "tcp", init,
+                               hosts=tcp_loopback_hosts)
+        for m, res in ref.items():
+            lk = ("global", None) if m == GLOBAL_KEY else ("cluster", m)
+            assert store.meta(*lk) == res.meta, (runtime, m)
+            assert_trees_close(store.params(*lk), res.params,
+                               msg=f"{runtime}/tcp {m}")
+        stats = store.agg_stats()
+        assert stats["transport"] == "tcp"
+        assert stats["updates"] == stats["enqueued"] == N_CLIENTS * ROUNDS * 2
+        assert stats["respawns"] == 0 and stats["drain_timeouts"] == 0
+    # staleness parity: identical sim schedules measure identical staleness
+    _, rt_flat = run_runtime("sim", "flat", init, seed=3)
+    _, rt_tcp = run_runtime("sim", "tcp", init, seed=3,
+                            hosts=tcp_loopback_hosts)
+    assert rt_flat.staleness_log == rt_tcp.staleness_log
+
+
+@pytest.mark.slow
+def test_tcp_loopback_secure_equivalence(tcp_loopback_hosts):
+    """Secure full-round drains over TCP: masks cancel inside the remote
+    workers and the result equals the unmasked flat baseline — privacy
+    accounting included."""
+    rng = np.random.default_rng(11)
+    init = make_tree(rng)
+    baseline = run_secure("sim", "flat", init, mask_scale=0.0)
+    store = run_secure("sim", "tcp", init, mask_scale=1.5,
+                       hosts=tcp_loopback_hosts)
+    assert store.n_secure_rounds == baseline.n_secure_rounds
+    assert store.n_secure_recoveries == baseline.n_secure_recoveries
+    for lk in [("global", None)] + [("cluster", k) for k in baseline.keys()]:
+        assert store.meta(*lk) == baseline.meta(*lk)
+        assert_trees_close(store.params(*lk), baseline.params(*lk),
+                           atol=1e-4, msg=f"tcp secure {lk}")
+
+
+# =========================================================================
+# lazy mirror sync: reply bandwidth down, reads provably never stale
+# =========================================================================
+
+def _drive_lazy(init, keys, sync_every, events):
+    store = ProcessShardedModelStore(init, keys, agg_cfg=NOFAST,
+                                     n_shards=2, batch_aggregation=True,
+                                     max_coalesce=3, inprocess=True,
+                                     mirror_sync_every=sync_every)
+    for m, p, um, d in events:
+        level, key = ("global", None) if m == GLOBAL_KEY else ("cluster", m)
+        store.handle_model_update(level, key, p, um, d)
+        store.drain(level, key)           # one drain reply per update
+    return store
+
+
+def test_lazy_mirror_sync_equal_weights_lower_reply_bytes():
+    """``mirror_sync_every>1`` must change only the wire traffic: reads
+    (which sync dirty mirrors first) land on the identical weights while
+    reply bytes drop — the deterministic in-process twin of the TCP
+    bandwidth test."""
+    rng = np.random.default_rng(43)
+    init = make_tree(rng)
+    keys = ["c0", "c1", "c2"]
+    events = make_schedule(rng, [GLOBAL_KEY] + keys, n_updates=30)
+    eager = _drive_lazy(init, keys, 1, events)
+    lazy = _drive_lazy(init, keys, 4, events)
+    assert lazy.wire_bytes()[1] < eager.wire_bytes()[1]
+    for lk in [("global", None)] + [("cluster", k) for k in keys]:
+        assert lazy.meta(*lk) == eager.meta(*lk), lk      # read barrier
+        assert lazy.effective_round(*lk) == eager.effective_round(*lk)
+        assert_trees_close(lazy.params(*lk), eager.params(*lk),
+                           msg=f"lazy {lk}")
+    s_lazy, s_eager = lazy.agg_stats(), eager.agg_stats()
+    for k in ("updates", "enqueued", "fast_path_frac"):
+        assert s_lazy[k] == s_eager[k], k
+    assert s_lazy["mirror_syncs"] >= 1
+    assert lazy.sync_mirrors() == 0       # reads left every mirror clean
+
+
+def test_lazy_mirror_sync_effective_round_stable_until_sync():
+    """Provisional (meta-only) acks keep the journal authoritative: the
+    staleness reference neither regresses nor double-counts while params
+    are still worker-side."""
+    rng = np.random.default_rng(47)
+    init = make_tree(rng)
+    store = ProcessShardedModelStore(init, ["c0"], agg_cfg=NOFAST,
+                                     n_shards=1, batch_aggregation=True,
+                                     inprocess=True, mirror_sync_every=10)
+    n = 6
+    for i in range(n):
+        store.handle_model_update("cluster", "c0", make_tree(rng),
+                                  ModelMeta(5, 1, 1), UpdateDelta(5, 1, 1))
+        store.drain("cluster", "c0")      # all provisional
+        assert store.effective_round("cluster", "c0") == i + 1
+    assert store.sync_mirrors() == 1
+    assert store.effective_round("cluster", "c0") == n
+    assert store.meta("cluster", "c0").round == n
+    assert store.pending_depth("cluster", "c0") == 0
+
+
+def test_lazy_mirror_sync_crash_between_syncs_refolds_exactly():
+    """A worker crash while folds are acked-but-unsynced must replay and
+    refold them from the last synced mirror: nothing lost, nothing
+    double-counted, weights equal to the eager store's."""
+    rng = np.random.default_rng(53)
+    init = make_tree(rng)
+    keys = ["c0", "c1"]
+    events = make_schedule(rng, keys, n_updates=16)
+    eager = _drive_lazy(init, keys, 1, events)
+    lazy = ProcessShardedModelStore(init, keys, agg_cfg=NOFAST,
+                                    n_shards=2, batch_aggregation=True,
+                                    max_coalesce=3, inprocess=True,
+                                    mirror_sync_every=100)
+    for m, p, um, d in events:
+        lazy.handle_model_update("cluster", m, p, um, d)
+        lazy.drain("cluster", m)          # provisional acks pile up
+    lazy._debug_kill_worker(0)
+    lazy._debug_kill_worker(1)
+    lazy.drain_all()                      # respawn + replay + refold
+    lazy.sync_mirrors()
+    stats = lazy.agg_stats()
+    assert stats["respawns"] == 2
+    assert stats["updates"] == stats["enqueued"] == len(events)
+    for k in keys:
+        assert lazy.meta("cluster", k) == eager.meta("cluster", k), k
+        assert lazy.effective_round("cluster", k) == \
+            eager.effective_round("cluster", k)
+        assert_trees_close(lazy.params("cluster", k),
+                           eager.params("cluster", k), atol=1e-4,
+                           msg=f"crash refold {k}")
+
+
+def test_lazy_mirror_sync_secure_round_flushes_provisional_acks():
+    """A secure full-round drain always ships params, flushing earlier
+    provisional acks with them — the shipped state already contains those
+    folds, so accounting must close without an explicit sync."""
+    from repro.utils.tree import unflatten_params
+
+    rng = np.random.default_rng(59)
+    init = make_tree(rng)
+    mk = PairwiseMasker(seed=2, mask_scale=0.0)
+    store = ProcessShardedModelStore(init, ["c0"], agg_cfg=NOFAST,
+                                     n_shards=1, batch_aggregation=True,
+                                     inprocess=True, masker=mk,
+                                     mirror_sync_every=50)
+    store.handle_model_update("cluster", "c0", make_tree(rng),
+                              ModelMeta(5, 1, 1), UpdateDelta(5, 1, 1))
+    store.drain("cluster", "c0")          # provisional
+    ids = ["m0", "m1"]
+    mkey = store.model_key("cluster", "c0")
+    for cid in ids:
+        crng = np.random.default_rng(hash((cid, "c0")) % 2**31)
+        d = jnp.asarray(crng.standard_normal(17), jnp.float32)
+        masked = unflatten_params(
+            mk.mask_delta_flat(d, cid, ids, 0, mkey, weight=10.0), init)
+        store.submit_secure("cluster", "c0", cid, 0, masked,
+                            UpdateDelta(10, 1, 1))
+    store.drain_secure("cluster", "c0", 0, ids)
+    stats = store.agg_stats()
+    assert stats["updates"] == stats["enqueued"] == 3
+    assert stats["secure_rounds"] == 1
+    # 1 lazily-acked fold + 2 secure member updates = 3 rounds, all
+    # reflected in the mirror the sdrain reply shipped
+    assert store.meta("cluster", "c0").round == 3
+    assert store.effective_round("cluster", "c0") == 3
+    assert store.sync_mirrors() == 0      # the sdrain reply synced it all
+
+
+# =========================================================================
 # secure aggregation across the matrix                        [satellite]
 # =========================================================================
 
-def run_secure(runtime, store_kind, init, mask_scale, dropout=0.0, seed=5):
+def run_secure(runtime, store_kind, init, mask_scale, dropout=0.0, seed=5,
+               hosts=None):
     masker = PairwiseMasker(seed=9, mask_scale=mask_scale)
-    store = make_store(store_kind, init, masker=masker)
+    store = make_store(store_kind, init, masker=masker, hosts=hosts)
     clients = make_scripted_clients(init, order=("global", "cluster"))
     if runtime == "sim":
         rt = AsyncSimRuntime(clients, store, seed=seed, dropout_prob=dropout)
@@ -425,6 +617,8 @@ def run_secure(runtime, store_kind, init, mask_scale, dropout=0.0, seed=5):
     else:
         rt = AsyncThreadedRuntime(clients, store, ROUNDS)
         rt.run()
+    if store_kind == "tcp":
+        store.close()
     return store
 
 

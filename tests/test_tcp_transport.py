@@ -1,0 +1,259 @@
+"""Multi-host federation server over real loopback TCP.
+
+The cross-topology matrix (``test_store_equivalence.py``) proves the TCP
+flavor's fold parity; this file covers what only the socket transport can
+show:
+
+  * connection loss mid-run: the parent reconnects, re-seeds and replays
+    its journal — no lost updates, no double counts (the worker's seq
+    watermark drops any duplicate that DID survive the drop),
+  * a SIGKILLed *server* restarted by its supervisor on the same address
+    is picked up transparently by the same recovery path (heavy),
+  * lazy mirror sync over real sockets: reply bytes shrink, weights stay
+    equal, reads are never stale,
+  * the stop handshake ends the session while the server keeps serving
+    subsequent parents.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.aggregation import ModelMeta, UpdateDelta
+from repro.core.runtime_threaded import AsyncThreadedRuntime
+from repro.core.store import GLOBAL_KEY, ModelStore, ProcessShardedModelStore
+from repro.core.transport import LoopbackShardServers
+
+from test_store_equivalence import (
+    NOFAST,
+    apply_sequential,
+    assert_trees_close,
+    make_schedule,
+    make_tree,
+    replay_through_store,
+)
+
+
+@pytest.fixture
+def init_tree():
+    return make_tree(np.random.default_rng(0))
+
+
+def _mk(init_tree, hosts, **kw):
+    kw.setdefault("batch_aggregation", True)
+    kw.setdefault("max_coalesce", 5)
+    kw.setdefault("drain_timeout_s", 60.0)
+    return ProcessShardedModelStore(init_tree, kw.pop("keys", ()),
+                                    server_hosts=hosts, **kw)
+
+
+@pytest.mark.slow
+def test_tcp_parity_with_sequential_fold(init_tree, tcp_loopback_hosts):
+    """Same schedule through the pairwise reference fold and the TCP
+    store: every tier's weights/meta/stats agree — the sockets are
+    invisible."""
+    rng = np.random.default_rng(61)
+    keys = [f"loc:{i}" for i in range(5)]
+    models = [GLOBAL_KEY] + keys
+    events = make_schedule(rng, models, n_updates=40)
+    seq = apply_sequential(init_tree, models, events, NOFAST)
+    with _mk(init_tree, tcp_loopback_hosts, keys=keys,
+             agg_cfg=NOFAST) as store:
+        replay_through_store(store, events, np.random.default_rng(2))
+        for m in models:
+            lk = ("global", None) if m == GLOBAL_KEY else ("cluster", m)
+            assert store.meta(*lk) == seq[m][1], m
+            assert_trees_close(store.params(*lk), seq[m][0], msg=f"tcp {m}")
+        stats = store.agg_stats()
+        assert stats["transport"] == "tcp"
+        assert stats["updates"] == stats["enqueued"] == len(events)
+        assert stats["respawns"] == 0 and stats["drain_timeouts"] == 0
+        assert stats["shard_drain_timeouts"] == [0] * len(tcp_loopback_hosts)
+        assert stats["wire_tx_bytes"] > 0 and stats["wire_rx_bytes"] > 0
+        assert store.pending_depth("global") == 0
+
+
+@pytest.mark.slow
+def test_tcp_connection_loss_reconnect_replays_journal(init_tree,
+                                                       tcp_loopback_hosts):
+    """Drop every connection mid-stream (the servers survive): the next
+    drain reconnects, re-seeds from the parent mirrors and replays the
+    journal — accounting closes exactly."""
+    keys = ["c0", "c1", "c2"]
+    rng = np.random.default_rng(3)
+    with _mk(init_tree, tcp_loopback_hosts, keys=keys, agg_cfg=NOFAST,
+             max_coalesce=4) as store:
+        n = 0
+        for i in range(6):
+            for key in keys:
+                store.handle_model_update("cluster", key, make_tree(rng),
+                                          ModelMeta(5, 1, 1),
+                                          UpdateDelta(5, 1, 1))
+                n += 1
+            store.handle_model_update("global", None, make_tree(rng),
+                                      ModelMeta(5, 1, 1), UpdateDelta(5, 1, 1))
+            n += 1
+            if i == 2:
+                store.drain_all()              # some state already folded
+                for sh in store._proc_shards:  # sever every connection
+                    sh.handle.kill()
+        before = {lk: store.effective_round(*lk)
+                  for lk in [("global", None)]
+                  + [("cluster", k) for k in keys]}
+        store.drain_all()
+        stats = store.agg_stats()
+        assert stats["respawns"] >= len(tcp_loopback_hosts)
+        assert stats["updates"] == stats["enqueued"] == n
+        for lk, er in before.items():
+            assert store.meta(*lk).round == er         # no loss, no double
+            assert store.effective_round(*lk) == er
+            assert store.pending_depth(*lk) == 0
+
+
+@pytest.mark.slow
+def test_tcp_duplicate_replay_is_idempotent(init_tree, tcp_loopback_hosts):
+    """Force the ambiguous case a reconnect can produce — the same
+    journaled submit delivered twice in one worker lifetime — and check
+    the seq watermark folds it once."""
+    with _mk(init_tree, tcp_loopback_hosts[:1], keys=["c0"]) as store:
+        sh = store._proc_shards[0]
+        store.handle_model_update("cluster", "c0", make_tree(
+            np.random.default_rng(1)), ModelMeta(9, 1, 1), UpdateDelta(9, 1, 1))
+        with sh.journal_lock:
+            raws = [e.raw for e in sh.journal.values()]
+            store._flush_outbox(sh)
+            for raw in raws:               # duplicate delivery
+                sh.handle.put(raw)
+        assert store.drain("cluster", "c0") == 1
+        assert store.meta("cluster", "c0").round == 1
+        assert store.agg_stats()["updates"] == 1
+
+
+@pytest.mark.slow
+def test_tcp_lazy_mirror_sync_cuts_reply_bytes_at_equal_weights(
+        init_tree, tcp_loopback_hosts):
+    """The deterministic bandwidth claim over real sockets: the same
+    schedule drained at the same points ships ~1/N of the reply params
+    under ``mirror_sync_every=N``, and reads land on identical weights."""
+    keys = ["c0", "c1", "c2", "c3"]
+    rng = np.random.default_rng(17)
+    events = make_schedule(rng, keys, n_updates=24)
+
+    def drive(sync_every):
+        with _mk(init_tree, tcp_loopback_hosts, keys=keys, agg_cfg=NOFAST,
+                 mirror_sync_every=sync_every) as store:
+            for i, (m, p, um, d) in enumerate(events):
+                store.handle_model_update("cluster", m, p, um, d)
+                store.drain("cluster", m)           # one reply per update
+            store.sync_mirrors()
+            tx, rx = store.wire_bytes()
+            return ({k: store.params("cluster", k) for k in keys},
+                    {k: store.meta("cluster", k) for k in keys},
+                    rx, store.agg_stats())
+
+    p1, m1, rx1, _ = drive(1)
+    p4, m4, rx4, s4 = drive(4)
+    assert rx4 < 0.7 * rx1, (rx4, rx1)      # reply bandwidth actually cut
+    assert s4["mirror_syncs"] >= 1
+    assert s4["updates"] == s4["enqueued"] == len(events)
+    for k in keys:
+        assert m1[k] == m4[k], k
+        assert_trees_close(p1[k], p4[k], msg=f"lazy sync {k}")
+
+
+@pytest.mark.slow
+def test_tcp_threaded_runtime_pump(init_tree, tcp_loopback_hosts):
+    """The threaded runtime's scatter-gather pump against remote workers:
+    accounting closes and shutdown stays bounded."""
+    keys = ["p0", "p1", "p2"]
+    n_threads, per_thread = 3, 10
+    with _mk(init_tree, tcp_loopback_hosts, keys=keys,
+             agg_cfg=NOFAST) as store:
+        def submitter(t):
+            for i in range(per_thread):
+                tree = make_tree(np.random.default_rng(5_000 + t * 100 + i))
+                store.handle_model_update("cluster", keys[(t + i) % 3], tree,
+                                          ModelMeta(8, 1, 1),
+                                          UpdateDelta(8, 1, 1))
+                store.handle_model_update("global", None, tree,
+                                          ModelMeta(8, 1, 1),
+                                          UpdateDelta(8, 1, 1))
+
+        rt = AsyncThreadedRuntime([], store, drain_poll=1e-3)
+        stop = threading.Event()
+        rt._start_drain_workers(stop)
+        assert len(rt.drain_workers) == 1        # one scatter-gather pump
+        subs = [threading.Thread(target=submitter, args=(t,))
+                for t in range(n_threads)]
+        for t in subs:
+            t.start()
+        for t in subs:
+            t.join(60.0)
+            assert not t.is_alive()
+        rt._join_drain_workers(stop)
+        assert not rt.errors
+        total = n_threads * per_thread * 2
+        assert store.n_updates == store.n_enqueued == total
+        assert store.agg_stats()["global_drains"] >= 1
+
+
+@pytest.mark.slow
+def test_tcp_stop_session_server_keeps_serving(init_tree):
+    """A parent's close() ends only its session: the next parent connects
+    to the same server and gets a freshly seeded worker."""
+    with LoopbackShardServers(1) as srv:
+        for round_ in range(2):
+            with _mk(init_tree, srv.hosts, keys=["c0"]) as store:
+                store.handle_model_update(
+                    "cluster", "c0", make_tree(np.random.default_rng(round_)),
+                    ModelMeta(4, 1, 1), UpdateDelta(4, 1, 1))
+                assert store.drain("cluster", "c0") == 1
+                # fresh seed each session: rounds do not leak across parents
+                assert store.meta("cluster", "c0").round == 1
+
+
+@pytest.mark.heavy
+def test_tcp_server_killed_and_supervisor_restarted(init_tree):
+    """SIGKILL the server process mid-round, restart it on the same
+    address (what a supervisor does), and check journal replay: no lost
+    updates, no double-counted rounds."""
+    with LoopbackShardServers(2) as srv:
+        with _mk(init_tree, srv.hosts, keys=["k0", "k1"],
+                 agg_cfg=NOFAST) as store:
+            rng = np.random.default_rng(7)
+            refs = {"k0": [], "k1": [], GLOBAL_KEY: []}
+            for i in range(4):
+                for key in ("k0", "k1"):
+                    tree = make_tree(rng)
+                    store.handle_model_update("cluster", key, tree,
+                                              ModelMeta(6, 1, 1),
+                                              UpdateDelta(6, 1, 1))
+                    refs[key].append((tree, ModelMeta(6, 1, 1),
+                                      UpdateDelta(6, 1, 1)))
+            store.drain_all()                    # both workers hold state
+            for i in range(4):
+                for key in ("k0", "k1"):
+                    tree = make_tree(rng)
+                    store.handle_model_update("cluster", key, tree,
+                                              ModelMeta(6, 1, 1),
+                                              UpdateDelta(6, 1, 1))
+                    refs[key].append((tree, ModelMeta(6, 1, 1),
+                                      UpdateDelta(6, 1, 1)))
+            srv.kill(0)
+            srv.kill(1)
+            srv.respawn(0)
+            srv.respawn(1)
+            assert store.drain_all() == 8        # replayed, not lost
+            stats = store.agg_stats()
+            assert stats["respawns"] >= 2
+            assert stats["updates"] == stats["enqueued"] == 16
+            from repro.core.aggregation import coalesced_aggregate
+
+            for key in ("k0", "k1"):
+                ref = coalesced_aggregate(init_tree, ModelMeta(),
+                                          [(p, m, d) for p, m, d in refs[key]],
+                                          NOFAST)
+                assert store.meta("cluster", key) == ref.meta
+                assert_trees_close(store.params("cluster", key), ref.params,
+                                   atol=1e-4, msg=f"post-restart {key}")

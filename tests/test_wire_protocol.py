@@ -1,0 +1,354 @@
+"""Wire-protocol conformance tests — the executable half of
+``docs/WIRE_PROTOCOL.md``.
+
+Frames the transport emits must match the spec **byte for byte** (golden
+tests below), malformed/mismatched frames must fail loudly instead of
+yielding garbage params, and the msgpack array codec must round-trip under
+cross-host assumptions: non-native endianness, f16/bf16/int dtypes, 0-d
+and empty arrays.  The replay-dedup watermark (idempotent journal replay
+by update seq) is covered at the ``ShardWorker`` level.
+"""
+
+import socket
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.msgpack_ckpt import packb, unpackb, unpackb_np
+from repro.core import transport
+from repro.core.aggregation import AggregationConfig
+from repro.core.server_proc import ShardWorker, make_seed_blob
+from repro.core.transport import (
+    FRAME_MAGIC,
+    HEADER_SIZE,
+    KIND_COMMAND,
+    KIND_REPLY,
+    WIRE_VERSION,
+    FrameProtocolError,
+    FrameVersionError,
+    pack_frame,
+    parse_header,
+    parse_host,
+    recv_frame,
+    send_frame,
+)
+
+# =========================================================================
+# frame layout: golden bytes against docs/WIRE_PROTOCOL.md
+# =========================================================================
+
+
+def test_frame_golden_bytes_match_spec():
+    """The normative layout: 2B magic "FC", 1B version, 1B kind, 4B
+    big-endian length, then the payload verbatim."""
+    frame = pack_frame(b"hello", KIND_COMMAND)
+    assert frame == b"FC" + bytes([1, 0]) + (5).to_bytes(4, "big") + b"hello"
+    reply = pack_frame(b"", KIND_REPLY)
+    assert reply == b"FC" + bytes([1, 1]) + (0).to_bytes(4, "big")
+    assert HEADER_SIZE == 8
+    assert FRAME_MAGIC == b"FC" and WIRE_VERSION == 1
+
+
+def test_parse_header_roundtrip():
+    kind, length = parse_header(pack_frame(b"xyz", KIND_REPLY)[:HEADER_SIZE])
+    assert (kind, length) == (KIND_REPLY, 3)
+
+
+def test_frame_bad_magic_rejected():
+    with pytest.raises(FrameProtocolError, match="not a FedCCL frame"):
+        parse_header(b"XX" + bytes([1, 0]) + (0).to_bytes(4, "big"))
+
+
+def test_frame_version_mismatch_raises_clear_error():
+    """A peer speaking a different wire version must raise an actionable
+    error — never unpack garbage params (versioning rules in the spec)."""
+    future = b"FC" + bytes([2, 0]) + (0).to_bytes(4, "big")
+    with pytest.raises(FrameVersionError) as ei:
+        parse_header(future)
+    msg = str(ei.value)
+    assert "version 2" in msg and "speaks 1" in msg
+    assert "WIRE_PROTOCOL" in msg
+
+
+def test_frame_unknown_kind_and_oversize_rejected():
+    with pytest.raises(FrameProtocolError, match="kind"):
+        parse_header(b"FC" + bytes([1, 7]) + (0).to_bytes(4, "big"))
+    with pytest.raises(FrameProtocolError, match="sanity"):
+        parse_header(b"FC" + bytes([1, 0]) +
+                     (transport.MAX_FRAME_BYTES + 1).to_bytes(4, "big"))
+
+
+def test_send_recv_frame_over_socketpair():
+    a, b = socket.socketpair()
+    try:
+        payload = packb({"x": np.arange(6, dtype=np.float32)})
+        n = send_frame(a, payload, KIND_COMMAND)
+        assert n == HEADER_SIZE + len(payload)
+        kind, got = recv_frame(b)
+        assert kind == KIND_COMMAND and got == payload
+        np.testing.assert_array_equal(unpackb_np(got)["x"],
+                                      np.arange(6, dtype=np.float32))
+    finally:
+        a.close()
+        b.close()
+
+
+def test_recv_frame_version_mismatch_over_socket():
+    a, b = socket.socketpair()
+    try:
+        a.sendall(b"FC" + bytes([9, 0]) + (0).to_bytes(4, "big"))
+        with pytest.raises(FrameVersionError):
+            recv_frame(b)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_parse_host():
+    assert parse_host("10.0.0.5:9701") == ("10.0.0.5", 9701)
+    assert parse_host("[::1]:9701") == ("::1", 9701)
+    with pytest.raises(ValueError):
+        parse_host("no-port")
+
+
+# =========================================================================
+# msgpack array codec under cross-host assumptions           [satellite]
+# =========================================================================
+
+
+def _roundtrip_np(arr):
+    return unpackb_np(packb({"w": arr}))["w"]
+
+
+def test_non_native_endianness_roundtrips_to_native():
+    """A big-endian array (explicit '>f4' view, or a big-endian producer
+    host) must decode to the same VALUES in native order — jax rejects
+    non-native arrays, and raw producer-order bytes would silently
+    scramble every weight."""
+    for dt in (">f4", ">f8", ">i4", ">i8", ">u2"):
+        src = np.arange(7).astype(dt)
+        out = _roundtrip_np(src)
+        assert out.dtype.byteorder in ("=", "|"), (dt, out.dtype)
+        np.testing.assert_array_equal(out.astype(src.dtype), src)
+    # the jnp-returning checkpoint decode accepts the same blobs
+    big = np.asarray([1.5, -2.25, 3.0], dtype=">f4")
+    dec = unpackb(packb({"w": big}))["w"]
+    np.testing.assert_allclose(np.asarray(dec), [1.5, -2.25, 3.0])
+
+
+def test_wire_dtype_strings_are_explicit_little_endian():
+    """The dtype STRING on the wire must state the byte order for
+    multi-byte dtypes (spec §3): ``str(np.dtype('<f4'))`` is plain
+    'float32' on a little-endian producer, which a big-endian consumer
+    would decode in ITS native order — silent weight corruption."""
+    import msgpack
+
+    def wire_dtype(arr):
+        packed = packb({"w": arr})
+        ext = msgpack.unpackb(packed, raw=False)["w"]
+        return msgpack.unpackb(ext.data, raw=False)[0]
+
+    assert wire_dtype(np.zeros(3, np.float32)) == "<f4"
+    assert wire_dtype(np.zeros(3, np.float64)) == "<f8"
+    assert wire_dtype(np.zeros(3, np.int64)) == "<i8"
+    assert wire_dtype(np.zeros(3, np.float16)) == "<f2"
+    assert wire_dtype(np.zeros(3, ">f4")) == "<f4"      # swapped, not kept
+    assert wire_dtype(np.zeros(3, np.int8)) == "int8"   # single-byte: plain
+    assert wire_dtype(np.zeros(3, bool)) == "bool"
+    bf = jnp.zeros(3, jnp.bfloat16)
+    assert wire_dtype(np.asarray(bf)) == "bfloat16"
+    # order-less legacy strings (pre-TCP checkpoints) still decode
+    legacy = msgpack.ExtType(1, msgpack.packb(
+        ("float32", [2], np.asarray([1.0, 2.0], "<f4").tobytes()),
+        use_bin_type=True))
+    out = unpackb_np(msgpack.packb({"w": legacy}, use_bin_type=True))["w"]
+    np.testing.assert_array_equal(out, [1.0, 2.0])
+
+
+def test_f16_bf16_int_dtypes_roundtrip():
+    rng = np.random.default_rng(0)
+    f16 = rng.standard_normal(9).astype(np.float16)
+    np.testing.assert_array_equal(_roundtrip_np(f16), f16)
+    assert _roundtrip_np(f16).dtype == np.float16
+
+    bf16 = jnp.asarray(rng.standard_normal(9), jnp.bfloat16)
+    out = _roundtrip_np(np.asarray(bf16))
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(out, np.asarray(bf16))
+
+    for dt in (np.int8, np.uint8, np.int16, np.int32, np.int64, np.uint64):
+        arr = np.array([0, 1, 2, 127], dtype=dt)
+        out = _roundtrip_np(arr)
+        assert out.dtype == dt
+        np.testing.assert_array_equal(out, arr)
+
+
+def test_zero_d_and_empty_arrays_roundtrip():
+    zd = np.float32(3.5) * np.ones(())            # 0-d
+    out = _roundtrip_np(np.asarray(zd))
+    assert out.shape == () and out == np.float32(3.5)
+
+    empty = np.zeros((0, 4), np.float32)
+    out = _roundtrip_np(empty)
+    assert out.shape == (0, 4) and out.dtype == np.float32
+
+    jd = unpackb(packb({"w": np.zeros((3, 0), np.int32)}))["w"]
+    assert jd.shape == (3, 0)
+
+
+# =========================================================================
+# replay dedup: idempotent journal replay by update seq
+# =========================================================================
+
+
+def _worker(**kw):
+    blob = make_seed_blob([], 4, AggregationConfig(), None,
+                          kw.get("sync_every", 1))
+    w = ShardWorker(0, blob)
+    w.handle(unpackb_np(packb(["ensure", "c0",
+                               {"w": np.ones(3, np.float32)}])))
+    return w
+
+
+def _sub(seq, s=10):
+    return unpackb_np(packb(["sub", seq, "c0",
+                             {"w": np.full(3, float(seq), np.float32)},
+                             [s, 1, 1], [s, 1, 1]]))
+
+
+def test_worker_drops_replayed_duplicate_seqs():
+    """A journal replay racing messages that DID arrive (TCP reconnect)
+    must not double-apply: seqs at or below the watermark are dropped."""
+    w = _worker()
+    w.handle(_sub(0))
+    w.handle(_sub(1))
+    w.handle(_sub(0))          # replay duplicates
+    w.handle(_sub(1))
+    assert len(w.records["c0"]["pending"]) == 2
+    reply = w.handle(unpackb_np(packb(["drain", "c0"])))
+    assert reply[0] == "drained" and reply[2] == 2     # folded exactly 2
+    assert w.records["c0"]["meta"].round == 2
+
+
+def test_failed_submit_seq_stays_replayable():
+    """A submit that errors never entered worker state, so its seq must
+    stay replayable (the deferred-error path re-attempts it after the
+    parent respawns/reseeds)."""
+    w = _worker()
+    bad = unpackb_np(packb(["sub", 5, "nope",
+                            {"w": np.ones(3, np.float32)},
+                            [1, 1, 1], [1, 1, 1]]))
+    with pytest.raises(KeyError):
+        w.handle(bad)
+    assert 5 not in w.held
+    w.handle(_sub(0))          # out-of-order lower seq still accepted
+    assert len(w.records["c0"]["pending"]) == 1
+
+
+def test_out_of_order_seqs_both_accepted():
+    """seq is allocated before the publish lock, so concurrent submitters
+    can publish a shard's seqs slightly out of order — dedup must be
+    exact membership, never a watermark that swallows the straggler."""
+    w = _worker()
+    w.handle(_sub(3))
+    w.handle(_sub(1))          # straggler: lower seq arrives later
+    assert len(w.records["c0"]["pending"]) == 2
+    reply = w.handle(unpackb_np(packb(["drain", "c0"])))
+    assert reply[2] == 2
+
+
+def test_fresh_seed_resets_dedup_state():
+    """A re-seed resets the state the dedup set described, so the journal
+    replay of previously-seen seqs must be accepted again (the fold they
+    entered died with the old worker)."""
+    w = _worker()
+    w.handle(_sub(0))
+    w.handle(_sub(1))
+    w2 = _worker()             # fresh worker from the same (empty) mirrors
+    for seq in (0, 1):         # journal replay
+        w2.handle(_sub(seq))
+    assert len(w2.records["c0"]["pending"]) == 2
+
+
+def test_folded_seq_leaves_dedup_set():
+    """The dedup set stays bounded by queue depth: folding removes seqs
+    (acked entries leave the parent journal and are never replayed)."""
+    w = _worker()
+    w.handle(_sub(0))
+    w.handle(_sub(1))
+    assert w.held == {0, 1}
+    w.handle(unpackb_np(packb(["drain", "c0"])))
+    assert w.held == set()
+
+
+# =========================================================================
+# worker-side lazy mirror sync reply shapes
+# =========================================================================
+
+
+def test_lazy_drain_replies_meta_only_until_nth_then_flush_all_acks():
+    w = _worker(sync_every=3)
+    replies = []
+    for i in range(3):
+        w.handle(_sub(i))
+        replies.append(w.handle(unpackb_np(packb(["drain", "c0"]))))
+    # first two: provisional (params None, own acks only)
+    for i in (0, 1):
+        _, key, folded, _, _, acked, params, meta_w = replies[i]
+        assert folded == 1 and params is None and acked == [i]
+        assert meta_w[2] == i + 1                    # seq-stamped metadata
+    # third: params + ALL accumulated acks
+    _, _, folded, _, _, acked, params, meta_w = replies[2]
+    assert folded == 1 and params is not None
+    assert sorted(acked) == [0, 1, 2]
+    assert w.records["c0"]["unsynced"] == []
+
+
+def test_sync_command_flushes_unsynced_keys():
+    w = _worker(sync_every=10)
+    w.handle(_sub(0))
+    w.handle(unpackb_np(packb(["drain", "c0"])))     # provisional
+    reply = w.handle(unpackb_np(packb(["sync"])))
+    assert reply[0] == "synced"
+    (key, acked, params, meta_w), = reply[1]
+    assert key == "c0" and acked == [0] and params is not None
+    assert w.handle(unpackb_np(packb(["sync"])))[1] == []   # now clean
+
+
+# =========================================================================
+# the TCP handle speaks spec frames (loopback echo server)
+# =========================================================================
+
+
+def test_tcp_handle_frames_are_spec_frames():
+    """Sniff the raw bytes a TcpWorkerHandle puts on the wire: every frame
+    must parse under the spec header and carry msgpack payloads."""
+    srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    srv.bind(("127.0.0.1", 0))
+    srv.listen(1)
+    seen = {}
+
+    def fake_server():
+        conn, _ = srv.accept()
+        kind, payload = recv_frame(conn)
+        seen["kind"], seen["msg"] = kind, unpackb_np(payload)
+        send_frame(conn, packb(["seeded", 0]), KIND_REPLY)
+        kind, payload = recv_frame(conn)
+        seen["put"] = unpackb_np(payload)
+        conn.close()
+
+    t = threading.Thread(target=fake_server)
+    t.start()
+    blob = make_seed_blob([], 4, AggregationConfig(), None)
+    h = transport.TcpWorkerHandle(0, blob, srv.getsockname(),
+                                  connect_timeout=10.0)
+    h.put(packb(["ensure", "c0", {"w": np.ones(2, np.float32)}]))
+    t.join(10.0)
+    srv.close()
+    h.discard()
+    assert seen["kind"] == KIND_COMMAND
+    assert seen["msg"][0] == "seed" and seen["msg"][1] == 0
+    assert seen["put"][0] == "ensure"
+    assert h.tx_bytes > 0 and h.rx_bytes > 0
