@@ -74,7 +74,7 @@ def run(seed: int = 0, hidden: int = 64, epochs_a: int = 8, epochs_b: int = 8,
     def drift(p):
         return float(np.sqrt(sum(
             np.sum((np.asarray(x, np.float64) - np.asarray(y, np.float64)) ** 2)
-            for x, y in zip(jax.tree.leaves(p), jax.tree.leaves(p_a)))))
+            for x, y in zip(jax.tree.leaves(p), jax.tree.leaves(p_a), strict=True))))
 
     return {
         "task_a_error_after_a": err_a_before,

@@ -69,7 +69,7 @@ def run_secure_drain(t=200_000, n_clients=8):
         news.append({"w": jnp.asarray(rng.standard_normal(t), jnp.float32)})
         weights.append(int(rng.integers(50, 500)))
     plain_updates = [(p, ModelMeta(s, 1, 6), UpdateDelta(s, 1, 1))
-                     for p, s in zip(news, weights)]
+                     for p, s in zip(news, weights, strict=True)]
     cfg = AggregationConfig()
 
     def plain():
@@ -78,7 +78,7 @@ def run_secure_drain(t=200_000, n_clients=8):
     def secure():
         masked = [(masker.mask_update(base, p, cid, ids, 0, "__global__", s),
                    UpdateDelta(s, 1, 1))
-                  for cid, p, s in zip(ids, news, weights)]
+                  for cid, p, s in zip(ids, news, weights, strict=True)]
         return secure_coalesced_aggregate(base, meta, masked, cfg).params["w"]
 
     return {"params": t, "round_clients": n_clients,

@@ -1,0 +1,3 @@
+# Marks scripts/ as a package so `python -m scripts.fedlint` works from
+# the repo root.  The standalone entry points (check_docs.py, bench_gate.py,
+# hillclimb.py) are unaffected — they are run as plain files.

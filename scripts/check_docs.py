@@ -14,6 +14,11 @@ Three checks, run by the CI ``docs`` job (and ``tests/test_docs.py``):
      namespace (tiny params, trivial ``train_fn``, three
      ``client_specs``), so the documented API calls are guaranteed to
      run.  Shell blocks are checked for dead script paths.
+  4. **fedlint catalog coverage** — the finding IDs registered by
+     ``scripts/fedlint`` and the IDs documented in
+     ``docs/INVARIANTS.md`` must match exactly, in both directions: a
+     new rule without a catalog section fails, and so does a stale ID
+     left behind after a rule is removed.
 
 Usage:
   PYTHONPATH=src python scripts/check_docs.py            # gate
@@ -62,8 +67,8 @@ def undocumented_config_fields(ops_text: str | None = None) -> list[str]:
 
 def collect_references(text: str) -> tuple[set[str], set[str]]:
     """(paths, symbols) referenced by one markdown document."""
-    paths = set(m.group(0).rstrip("/.") for m in _PATH_RE.finditer(text))
-    symbols = set(m.group(0).rstrip(".") for m in _SYMBOL_RE.finditer(text))
+    paths = {m.group(0).rstrip("/.") for m in _PATH_RE.finditer(text)}
+    symbols = {m.group(0).rstrip(".") for m in _SYMBOL_RE.finditer(text)}
     return paths, symbols
 
 
@@ -146,6 +151,31 @@ def failing_code_blocks(files=None) -> list[str]:
     return problems
 
 
+# ------------------------------------------------------------- check 4
+
+_FED_ID_RE = re.compile(r"\bFED\d{3}\b")
+
+
+def fedlint_catalog_drift() -> list[str]:
+    """Bidirectional diff between the fedlint rule registry and the
+    ``docs/INVARIANTS.md`` catalog."""
+    if str(REPO) not in sys.path:
+        sys.path.insert(0, str(REPO))
+    from scripts.fedlint.rules import rule_ids
+
+    registered = set(rule_ids())
+    documented = set(_FED_ID_RE.findall(
+        (REPO / "docs" / "INVARIANTS.md").read_text()))
+    problems = []
+    for rid in sorted(registered - documented):
+        problems.append(f"INVARIANTS.md: registered fedlint rule `{rid}` "
+                        f"has no catalog entry")
+    for rid in sorted(documented - registered):
+        problems.append(f"INVARIANTS.md: documents `{rid}` but no fedlint "
+                        f"rule registers that ID")
+    return problems
+
+
 # ----------------------------------------------------------------- main
 
 def main() -> int:
@@ -172,6 +202,7 @@ def main() -> int:
     failures += [f"OPERATIONS.md: undocumented FedCCLConfig field "
                  f"`{name}`" for name in missing]
     failures += dead_references()
+    failures += fedlint_catalog_drift()
     if not args.skip_exec:
         failures += failing_code_blocks()
 
@@ -183,8 +214,8 @@ def main() -> int:
     n_blocks = sum(len(_PY_BLOCK_RE.findall(d.read_text()))
                    for d in DOC_FILES)
     print(f"[check-docs] OK — {len(DOC_FILES)} docs, every FedCCLConfig "
-          f"field documented, all references live, {n_blocks} python "
-          f"block(s) executed")
+          f"field documented, all references live, fedlint catalog in "
+          f"sync, {n_blocks} python block(s) executed")
     return 0
 
 

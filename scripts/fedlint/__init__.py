@@ -1,0 +1,28 @@
+"""fedlint — repo-specific static analysis for the FedCCL reproduction.
+
+The four server topologies (single-lock, thread-sharded, process-sharded,
+multi-host TCP) stay equivalent only while a handful of conventions hold:
+shared mutable state is touched under its lock, kernels ship signature-
+identical ``ops``/``ref`` twins, the wire constants match
+``docs/WIRE_PROTOCOL.md``, and nothing in the deterministic core consults
+an unseeded RNG or the wall clock.  ``fedlint`` checks those conventions
+at lint time, before the (much slower) equivalence matrix runs.
+
+Usage::
+
+    python -m scripts.fedlint src/ tests/ [--graph-out lock_order.dot]
+
+Rule IDs are stable and documented in ``docs/INVARIANTS.md``.
+"""
+
+from scripts.fedlint.core import Context, Finding, SourceFile, run
+from scripts.fedlint.rules import REGISTRY, rule_ids
+
+__all__ = [
+    "Context",
+    "Finding",
+    "REGISTRY",
+    "SourceFile",
+    "rule_ids",
+    "run",
+]

@@ -1,0 +1,50 @@
+"""CLI: ``python -m scripts.fedlint src/ tests/ [--graph-out PATH]``.
+
+Exit status 0 means every rule passed; 1 means findings (printed one per
+line as ``path:line: RULEID message``); 2 means usage error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+from scripts.fedlint.core import REPO, run, walk
+from scripts.fedlint.rules import rule_ids
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m scripts.fedlint",
+        description="FedCCL repo-specific static analysis "
+                    "(see docs/INVARIANTS.md)")
+    ap.add_argument("paths", nargs="*", default=["src", "tests"],
+                    help="files or directories to scan "
+                         "(default: src tests)")
+    ap.add_argument("--graph-out", type=pathlib.Path, default=None,
+                    help="write the static lock-order graph as DOT")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print every finding ID and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid, doc in rule_ids().items():
+            print(f"{rid}  {doc}")
+        return 0
+
+    paths = args.paths or ["src", "tests"]
+    findings = run(paths, root=REPO, graph_out=args.graph_out)
+    for f in findings:
+        print(f.render())
+    n_files = len(walk(paths, root=REPO))
+    if findings:
+        print(f"fedlint: {len(findings)} finding(s) in {n_files} files",
+              file=sys.stderr)
+        return 1
+    print(f"fedlint OK — {n_files} files clean", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,193 @@
+"""Analyzer plumbing: findings, parsed sources, rule protocol, runner.
+
+Rules come in two shapes:
+
+* per-file rules implement ``applies(rel)`` + ``check(src)`` and see one
+  :class:`SourceFile` at a time;
+* repo rules implement ``finalize(ctx)`` and read whatever files they
+  need through the :class:`Context` (which supports text overrides so
+  tests can patch a constant without touching the tree).
+
+Escape hatches are line comments of the form::
+
+    x = self.total  # fedlint: unlocked-ok(single torn read tolerated: stats)
+
+The reason string in parentheses is mandatory; a hatch without one is
+itself a finding (FED103) and does not suppress anything.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+import re
+
+REPO = pathlib.Path(__file__).resolve().parents[2]
+
+#: path fragments never scanned by the CLI walker (golden-bad fixtures
+#: must be reachable by tests, not by ``fedlint src/ tests/``).
+SKIP_PARTS = frozenset({"__pycache__", "fixtures", ".git"})
+
+HATCH_RE = re.compile(r"#\s*fedlint:\s*([a-z][a-z-]*)-ok\s*(?:\(([^)#]*)\))?")
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    path: str  # repo-relative posix path
+    line: int
+    rule: str  # stable ID, e.g. "FED101"
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+class SourceFile:
+    """A parsed python file plus its per-line escape hatches."""
+
+    def __init__(self, path: pathlib.Path, rel: str | None = None,
+                 text: str | None = None):
+        self.path = path
+        if rel is None:
+            try:
+                rel = path.resolve().relative_to(REPO).as_posix()
+            except ValueError:
+                rel = path.as_posix()
+        self.rel = rel
+        self.text = path.read_text() if text is None else text
+        self.tree = ast.parse(self.text, filename=str(path))
+        # line -> [(tag, reason or None)]
+        self.hatches: dict[int, list[tuple[str, str | None]]] = {}
+        for lineno, line in enumerate(self.text.splitlines(), start=1):
+            for m in HATCH_RE.finditer(line):
+                reason = m.group(2)
+                reason = reason.strip() if reason is not None else None
+                self.hatches.setdefault(lineno, []).append(
+                    (m.group(1), reason or None))
+
+    def hatched(self, line: int, tag: str) -> bool:
+        """True when a *valid* hatch for ``tag`` covers ``line``.
+
+        A hatch covers its own line and the line directly below it (so a
+        standalone comment can precede a long statement).
+        """
+        for cand in (line, line - 1):
+            for t, reason in self.hatches.get(cand, ()):
+                if t == tag and reason:
+                    return True
+        return False
+
+    def bad_hatches(self) -> list[tuple[int, str]]:
+        """(line, tag) for every hatch missing its reason string."""
+        return [
+            (lineno, tag)
+            for lineno, entries in sorted(self.hatches.items())
+            for tag, reason in entries
+            if not reason
+        ]
+
+
+class Context:
+    """Repo handle for repo-level rules; supports per-file text overrides."""
+
+    def __init__(self, root: pathlib.Path = REPO,
+                 overrides: dict[str, str] | None = None,
+                 scanned: tuple[str, ...] = ()):
+        self.root = pathlib.Path(root)
+        self.overrides = dict(overrides or {})
+        self.scanned = tuple(scanned)
+        self._cache: dict[str, SourceFile] = {}
+
+    def read(self, rel: str) -> str:
+        if rel in self.overrides:
+            return self.overrides[rel]
+        return (self.root / rel).read_text()
+
+    def source(self, rel: str) -> SourceFile:
+        if rel not in self._cache:
+            self._cache[rel] = SourceFile(
+                self.root / rel, rel=rel, text=self.read(rel))
+        return self._cache[rel]
+
+    def exists(self, rel: str) -> bool:
+        return rel in self.overrides or (self.root / rel).exists()
+
+    def covers(self, rel_prefix: str) -> bool:
+        """Did the requested scan include anything under ``rel_prefix``?"""
+        if not self.scanned:
+            return True
+        return any(
+            s == rel_prefix or s.startswith(rel_prefix + "/")
+            or rel_prefix.startswith(s + "/") or s == ""
+            for s in self.scanned
+        )
+
+
+class Rule:
+    """Base rule.  ``id_docs`` maps every finding ID the rule can emit to
+    a one-line description (surfaced by ``--list-rules`` and cross-checked
+    against docs/INVARIANTS.md by scripts/check_docs.py)."""
+
+    id_docs: dict[str, str] = {}
+    name = "rule"
+
+    def applies(self, rel: str) -> bool:
+        return False
+
+    def check(self, src: SourceFile) -> list[Finding]:
+        return []
+
+    def finalize(self, ctx: Context) -> list[Finding]:
+        return []
+
+
+def walk(paths: list[str | pathlib.Path],
+         root: pathlib.Path = REPO) -> list[pathlib.Path]:
+    """Expand CLI path arguments into a sorted list of .py files."""
+    out: set[pathlib.Path] = set()
+    for raw in paths:
+        p = pathlib.Path(raw)
+        if not p.is_absolute():
+            p = root / p
+        if p.is_file() and p.suffix == ".py":
+            out.add(p.resolve())
+            continue
+        for sub in p.rglob("*.py"):
+            if SKIP_PARTS.isdisjoint(sub.parts):
+                out.add(sub.resolve())
+    return sorted(out)
+
+
+def relpath(p: pathlib.Path, root: pathlib.Path = REPO) -> str:
+    try:
+        return p.resolve().relative_to(root.resolve()).as_posix()
+    except ValueError:
+        return p.as_posix()
+
+
+def run(paths: list[str | pathlib.Path], rules=None,
+        root: pathlib.Path = REPO,
+        graph_out: pathlib.Path | None = None) -> list[Finding]:
+    """Run every rule over ``paths`` and return sorted findings."""
+    if rules is None:
+        from scripts.fedlint.rules import REGISTRY
+        rules = [cls() for cls in REGISTRY.values()]
+    files = walk(paths, root=root)
+    scanned = tuple(relpath(f, root) for f in files)
+    ctx = Context(root=root, scanned=scanned)
+    if graph_out is not None:
+        ctx.graph_out = pathlib.Path(graph_out)  # read by the lock-order rule
+    findings: list[Finding] = []
+    for f in files:
+        rel = relpath(f, root)
+        src = None
+        for rule in rules:
+            if not rule.applies(rel):
+                continue
+            if src is None:
+                src = ctx.source(rel)
+            findings.extend(rule.check(src))
+    for rule in rules:
+        findings.extend(rule.finalize(ctx))
+    return sorted(set(findings))

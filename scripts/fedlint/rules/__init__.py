@@ -1,0 +1,32 @@
+"""Rule registry.  IDs are stable — docs/INVARIANTS.md documents each one
+and scripts/check_docs.py fails CI when the two drift apart."""
+
+from __future__ import annotations
+
+from scripts.fedlint.rules.determinism import DeterminismRule
+from scripts.fedlint.rules.kernels import KernelTwinRule
+from scripts.fedlint.rules.locks import (
+    HatchPolicyRule,
+    LockDisciplineRule,
+    LockOrderRule,
+)
+from scripts.fedlint.rules.wire import WireDriftRule
+
+RULE_CLASSES = (
+    LockDisciplineRule,
+    LockOrderRule,
+    HatchPolicyRule,
+    KernelTwinRule,
+    WireDriftRule,
+    DeterminismRule,
+)
+
+REGISTRY = {cls.name: cls for cls in RULE_CLASSES}
+
+
+def rule_ids() -> dict[str, str]:
+    """Finding ID -> one-line description, across every registered rule."""
+    out: dict[str, str] = {}
+    for cls in RULE_CLASSES:
+        out.update(cls.id_docs)
+    return dict(sorted(out.items()))

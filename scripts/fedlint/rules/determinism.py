@@ -1,0 +1,169 @@
+"""Determinism lint (FED501–FED504).
+
+The cross-topology equivalence argument (docs/ARCHITECTURE.md) rests on
+the fold being a *deterministic* function of the submitted updates; the
+CI equivalence job re-runs under ``PYTHONHASHSEED=0`` to shake out
+ordering bugs, but only for the schedules it happens to execute.  This
+rule bans the ingredients statically, in ``src/repro/core/`` and the
+equivalence-adjacent tests:
+
+* FED501 — ``np.random.*`` outside the seeded-generator API
+  (``default_rng``/``Generator``/``SeedSequence``/...);
+* FED502 — the stdlib ``random`` module (its global state is unseeded
+  and shared across threads);
+* FED503 — wall-clock reads (``time.time``, ``datetime.now``...) —
+  timeouts use ``time.monotonic``, and nothing orders work by wall time;
+* FED504 — iteration over a ``set``-typed expression (hash order) —
+  iterate ``sorted(...)`` instead; dicts are fine (insertion order).
+
+Deliberate exceptions carry ``# fedlint: nondet-ok(reason)``.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from scripts.fedlint.core import Finding, Rule, SourceFile
+
+CORE_PREFIX = "src/repro/core/"
+
+#: tests that pin cross-runtime equivalence and wire determinism
+ADJACENT_TESTS = frozenset({
+    "tests/test_store_equivalence.py",
+    "tests/test_process_store.py",
+    "tests/test_tcp_transport.py",
+    "tests/test_wire_protocol.py",
+    "tests/test_batched_aggregation.py",
+})
+
+#: np.random members that are explicitly-seeded constructors / types
+SEEDED_NP = frozenset({
+    "default_rng", "Generator", "RandomState", "SeedSequence",
+    "BitGenerator", "PCG64", "PCG64DXSM", "Philox", "MT19937", "SFC64",
+})
+
+WALL_CLOCK = {
+    ("time", "time"), ("time", "time_ns"),
+    ("datetime", "now"), ("datetime", "utcnow"), ("datetime", "today"),
+    ("date", "today"),
+}
+
+HATCH = "nondet"
+
+
+class DeterminismRule(Rule):
+    name = "determinism"
+    id_docs = {
+        "FED501": "unseeded numpy RNG in deterministic-core code",
+        "FED502": "stdlib `random` module in deterministic-core code",
+        "FED503": "wall-clock read in deterministic-core code",
+        "FED504": "iteration over a set (hash order) in "
+                  "deterministic-core code",
+    }
+
+    def applies(self, rel: str) -> bool:
+        return rel.startswith(CORE_PREFIX) or rel in ADJACENT_TESTS
+
+    def check(self, src: SourceFile) -> list[Finding]:
+        out: list[Finding] = []
+        set_attrs = self._set_attrs(src.tree)
+
+        def flag(line: int, rule_id: str, msg: str) -> None:
+            if not src.hatched(line, HATCH):
+                out.append(Finding(src.rel, line, rule_id, msg))
+
+        for node in ast.walk(src.tree):
+            # FED501: np.random.<unseeded>
+            if (isinstance(node, ast.Attribute)
+                    and isinstance(node.value, ast.Attribute)
+                    and node.value.attr == "random"
+                    and isinstance(node.value.value, ast.Name)
+                    and node.value.value.id in ("np", "numpy")
+                    and node.attr not in SEEDED_NP):
+                flag(node.lineno, "FED501",
+                     f"`np.random.{node.attr}` draws from global unseeded "
+                     f"state; thread a seeded `np.random.default_rng` "
+                     f"through instead")
+            # FED502: stdlib random
+            elif (isinstance(node, ast.Attribute)
+                    and isinstance(node.value, ast.Name)
+                    and node.value.id == "random"
+                    and node.attr not in ("Random", "SystemRandom")):
+                flag(node.lineno, "FED502",
+                     f"stdlib `random.{node.attr}` uses shared unseeded "
+                     f"global state; use a seeded "
+                     f"`np.random.default_rng`")
+            elif (isinstance(node, ast.ImportFrom)
+                    and node.module == "random"):
+                flag(node.lineno, "FED502",
+                     "importing from stdlib `random`; use a seeded "
+                     "`np.random.default_rng`")
+            # FED503: wall clock
+            elif isinstance(node, ast.Call):
+                f = node.func
+                if (isinstance(f, ast.Attribute)
+                        and isinstance(f.value, ast.Name)
+                        and (f.value.id, f.attr) in WALL_CLOCK):
+                    flag(node.lineno, "FED503",
+                         f"wall-clock `{f.value.id}.{f.attr}()` in "
+                         f"deterministic core; use `time.monotonic` for "
+                         f"durations and never order work by clock time")
+            # FED504: set iteration
+            elif isinstance(node, (ast.For, ast.AsyncFor)):
+                self._check_iter(node.iter, set_attrs, flag)
+            elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                   ast.GeneratorExp)):
+                for gen in node.generators:
+                    self._check_iter(gen.iter, set_attrs, flag)
+        return sorted(set(out))
+
+    # ---------------------------------------------------------------- sets
+    @staticmethod
+    def _set_attrs(tree: ast.Module) -> set[str]:
+        """Attribute names assigned/annotated as sets anywhere in the
+        file (`self.held: set[int] = set()`, `sh.dirty = set()`...)."""
+        attrs: set[str] = set()
+        for node in ast.walk(tree):
+            targets: list[ast.expr] = []
+            value = None
+            ann = None
+            if isinstance(node, ast.Assign):
+                targets, value = node.targets, node.value
+            elif isinstance(node, ast.AnnAssign):
+                targets, value, ann = [node.target], node.value, \
+                    node.annotation
+            else:
+                continue
+            setish = (value is not None and _is_set_expr(value, attrs)) or (
+                ann is not None and "set" in ast.unparse(ann).lower())
+            if not setish:
+                continue
+            for t in targets:
+                if isinstance(t, ast.Attribute):
+                    attrs.add(t.attr)
+        return attrs
+
+    def _check_iter(self, it: ast.expr, set_attrs: set[str], flag) -> None:
+        if _is_set_expr(it, set_attrs):
+            flag(it.lineno, "FED504",
+                 f"iterating `{ast.unparse(it)}` walks a set in hash "
+                 f"order; wrap it in `sorted(...)`")
+
+
+def _is_set_expr(e: ast.expr, set_attrs: set[str]) -> bool:
+    if isinstance(e, (ast.Set, ast.SetComp)):
+        return True
+    if (isinstance(e, ast.Call) and isinstance(e.func, ast.Name)
+            and e.func.id in ("set", "frozenset")):
+        return True
+    if isinstance(e, ast.BinOp) and isinstance(
+            e.op, (ast.Sub, ast.BitOr, ast.BitAnd, ast.BitXor)):
+        return (_is_set_expr(e.left, set_attrs)
+                or _is_set_expr(e.right, set_attrs))
+    if isinstance(e, ast.Attribute) and e.attr in set_attrs:
+        return True
+    if (isinstance(e, ast.Call) and isinstance(e.func, ast.Attribute)
+            and e.func.attr in ("difference", "union", "intersection",
+                                "symmetric_difference")):
+        return True
+    return False

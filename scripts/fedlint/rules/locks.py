@@ -1,0 +1,560 @@
+"""Lock discipline (FED101/FED102), escape-hatch policy (FED103) and the
+static lock-order graph (FED201).
+
+The discipline rule infers, per file, the set of attributes ever *written*
+inside a ``with <recv>.<lock>:`` context (receiver-agnostic: ``self._lock``,
+``rec.pending_lock``, ``sh.journal_lock`` all count).  Any read or write of
+such an attribute outside every lock context is flagged, with three
+exemptions that encode the repo's existing conventions:
+
+* ``__init__`` bodies — construction happens-before publication;
+* functions whose docstring states "Caller holds ..." — the documented
+  convention for helpers invoked under a lock the caller owns;
+* lines carrying ``# fedlint: unlocked-ok(reason)`` — deliberate lock-free
+  reads (e.g. the copy-on-write registry snapshot).  The reason string is
+  mandatory; a bare hatch is FED103 and suppresses nothing.
+
+The order rule builds a directed graph over lock *labels* (``rec.lock``,
+``self._drain_lock``...).  Edges come from lexical ``with`` nesting,
+``.acquire()`` statements (held for the rest of the enclosing block), and
+call propagation through ``self.m(...)`` / bare ``f(...)`` calls resolved
+by name across all analyzed files (attribute calls on other receivers are
+deliberately not propagated — name-based resolution there would fabricate
+edges, e.g. ``self._sock.close()`` resolving to ``ModelStore.close``).
+A cycle means two code paths can interleave into deadlock; ``threading.
+RLock`` attributes are exempt from self-edges, and propagated self-edges
+are only reported for ``self.``-scoped locks (a callee re-locking
+``rec.lock`` usually locks a *different* record).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+
+from scripts.fedlint.core import Context, Finding, Rule, SourceFile
+
+#: files the lock rules police in the real tree
+TARGETS = (
+    "src/repro/core/store.py",
+    "src/repro/core/server_proc.py",
+    "src/repro/core/transport.py",
+)
+
+CALLER_HOLDS_RE = re.compile(r"[Cc]allers?\s+(?:must\s+)?holds?\b")
+
+#: method names that mutate their receiver in place.  `discard` is
+#: deliberately absent: `Transport.discard()` (teardown) collides with
+#: `set.discard`, and an unlocked `x.attr.discard(...)` still flags as a
+#: read of `attr`.
+MUTATORS = frozenset({
+    "add", "append", "appendleft", "clear", "difference_update",
+    "extend", "extendleft", "insert", "intersection_update", "pop",
+    "popitem", "popleft", "remove", "setdefault", "update",
+})
+
+CALLER_HELD = "<caller>"
+
+
+def is_lock_name(name: str) -> bool:
+    return name.lower().endswith("lock")
+
+
+def _recv_name(expr: ast.expr) -> str:
+    if isinstance(expr, ast.Name):
+        # `store` is this repo's conventional name for a store passed into a
+        # module-level helper (`_sharded_agg_stats(store, ...)`); unify it
+        # with `self` so the same lock gets one graph node
+        return "self" if expr.id == "store" else expr.id
+    if isinstance(expr, ast.Attribute):
+        return f"{_recv_name(expr.value)}.{expr.attr}"
+    return "<expr>"
+
+
+def lock_label(expr: ast.expr) -> str | None:
+    """``rec.pending_lock`` for lock-ish with/acquire targets, else None."""
+    if isinstance(expr, ast.Attribute) and is_lock_name(expr.attr):
+        return f"{_recv_name(expr.value)}.{expr.attr}"
+    if isinstance(expr, ast.Name) and is_lock_name(expr.id):
+        return expr.id
+    return None
+
+
+@dataclasses.dataclass
+class _Func:
+    qual: str
+    name: str
+    is_init: bool
+    caller_holds: bool
+    acquires: set = dataclasses.field(default_factory=set)
+    # (callee name, frozenset(held labels), kind in {self, bare}, line)
+    calls: list = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass(frozen=True)
+class _Access:
+    attr: str
+    line: int
+    write: bool
+    locked: bool
+
+
+class FileLockAnalysis:
+    """Single-pass lock analysis of one source file."""
+
+    def __init__(self, src: SourceFile):
+        self.src = src
+        self.accesses: list[_Access] = []
+        self.guarded: dict[str, set[str]] = {}  # attr -> lock labels
+        self.funcs: list[_Func] = []
+        self.by_name: dict[str, list[_Func]] = {}
+        self.rlocks: set[str] = set()  # attr/var names bound to RLock()
+        self.edges: set[tuple[str, str, int]] = set()  # (outer, inner, line)
+        self._find_rlocks(src.tree)
+        self._walk_module(src.tree)
+
+    # ------------------------------------------------------------- walking
+    def _find_rlocks(self, tree: ast.AST) -> None:
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Assign):
+                continue
+            v = node.value
+            if not (isinstance(v, ast.Call) and (
+                    (isinstance(v.func, ast.Attribute)
+                     and v.func.attr == "RLock")
+                    or (isinstance(v.func, ast.Name)
+                        and v.func.id == "RLock"))):
+                continue
+            for t in node.targets:
+                if isinstance(t, ast.Attribute):
+                    self.rlocks.add(t.attr)
+                elif isinstance(t, ast.Name):
+                    self.rlocks.add(t.id)
+
+    def _walk_module(self, tree: ast.Module) -> None:
+        for stmt in tree.body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._func(stmt, cls=None, outer_held=[])
+            elif isinstance(stmt, ast.ClassDef):
+                for s in stmt.body:
+                    if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                        self._func(s, cls=stmt.name, outer_held=[])
+
+    def _func(self, fn, cls: str | None, outer_held: list[str],
+              outer_qual: str | None = None, outer_init: bool = False):
+        base = outer_qual or cls
+        qual = f"{base}.{fn.name}" if base else fn.name
+        doc = ast.get_docstring(fn) or ""
+        info = _Func(qual, fn.name,
+                     is_init=outer_init or fn.name == "__init__",
+                     caller_holds=bool(CALLER_HOLDS_RE.search(doc)))
+        self.funcs.append(info)
+        self.by_name.setdefault(fn.name, []).append(info)
+        held = list(outer_held)
+        if info.caller_holds:
+            held.append(CALLER_HELD)
+        self._stmts(fn.body, held, info)
+
+    def _stmts(self, body: list[ast.stmt], held: list[str],
+               info: _Func) -> None:
+        held = list(held)  # .acquire() extends it for the rest of the block
+        for stmt in body:
+            if isinstance(stmt, (ast.With, ast.AsyncWith)):
+                labels = []
+                for item in stmt.items:
+                    lbl = lock_label(item.context_expr)
+                    if lbl is not None:
+                        labels.append(lbl)
+                        self._acquire(lbl, held + labels[:-1], info,
+                                      stmt.lineno)
+                    else:
+                        self._expr(item.context_expr, held, info)
+                    if item.optional_vars is not None:
+                        self._expr(item.optional_vars, held, info)
+                self._stmts(stmt.body, held + labels, info)
+            elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._func(stmt, cls=None, outer_held=held,
+                           outer_qual=info.qual, outer_init=info.is_init)
+            elif isinstance(stmt, ast.ClassDef):
+                for s in stmt.body:
+                    if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                        self._func(s, cls=stmt.name, outer_held=held)
+            elif isinstance(stmt, ast.If):
+                self._expr(stmt.test, held, info)
+                self._stmts(stmt.body, held, info)
+                self._stmts(stmt.orelse, held, info)
+            elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+                self._expr(stmt.target, held, info)
+                self._expr(stmt.iter, held, info)
+                self._stmts(stmt.body, held, info)
+                self._stmts(stmt.orelse, held, info)
+            elif isinstance(stmt, ast.While):
+                self._expr(stmt.test, held, info)
+                self._stmts(stmt.body, held, info)
+                self._stmts(stmt.orelse, held, info)
+            elif isinstance(stmt, ast.Try):
+                self._stmts(stmt.body, held, info)
+                for h in stmt.handlers:
+                    if h.type is not None:
+                        self._expr(h.type, held, info)
+                    self._stmts(h.body, held, info)
+                self._stmts(stmt.orelse, held, info)
+                self._stmts(stmt.finalbody, held, info)
+            elif isinstance(stmt, ast.Match):
+                self._expr(stmt.subject, held, info)
+                for case in stmt.cases:
+                    if case.guard is not None:
+                        self._expr(case.guard, held, info)
+                    self._stmts(case.body, held, info)
+            elif isinstance(stmt, (ast.Import, ast.ImportFrom, ast.Global,
+                                   ast.Nonlocal, ast.Pass, ast.Break,
+                                   ast.Continue)):
+                continue
+            else:
+                # statement-level `<lock>.acquire()` holds for the rest of
+                # this block (the matching release is typically in a later
+                # `finally`)
+                lbl = self._acquire_stmt(stmt)
+                if lbl is not None:
+                    self._acquire(lbl, held, info, stmt.lineno)
+                    held.append(lbl)
+                    continue
+                for child in ast.iter_child_nodes(stmt):
+                    if isinstance(child, (ast.expr, ast.keyword)):
+                        self._expr(child, held, info)
+
+    @staticmethod
+    def _acquire_stmt(stmt: ast.stmt) -> str | None:
+        if (isinstance(stmt, ast.Expr) and isinstance(stmt.value, ast.Call)
+                and isinstance(stmt.value.func, ast.Attribute)
+                and stmt.value.func.attr == "acquire"):
+            return lock_label(stmt.value.func.value)
+        return None
+
+    # --------------------------------------------------------- expressions
+    def _expr(self, node, held: list[str], info: _Func,
+              write: bool = False) -> None:
+        if node is None or isinstance(node, (ast.Constant, ast.Name)):
+            return
+        if isinstance(node, ast.Attribute):
+            if not is_lock_name(node.attr):
+                w = write or isinstance(node.ctx, (ast.Store, ast.Del))
+                self._access(node.attr, node.lineno, w, held, info)
+            self._expr(node.value, held, info)
+        elif isinstance(node, ast.Subscript):
+            w = isinstance(node.ctx, (ast.Store, ast.Del))
+            self._expr(node.value, held, info, write=w)
+            self._expr(node.slice, held, info)
+        elif isinstance(node, ast.Call):
+            self._call(node, held, info)
+        else:
+            for child in ast.iter_child_nodes(node):
+                self._expr(child, held, info)
+
+    def _call(self, node: ast.Call, held: list[str], info: _Func) -> None:
+        f = node.func
+        if isinstance(f, ast.Attribute):
+            lbl = lock_label(f.value) if f.attr in ("acquire",
+                                                    "release") else None
+            if lbl is not None:
+                if f.attr == "acquire":
+                    self._acquire(lbl, held, info, node.lineno)
+                # the lock attribute itself is never a tracked access
+            else:
+                recv = f.value
+                if (f.attr in MUTATORS and isinstance(recv, ast.Attribute)
+                        and not is_lock_name(recv.attr)):
+                    self._access(recv.attr, recv.lineno, True, held, info)
+                kind = ("self" if isinstance(recv, ast.Name)
+                        and recv.id in ("self", "cls", "store") else "attr")
+                info.calls.append((f.attr, frozenset(held), kind,
+                                   node.lineno))
+                self._expr(recv, held, info)
+        elif isinstance(f, ast.Name):
+            info.calls.append((f.id, frozenset(held), "bare", node.lineno))
+        else:
+            self._expr(f, held, info)
+        for a in node.args:
+            self._expr(a, held, info)
+        for kw in node.keywords:
+            self._expr(kw.value, held, info)
+
+    # ---------------------------------------------------------- recording
+    def _access(self, attr: str, line: int, write: bool,
+                held: list[str], info: _Func) -> None:
+        if info.is_init or attr.startswith("__"):
+            return
+        locked = bool(held)
+        self.accesses.append(_Access(attr, line, write, locked))
+        if write and locked:
+            labels = self.guarded.setdefault(attr, set())
+            labels.update(h for h in held if h != CALLER_HELD)
+
+    def _acquire(self, lbl: str, held: list[str], info: _Func,
+                 line: int) -> None:
+        info.acquires.add(lbl)
+        for h in held:
+            if h == CALLER_HELD:
+                continue
+            # h == lbl stays in: a lexical re-acquire of the same label is a
+            # self-deadlock unless the lock is an RLock (filtered in graph())
+            self.edges.add((h, lbl, line))
+
+
+def analyze(src: SourceFile) -> FileLockAnalysis:
+    cached = getattr(src, "_fedlint_locks", None)
+    if cached is None:
+        cached = FileLockAnalysis(src)
+        src._fedlint_locks = cached
+    return cached
+
+
+# =========================================================================
+# FED101 / FED102 — lock discipline
+# =========================================================================
+
+
+class LockDisciplineRule(Rule):
+    name = "lock-discipline"
+    id_docs = {
+        "FED101": "read of a lock-guarded attribute outside any lock "
+                  "context",
+        "FED102": "write to a lock-guarded attribute outside any lock "
+                  "context",
+    }
+
+    def applies(self, rel: str) -> bool:
+        return rel in TARGETS
+
+    def check(self, src: SourceFile) -> list[Finding]:
+        an = analyze(src)
+        # collapse to one finding per (line, attr); a write wins over a read
+        flagged: dict[tuple[int, str], bool] = {}
+        for a in an.accesses:
+            if a.locked or a.attr not in an.guarded:
+                continue
+            key = (a.line, a.attr)
+            flagged[key] = flagged.get(key, False) or a.write
+        out = []
+        for (line, attr), write in sorted(flagged.items()):
+            # the parsed hatch tag is the part before "-ok"
+            if src.hatched(line, "unlocked"):
+                continue
+            locks = sorted(an.guarded[attr]) or ["a caller-held lock"]
+            verb = "write to" if write else "read of"
+            out.append(Finding(
+                src.rel, line, "FED102" if write else "FED101",
+                f"{verb} lock-guarded attribute `{attr}` outside any lock "
+                f"context (attribute is written under {', '.join(locks)}); "
+                f"take the lock or annotate "
+                f"`# fedlint: unlocked-ok(reason)`"))
+        return out
+
+
+# =========================================================================
+# FED103 — escape-hatch policy
+# =========================================================================
+
+
+class HatchPolicyRule(Rule):
+    name = "hatch-policy"
+    id_docs = {
+        "FED103": "fedlint escape hatch without a reason string",
+    }
+
+    def applies(self, rel: str) -> bool:
+        return True
+
+    def check(self, src: SourceFile) -> list[Finding]:
+        return [
+            Finding(src.rel, line, "FED103",
+                    f"escape hatch `fedlint: {tag}-ok` needs a reason: "
+                    f"write `# fedlint: {tag}-ok(<why this is safe>)`")
+            for line, tag in src.bad_hatches()
+        ]
+
+
+# =========================================================================
+# FED201 — lock-order graph
+# =========================================================================
+
+
+class LockOrderRule(Rule):
+    name = "lock-order"
+    id_docs = {
+        "FED201": "cycle in the static lock-acquisition graph (deadlock "
+                  "potential)",
+    }
+
+    def __init__(self):
+        self._analyses: list[FileLockAnalysis] = []
+
+    def applies(self, rel: str) -> bool:
+        return rel in TARGETS
+
+    def check(self, src: SourceFile) -> list[Finding]:
+        self._analyses.append(analyze(src))
+        return []
+
+    # ------------------------------------------------------------ graph
+    def graph(self):
+        """Merged edge map: (outer, inner) -> (site rel, line, via_call)."""
+        edges: dict[tuple[str, str], tuple[str, int, bool]] = {}
+        rlocks: set[str] = set()
+        by_name: dict[str, list[tuple[_Func, FileLockAnalysis]]] = {}
+        for an in self._analyses:
+            rlocks |= an.rlocks
+            for name, infos in an.by_name.items():
+                by_name.setdefault(name, []).extend(
+                    (i, an) for i in infos)
+            for outer, inner, line in an.edges:
+                edges.setdefault((outer, inner), (an.src.rel, line, False))
+
+        def is_rlock(label: str) -> bool:
+            return label.rsplit(".", 1)[-1] in rlocks
+
+        # transitive acquire summaries (monotone fixpoint over self/bare
+        # calls resolved by name across the analyzed files)
+        total: dict[int, set[str]] = {
+            id(i): set(i.acquires) for an in self._analyses
+            for i in an.funcs}
+        funcs = [i for an in self._analyses for i in an.funcs]
+        changed = True
+        while changed:
+            changed = False
+            for info in funcs:
+                mine = total[id(info)]
+                for name, _held, kind, _line in info.calls:
+                    if kind == "attr":
+                        continue
+                    for callee, _an in by_name.get(name, ()):
+                        extra = total[id(callee)] - mine
+                        if extra:
+                            mine |= extra
+                            changed = True
+        # propagated edges: held at callsite -> every lock the callee
+        # (transitively) acquires
+        for an in self._analyses:
+            for info in an.funcs:
+                for name, held, kind, line in info.calls:
+                    if kind == "attr" or not held:
+                        continue
+                    acq: set[str] = set()
+                    for callee, _an in by_name.get(name, ()):
+                        acq |= total[id(callee)]
+                    for h in held:
+                        if h == CALLER_HELD:
+                            continue
+                        for lbl in acq:
+                            if lbl == h and (
+                                    is_rlock(lbl)
+                                    or not h.startswith("self.")):
+                                # reentrant lock, or a same-named lock on a
+                                # (very likely) different object
+                                continue
+                            edges.setdefault((h, lbl),
+                                             (an.src.rel, line, True))
+        # lexical self-edges on an RLock are legal reentrancy
+        for (a, b) in [k for k in edges if k[0] == k[1]
+                       and is_rlock(k[0])]:
+            del edges[(a, b)]
+        return edges
+
+    def finalize(self, ctx: Context) -> list[Finding]:
+        if not self._analyses:
+            return []
+        edges = self.graph()
+        graph_out = getattr(ctx, "graph_out", None)
+        if graph_out is not None:
+            graph_out.write_text(render_dot(edges))
+        return cycle_findings(edges)
+
+
+def render_dot(edges) -> str:
+    lines = ["digraph lock_order {", '  rankdir="LR";']
+    for (a, b), (rel, lineno, via_call) in sorted(edges.items()):
+        style = ' style="dashed"' if via_call else ""
+        lines.append(
+            f'  "{a}" -> "{b}" [label="{rel.rsplit("/", 1)[-1]}:'
+            f'{lineno}"{style}];')
+    lines.append("}")
+    return "\n".join(lines) + "\n"
+
+
+def cycle_findings(edges) -> list[Finding]:
+    """Tarjan SCC over the lock graph; every non-trivial SCC (or self-loop)
+    is one FED201 finding."""
+    adj: dict[str, set[str]] = {}
+    nodes: set[str] = set()
+    for (a, b) in edges:
+        adj.setdefault(a, set()).add(b)
+        nodes.update((a, b))
+
+    index: dict[str, int] = {}
+    low: dict[str, int] = {}
+    on_stack: set[str] = set()
+    stack: list[str] = []
+    sccs: list[list[str]] = []
+    counter = [0]
+
+    def strongconnect(v: str) -> None:
+        # iterative Tarjan (the lock graph is tiny, but no recursion limits)
+        work = [(v, iter(sorted(adj.get(v, ()))))]
+        index[v] = low[v] = counter[0]
+        counter[0] += 1
+        stack.append(v)
+        on_stack.add(v)
+        while work:
+            node, it = work[-1]
+            advanced = False
+            for w in it:
+                if w not in index:
+                    index[w] = low[w] = counter[0]
+                    counter[0] += 1
+                    stack.append(w)
+                    on_stack.add(w)
+                    work.append((w, iter(sorted(adj.get(w, ())))))
+                    advanced = True
+                    break
+                if w in on_stack:
+                    low[node] = min(low[node], index[w])
+            if advanced:
+                continue
+            work.pop()
+            if work:
+                parent = work[-1][0]
+                low[parent] = min(low[parent], low[node])
+            if low[node] == index[node]:
+                scc = []
+                while True:
+                    w = stack.pop()
+                    on_stack.discard(w)
+                    scc.append(w)
+                    if w == node:
+                        break
+                sccs.append(scc)
+
+    for v in sorted(nodes):
+        if v not in index:
+            strongconnect(v)
+
+    out = []
+    for scc in sccs:
+        members = set(scc)
+        cyclic = len(scc) > 1 or (scc[0], scc[0]) in edges
+        if not cyclic:
+            continue
+        in_cycle = sorted(
+            (pair, site) for pair, site in edges.items()
+            if pair[0] in members and pair[1] in members)
+        sites = ", ".join(
+            f"{a}->{b} at {rel}:{line}"
+            for (a, b), (rel, line, _via) in in_cycle[:6])
+        _pair, (rel0, line0, _via0) = min(
+            in_cycle, key=lambda e: (e[1][1], e[1][0]))
+        out.append(Finding(
+            rel0, line0, "FED201",
+            f"lock-order cycle among {{{', '.join(sorted(members))}}} "
+            f"({sites}); acquire these locks in one global order"))
+    return out

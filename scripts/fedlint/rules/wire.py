@@ -1,0 +1,246 @@
+"""Wire-protocol drift (FED401/FED402/FED403).
+
+``docs/WIRE_PROTOCOL.md`` is the *normative* spec; the golden-bytes tests
+pin frames byte-for-byte at runtime.  This rule closes the remaining gap
+statically: the frame constants (`FRAME_MAGIC`, `KIND_*`, the header
+struct, the length bound), the protocol `WIRE_VERSION`, and the op
+catalog (every ``["op", ...]`` literal the implementation builds or
+dispatches on) are extracted from the sources and diffed against the
+tables in the doc.  Changing a constant or adding an op without updating
+the spec — or vice versa — fails lint before any conformance test runs.
+
+Extraction is deliberately syntactic:
+
+* constants come from module-level assignments in ``core/transport.py``
+  (with constant folding for ``1 << 31``-style expressions);
+* code ops come from list literals whose first element is a lowercase
+  string (``["drained", key, ...]``) plus ``op == "..."`` dispatch
+  comparisons, across the four protocol files;
+* doc ops come from every ``["op"`` occurrence in the spec; a table row
+  whose later cells also contain ``["`` marks the op as *replying*, which
+  must agree with ``server_proc.REPLY_OPS`` — modulo the documented
+  handshake (`seed`: constructor argument on non-TCP transports) and
+  TCP-only (`shutdown`: handled by the standalone server, not the worker)
+  exemptions.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+
+from scripts.fedlint.core import Context, Finding, Rule
+
+TRANSPORT = "src/repro/core/transport.py"
+SERVER_PROC = "src/repro/core/server_proc.py"
+DOC = "docs/WIRE_PROTOCOL.md"
+
+#: everywhere message lists are built or dispatched on
+OP_FILES = (
+    TRANSPORT,
+    SERVER_PROC,
+    "src/repro/core/store.py",
+    "src/repro/launch/shard_server.py",
+)
+
+OP_RE = re.compile(r"^[a-z][a-z_]{1,15}$")
+
+#: replying in the doc's tables but legitimately absent from REPLY_OPS
+HANDSHAKE_OPS = frozenset({"seed"})   # constructor arg off-TCP (§4.1)
+TCP_ONLY_OPS = frozenset({"shutdown"})  # standalone server only (§4.5)
+
+
+def _fold(node: ast.expr):
+    """Constant-fold the tiny expression grammar used for wire constants."""
+    if isinstance(node, ast.Constant):
+        return node.value
+    if isinstance(node, ast.BinOp):
+        left, right = _fold(node.left), _fold(node.right)
+        if left is None or right is None:
+            return None
+        ops = {ast.LShift: lambda a, b: a << b,
+               ast.Add: lambda a, b: a + b,
+               ast.Sub: lambda a, b: a - b,
+               ast.Mult: lambda a, b: a * b,
+               ast.BitOr: lambda a, b: a | b}
+        fn = ops.get(type(node.op))
+        return fn(left, right) if fn else None
+    return None
+
+
+def module_constants(tree: ast.Module) -> dict[str, tuple[object, int]]:
+    """name -> (folded value, line) for module-level assignments."""
+    out: dict[str, tuple[object, int]] = {}
+    for stmt in tree.body:
+        if not isinstance(stmt, ast.Assign):
+            continue
+        for t in stmt.targets:
+            if not isinstance(t, ast.Name):
+                continue
+            v = _fold(stmt.value)
+            if v is not None:
+                out[t.id] = (v, stmt.lineno)
+            elif (isinstance(stmt.value, ast.Call)
+                  and isinstance(stmt.value.func, ast.Attribute)
+                  and stmt.value.func.attr == "Struct"
+                  and stmt.value.args
+                  and isinstance(stmt.value.args[0], ast.Constant)):
+                out[t.id] = (stmt.value.args[0].value, stmt.lineno)
+    return out
+
+
+def code_ops(tree: ast.Module) -> dict[str, int]:
+    """op string -> first line, from message-list literals and dispatch."""
+    out: dict[str, int] = {}
+
+    def note(op: str, line: int) -> None:
+        if OP_RE.match(op):
+            out.setdefault(op, line)
+
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.List) and node.elts
+                and isinstance(node.elts[0], ast.Constant)
+                and isinstance(node.elts[0].value, str)):
+            note(node.elts[0].value, node.lineno)
+        elif isinstance(node, ast.Compare):
+            sides = [node.left, *node.comparators]
+            texts = [ast.unparse(s) for s in sides]
+            if not any("op" in t or "msg[0]" in t for t in texts):
+                continue
+            for s in sides:
+                if isinstance(s, ast.Constant) and isinstance(s.value, str):
+                    note(s.value, node.lineno)
+    return out
+
+
+def reply_ops(tree: ast.Module) -> tuple[set[str], int]:
+    for stmt in tree.body:
+        if (isinstance(stmt, ast.Assign)
+                and any(isinstance(t, ast.Name) and t.id == "REPLY_OPS"
+                        for t in stmt.targets)
+                and isinstance(stmt.value, ast.Call)
+                and stmt.value.args
+                and isinstance(stmt.value.args[0], (ast.Set, ast.List,
+                                                    ast.Tuple))):
+            vals = {e.value for e in stmt.value.args[0].elts
+                    if isinstance(e, ast.Constant)}
+            return vals, stmt.lineno
+    return set(), 1
+
+
+DOC_OP_RE = re.compile(r'\[\s*"([a-z_]+)"')
+
+
+def doc_tables(text: str):
+    """(all ops, replying ops) as documented in the spec's tables."""
+    all_ops: set[str] = set()
+    replying: set[str] = set()
+    for m in DOC_OP_RE.finditer(text):
+        all_ops.add(m.group(1))
+    for line in text.splitlines():
+        if not line.lstrip().startswith("|"):
+            continue
+        cells = line.split("|")[1:-1]
+        if len(cells) < 2:
+            continue
+        first = DOC_OP_RE.search(cells[0])
+        if first and any(DOC_OP_RE.search(c) for c in cells[1:]):
+            replying.add(first.group(1))
+    return all_ops, replying
+
+
+class WireDriftRule(Rule):
+    name = "wire-drift"
+    id_docs = {
+        "FED401": "frame constant (magic/kind/header/length bound) "
+                  "disagrees with docs/WIRE_PROTOCOL.md",
+        "FED402": "WIRE_VERSION disagrees with docs/WIRE_PROTOCOL.md",
+        "FED403": "message-op catalog drift between the implementation "
+                  "and docs/WIRE_PROTOCOL.md",
+    }
+
+    def finalize(self, ctx: Context) -> list[Finding]:
+        if not (ctx.exists(TRANSPORT) and ctx.exists(DOC)):
+            return []
+        if not ctx.covers("src"):
+            return []
+        out: list[Finding] = []
+        doc = ctx.read(DOC)
+        consts = module_constants(ctx.source(TRANSPORT).tree)
+
+        def const(name):
+            return consts.get(name, (None, 1))
+
+        # ---- frame constants (FED401) / version (FED402)
+        checks = []
+        m = re.search(r'`magic`\s*\|\s*ASCII\s*`"([^"]+)"`', doc)
+        checks.append(("FED401", "FRAME_MAGIC", "magic",
+                       m.group(1).encode() if m else None))
+        m = re.search(r'`version`\s*\|\s*`0x([0-9A-Fa-f]+)`', doc)
+        checks.append(("FED402", "WIRE_VERSION", "version",
+                       int(m.group(1), 16) if m else None))
+        m = re.search(
+            r'`kind`\s*\|\s*`0x([0-9A-Fa-f]+)`\s*command.*?'
+            r'`0x([0-9A-Fa-f]+)`\s*reply', doc)
+        checks.append(("FED401", "KIND_COMMAND", "kind (command)",
+                       int(m.group(1), 16) if m else None))
+        checks.append(("FED401", "KIND_REPLY", "kind (reply)",
+                       int(m.group(2), 16) if m else None))
+        m = re.search(r'`struct`\s*format:\s*`"([^"]+)"`', doc)
+        checks.append(("FED401", "_HEADER", "header struct format",
+                       m.group(1) if m else None))
+        m = re.search(r'`transport\.MAX_FRAME_BYTES`,\s*(\d+)\s*GiB', doc)
+        checks.append(("FED401", "MAX_FRAME_BYTES", "frame length bound",
+                       int(m.group(1)) << 30 if m else None))
+        for rule_id, const_name, label, doc_val in checks:
+            code_val, line = const(const_name)
+            if doc_val is None:
+                out.append(Finding(
+                    DOC, 1, rule_id,
+                    f"could not locate the normative {label} in the spec "
+                    f"tables (doc restructure? update fedlint's parser)"))
+            elif code_val is None:
+                out.append(Finding(
+                    TRANSPORT, 1, rule_id,
+                    f"`{const_name}` not found as a module-level constant"))
+            elif code_val != doc_val:
+                out.append(Finding(
+                    TRANSPORT, line, rule_id,
+                    f"`{const_name}` = {code_val!r} but {DOC} documents "
+                    f"{label} = {doc_val!r}; update whichever is wrong "
+                    f"(and the golden-bytes tests)"))
+
+        # ---- op catalog (FED403)
+        doc_ops, doc_replying = doc_tables(doc)
+        impl_ops: dict[str, tuple[str, int]] = {}
+        for rel in OP_FILES:
+            if not ctx.exists(rel):
+                continue
+            for op, line in code_ops(ctx.source(rel).tree).items():
+                impl_ops.setdefault(op, (rel, line))
+        for op in sorted(set(impl_ops) - doc_ops):
+            rel, line = impl_ops[op]
+            out.append(Finding(
+                rel, line, "FED403",
+                f"message op `{op}` is used by the implementation but "
+                f"missing from the catalog in {DOC}"))
+        for op in sorted(doc_ops - set(impl_ops)):
+            out.append(Finding(
+                DOC, 1, "FED403",
+                f"message op `{op}` is documented in {DOC} but never "
+                f"appears in the implementation"))
+
+        declared, line = reply_ops(ctx.source(SERVER_PROC).tree) \
+            if ctx.exists(SERVER_PROC) else (set(), 1)
+        expected = (doc_replying - HANDSHAKE_OPS) - TCP_ONLY_OPS
+        for op in sorted(declared - expected):
+            out.append(Finding(
+                SERVER_PROC, line, "FED403",
+                f"`REPLY_OPS` marks `{op}` as replying but the spec's "
+                f"tables do not document a reply for it"))
+        for op in sorted(expected - declared):
+            out.append(Finding(
+                SERVER_PROC, line, "FED403",
+                f"the spec documents a reply for `{op}` but it is missing "
+                f"from `REPLY_OPS`"))
+        return out

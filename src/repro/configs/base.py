@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Optional, Sequence
+from collections.abc import Sequence
 
 # ---------------------------------------------------------------------------
 # Sub-configs
@@ -117,11 +117,11 @@ class ModelConfig:
     mlp_activation: str = "silu"      # silu (SwiGLU) | gelu (GeGLU)
 
     # --- family-specific ----------------------------------------------------
-    moe: Optional[MoEConfig] = None
-    mla: Optional[MLAConfig] = None
-    ssm: Optional[SSMConfig] = None
-    rglru: Optional[RGLRUConfig] = None
-    frontend: Optional[FrontendStub] = None
+    moe: MoEConfig | None = None
+    mla: MLAConfig | None = None
+    ssm: SSMConfig | None = None
+    rglru: RGLRUConfig | None = None
+    frontend: FrontendStub | None = None
 
     # --- structure ----------------------------------------------------------
     encoder_only: bool = False        # HuBERT: bidirectional, no causal mask/decode

@@ -4,7 +4,7 @@ history + 24 h weather forecast -> 96 quarter-hour power predictions.
 """
 
 from dataclasses import dataclass
-from typing import Sequence
+from collections.abc import Sequence
 
 FEATURES: Sequence[str] = (
     "solar_rad", "ghi", "snow_depth", "precip", "clouds",

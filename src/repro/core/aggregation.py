@@ -214,7 +214,7 @@ def coalesced_aggregate(base_params, base_meta: ModelMeta, updates,
     updates = list(updates)      # consumed twice; accept one-shot iterables
     plan = plan_coalesce(base_meta, [(m, d) for _, m, d in updates], cfg)
     all_params = [base_params] + [p for p, _, _ in updates]
-    sets = [p for p, w in zip(all_params, plan.weights) if w != 0.0]
+    sets = [p for p, w in zip(all_params, plan.weights, strict=True) if w != 0.0]
     fracs = [w for w in plan.weights if w != 0.0]
     if len(sets) == 1:
         return CoalesceResult(sets[0], plan.meta, len(updates), 1,
@@ -291,7 +291,7 @@ def two_level_coalesced_aggregate(base_params, base_meta: ModelMeta,
 
     # gather each shard's surviving (params, weight) members in fold order
     per_shard: dict[int, list] = {}
-    for (_, k, p, _, _), w in zip(flat, plan.weights[1:]):
+    for (_, k, p, _, _), w in zip(flat, plan.weights[1:], strict=True):
         if w != 0.0:
             per_shard.setdefault(k, []).append((p, w))
 

@@ -16,7 +16,6 @@ when clusters are co-scheduled on one TPU fleet.
 
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -31,8 +30,8 @@ class ClusterParallel:
     """K cluster models trained in lock-step, one per pod slice."""
 
     def __init__(self, model, cfg: ModelConfig, optimizer: Optimizer,
-                 n_clusters: int, *, rules: Optional[Rules] = None,
-                 grad_clip: float = 1.0, n_microbatches: Optional[int] = None):
+                 n_clusters: int, *, rules: Rules | None = None,
+                 grad_clip: float = 1.0, n_microbatches: int | None = None):
         self.model = model
         self.cfg = cfg
         self.optimizer = optimizer

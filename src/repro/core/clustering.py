@@ -11,7 +11,7 @@ metrics.  Noise points get label -1 and fall back to the global model only.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Optional
+from collections.abc import Callable
 
 import numpy as np
 
@@ -57,8 +57,8 @@ class DBSCAN:
     min_samples: int = 3
     metric: str = "euclidean"
 
-    labels_: Optional[np.ndarray] = None
-    X_: Optional[np.ndarray] = None
+    labels_: np.ndarray | None = None
+    X_: np.ndarray | None = None
     n_clusters_: int = 0
 
     def _dist(self, a, b):

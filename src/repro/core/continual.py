@@ -13,7 +13,6 @@ the penalty+gradient computation.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +21,7 @@ import jax.numpy as jnp
 @dataclass(frozen=True)
 class EWCState:
     anchor: object                    # theta* — params after previous task
-    fisher: Optional[object] = None   # diagonal Fisher; None -> L2-SP (F=1)
+    fisher: object | None = None   # diagonal Fisher; None -> L2-SP (F=1)
     lam: float = 1.0
 
 

@@ -11,7 +11,6 @@ a runtime into one object — the library's main entry point.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
 
 import numpy as np
 
@@ -85,7 +84,7 @@ class FedCCLConfig:
     # the process/TCP topologies)
     drain_timeout_s: float = 30.0
     # ---- privacy subsystem (repro.privacy) --------------------------------
-    dp_clip: Optional[float] = None  # L2 clip of update deltas; None = DP off
+    dp_clip: float | None = None  # L2 clip of update deltas; None = DP off
     dp_noise_multiplier: float = 1.0 # noise std = multiplier * dp_clip
     secure_agg: bool = False         # pairwise-mask secure aggregation
     target_delta: float = 1e-5       # delta for (epsilon, delta) reporting

@@ -11,7 +11,6 @@ protocol participant, refining the cluster models it belongs to.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
 
 import numpy as np
 
@@ -28,7 +27,7 @@ class ClusterSpace:
     name: str
     clusterer: IncrementalDBSCAN
 
-    def key(self, label: int) -> Optional[str]:
+    def key(self, label: int) -> str | None:
         return None if label == NOISE else f"{self.name}:{label}"
 
 

@@ -16,7 +16,7 @@ the assigned LLM architectures.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from collections.abc import Callable
 
 import numpy as np
 
@@ -63,11 +63,11 @@ class Client:
     rng: np.random.Generator = field(default_factory=lambda: np.random.default_rng(0))
     # DP update privatization hook (repro.privacy.dp.DPPrivatizer); when set,
     # every shared-tier update delta is clipped + noised before submission
-    privatizer: Optional[object] = None
+    privatizer: object | None = None
 
     local_params: object = None
     local_meta: ModelMeta = field(default_factory=ModelMeta)
-    _local_anchor: Optional[EWCState] = None
+    _local_anchor: EWCState | None = None
 
     # ------------------------------------------------------------ local tier
     def train_local(self):

@@ -39,7 +39,6 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Optional
 
 from repro.core.protocol import Client
 from repro.core.store import ModelStore
@@ -49,7 +48,7 @@ class AsyncThreadedRuntime:
     def __init__(self, clients: list[Client], store: ModelStore,
                  rounds_per_client: int = 2, stagger: float = 0.0,
                  drain_poll: float = 0.001,
-                 join_timeout: Optional[float] = None):
+                 join_timeout: float | None = None):
         self.clients = clients
         self.store = store
         self.rounds = rounds_per_client

@@ -427,6 +427,13 @@ class ProcessWorkerHandle(Transport):
     def __init__(self, shard_idx: int, seed_blob: bytes):
         self.idx = shard_idx
         self.spawns = 0
+        # tx_bytes has two writer populations — fire-and-forget put()
+        # callers (outbox flushers under the shard's journal lock) and
+        # rpc() callers (under the shard's rpc lock) — so the increment
+        # needs its own lock, like TcpWorkerHandle._send_lock (regression:
+        # test_handle_tx_bytes_exact_under_concurrent_puts).  rx_bytes has
+        # a single writer population (rpc-lock holders).
+        self._send_lock = threading.Lock()
         self.tx_bytes = 0
         self.rx_bytes = 0
         self._ctx = mp.get_context("spawn")   # fork-after-jax is unsafe
@@ -443,13 +450,15 @@ class ProcessWorkerHandle(Transport):
         self.spawns += 1
 
     def put(self, raw: bytes):
-        self.tx_bytes += len(raw)
+        with self._send_lock:
+            self.tx_bytes += len(raw)
         self.cmd_q.put(raw)
 
     def rpc(self, raw: bytes, timeout: float) -> bytes:
         """Send one replying command and await its reply.  Caller holds
         the shard's rpc lock."""
-        self.tx_bytes += len(raw)
+        with self._send_lock:
+            self.tx_bytes += len(raw)
         self.cmd_q.put(raw)
         return self.rpc_recv(timeout)
 
@@ -528,6 +537,10 @@ class InprocessWorkerHandle(Transport):
     def __init__(self, shard_idx: int, seed_blob: bytes):
         self.idx = shard_idx
         self.spawns = 0
+        # same two-writer-population story as ProcessWorkerHandle: put()
+        # (journal-lock holders) and rpc() (rpc-lock holders) both bump
+        # tx_bytes, so the counter gets its own lock
+        self._send_lock = threading.Lock()
         self.tx_bytes = 0
         self.rx_bytes = 0
         # a real worker's command queue serializes every message; the
@@ -544,7 +557,8 @@ class InprocessWorkerHandle(Transport):
     def put(self, raw: bytes):
         if self._dead:
             return                      # a dead worker's queue eats messages
-        self.tx_bytes += len(raw)
+        with self._send_lock:
+            self.tx_bytes += len(raw)
         msg = unpackb(raw)
         try:
             with self._dispatch_lock:
@@ -561,10 +575,13 @@ class InprocessWorkerHandle(Transport):
             "degenerates to sequential rpc() calls")
 
     def rpc(self, raw: bytes, timeout: float) -> bytes:
+        """Dispatch one replying command inline.  Caller holds the shard's
+        rpc lock (which is what keeps ``rx_bytes`` single-writer)."""
         if self._dead:
             raise WorkerUnavailable(
                 f"shard worker {self.idx} died (in-process emulation)")
-        self.tx_bytes += len(raw)
+        with self._send_lock:
+            self.tx_bytes += len(raw)
         msg = unpackb(raw)
         try:
             with self._dispatch_lock:

@@ -54,7 +54,6 @@ import threading
 import zlib
 from collections import deque
 from dataclasses import dataclass
-from typing import Optional
 
 from repro.core import server_proc, transport
 from repro.core.aggregation import (
@@ -237,21 +236,25 @@ class _RegistryBase:
 
     # ------------------------------------------------------------------ keys
     @staticmethod
-    def _key(level: str, cluster_key: Optional[str]) -> str:
+    def _key(level: str, cluster_key: str | None) -> str:
         if level == "global":
             return GLOBAL_KEY
         assert cluster_key is not None, "cluster level requires a key"
         return str(cluster_key)
 
-    def model_key(self, level: str, cluster_key: Optional[str] = None) -> str:
+    def model_key(self, level: str, cluster_key: str | None = None) -> str:
         """Public (level, cluster_key) -> storage-key mapping — the string
         clients and the masker must agree on when deriving round masks."""
         return self._key(level, cluster_key)
 
     def _record(self, key: str) -> ModelRecord:
         """Lock-free registry read off the current copy-on-write snapshot."""
+        # _records is swapped wholesale under _registry_lock and never
+        # mutated in place, so a bare read observes one atomic snapshot.
+        # fedlint: unlocked-ok(copy-on-write registry snapshot read)
         rec = self._records.get(key)
         if rec is None:
+            # fedlint: unlocked-ok(copy-on-write registry snapshot read)
             known = sorted(k for k in self._records if k != GLOBAL_KEY)
             raise KeyError(
                 f"no model registered for cluster key {key!r} "
@@ -271,19 +274,20 @@ class _RegistryBase:
                 self._records = updated            # atomic reference swap
 
     def keys(self):
+        # fedlint: unlocked-ok(copy-on-write registry snapshot read)
         return [k for k in self._records if k != GLOBAL_KEY]
 
     # -------------------------------------------------------------- protocol
-    def request_model(self, level: str, cluster_key: Optional[str] = None):
+    def request_model(self, level: str, cluster_key: str | None = None):
         """RequestModel — snapshot read (no model lock needed for consistency;
         the paper's clients read whatever the latest aggregated state is)."""
         return self._record(self._key(level, cluster_key)).snapshot()
 
     # ------------------------------------------------------------- inspection
-    def meta(self, level: str, cluster_key: Optional[str] = None) -> ModelMeta:
+    def meta(self, level: str, cluster_key: str | None = None) -> ModelMeta:
         return self._record(self._key(level, cluster_key)).meta
 
-    def params(self, level: str, cluster_key: Optional[str] = None):
+    def params(self, level: str, cluster_key: str | None = None):
         return self._record(self._key(level, cluster_key)).params
 
 
@@ -397,7 +401,7 @@ class _StoreBase(_RegistryBase):
                 self.n_secure_rounds += 1
                 self.n_secure_recoveries += recovered
 
-    def _count_drain_timeout(self, shard: Optional[int] = None):
+    def _count_drain_timeout(self, shard: int | None = None):
         """Record a bounded-drain deadline miss.  ``shard`` attributes the
         expiry to one worker where the topology has them (the process/TCP
         store overrides this to keep per-shard counts — see
@@ -406,30 +410,38 @@ class _StoreBase(_RegistryBase):
             self.n_drain_timeouts += 1
 
     # ---------------------------------- aggregate counters (drain + submit)
+    # Each property takes `_drain_lock` for the drain half and reads every
+    # submit sink through its locked `snapshot()` tuple
+    # (updates, fast_path, lock_waits, enqueued, max_depth) — a bare
+    # `s.n_updates` would read the counter mid-increment from another
+    # thread (fedlint FED101; regression:
+    # test_counter_properties_consistent_under_concurrency).
     @property
     def n_updates(self) -> int:
-        return self._n_drain_updates + sum(s.n_updates
-                                           for s in self._all_submit_stats())
+        with self._drain_lock:
+            drain = self._n_drain_updates
+        return drain + sum(s.snapshot()[0] for s in self._all_submit_stats())
 
     @property
     def n_fast_path(self) -> int:
-        return self._n_drain_fast_path + sum(s.n_fast_path
-                                             for s in self._all_submit_stats())
+        with self._drain_lock:
+            drain = self._n_drain_fast_path
+        return drain + sum(s.snapshot()[1] for s in self._all_submit_stats())
 
     @property
     def n_lock_waits(self) -> int:
-        return sum(s.n_lock_waits for s in self._all_submit_stats())
+        return sum(s.snapshot()[2] for s in self._all_submit_stats())
 
     @property
     def n_enqueued(self) -> int:
-        return sum(s.n_enqueued for s in self._all_submit_stats())
+        return sum(s.snapshot()[3] for s in self._all_submit_stats())
 
     @property
     def max_queue_depth(self) -> int:
-        return max(s.max_queue_depth for s in self._all_submit_stats())
+        return max(s.snapshot()[4] for s in self._all_submit_stats())
 
     # -------------------------------------------------------------- protocol
-    def handle_model_update(self, level: str, cluster_key: Optional[str],
+    def handle_model_update(self, level: str, cluster_key: str | None,
                             updated_params, updated_meta: ModelMeta,
                             delta: UpdateDelta, *, blocking: bool = True) -> bool:
         """HandleModelUpdate (Algorithm 1 lines 19-25): lock the one model
@@ -471,7 +483,7 @@ class _StoreBase(_RegistryBase):
         st.observe_depth(depth)
         return depth
 
-    def enqueue_update(self, level: str, cluster_key: Optional[str],
+    def enqueue_update(self, level: str, cluster_key: str | None,
                        updated_params, updated_meta: ModelMeta,
                        delta: UpdateDelta) -> int:
         """Queue an update for a later coalesced drain; returns queue depth."""
@@ -479,12 +491,12 @@ class _StoreBase(_RegistryBase):
             self._key(level, cluster_key),
             PendingUpdate(updated_params, updated_meta, delta))
 
-    def pending_depth(self, level: str, cluster_key: Optional[str] = None) -> int:
+    def pending_depth(self, level: str, cluster_key: str | None = None) -> int:
         rec = self._record(self._key(level, cluster_key))
         with rec.pending_lock:
             return len(rec.pending)
 
-    def effective_round(self, level: str, cluster_key: Optional[str] = None) -> int:
+    def effective_round(self, level: str, cluster_key: str | None = None) -> int:
         """Server round *including* queued-but-undrained updates (each
         pending update advances the round by ``delta.rounds`` once drained).
         This is the round an update enqueued right now would be measured
@@ -512,11 +524,14 @@ class _StoreBase(_RegistryBase):
                 res = _drain_record_once(rec, self.max_coalesce, self.agg_cfg)
             if res is None:
                 return drained
+            # `res` is a drain-local CoalesceResult whose field name
+            # collides with the lock-guarded _SubmitStats.n_fast_path.
+            # fedlint: unlocked-ok(local CoalesceResult, not shared state)
             self._count_drain(res.n_folded, res.n_fast_path)
             drained += res.n_folded
 
     # ---------------------------------------------------- secure aggregation
-    def submit_secure(self, level: str, cluster_key: Optional[str],
+    def submit_secure(self, level: str, cluster_key: str | None,
                       client_id: str, round_id: int, masked_delta,
                       delta: UpdateDelta) -> int:
         """Queue one masked update for its round's secure drain.  The server
@@ -534,7 +549,7 @@ class _StoreBase(_RegistryBase):
         st.observe_depth(depth)
         return depth
 
-    def drain_secure(self, level: str, cluster_key: Optional[str],
+    def drain_secure(self, level: str, cluster_key: str | None,
                      round_id: int, expected_ids) -> int:
         """Fold one secure round into a single fused N-way sum.
 
@@ -555,10 +570,16 @@ class _StoreBase(_RegistryBase):
 
     # ------------------------------------------------------------- inspection
     def coalesce_factor(self) -> float:
-        """Mean queued-updates-per-drain — 1.0 means no batching benefit."""
-        if not self.n_drain_batches:
-            return 0.0
-        return self.n_drained / self.n_drain_batches
+        """Mean queued-updates-per-drain — 1.0 means no batching benefit.
+
+        Takes ``_drain_lock`` so the ratio is computed from one consistent
+        (drained, batches) pair; `agg_stats()` holds the (non-reentrant)
+        lock already and computes the same ratio inline from its snapshot
+        (regression: test_coalesce_factor_locked_and_consistent)."""
+        with self._drain_lock:
+            if not self.n_drain_batches:
+                return 0.0
+            return self.n_drained / self.n_drain_batches
 
     def sync_mirrors(self) -> int:
         """Mirror-staleness barrier.  In-thread stores hold the models
@@ -587,7 +608,7 @@ class ModelStore(_StoreBase):
     def _all_submit_stats(self) -> list:
         return [self._submit]
 
-    def drain(self, level: str, cluster_key: Optional[str] = None) -> int:
+    def drain(self, level: str, cluster_key: str | None = None) -> int:
         """Fold all queued updates for one model, `max_coalesce` at a time,
         into single N-way aggregations.  Returns number of updates folded."""
         return self._drain_record(self._key(level, cluster_key))
@@ -614,7 +635,10 @@ class ModelStore(_StoreBase):
             drain_updates = self._n_drain_updates
             drain_fast = self._n_drain_fast_path
             drain_batches = self.n_drain_batches
-            coalesce = self.coalesce_factor()
+            # inline (not coalesce_factor(): it takes this non-reentrant
+            # lock) from the same snapshot, so the ratio is consistent
+            coalesce = (self.n_drained / drain_batches) if drain_batches \
+                else 0.0
             secure_rounds = self.n_secure_rounds
             secure_recoveries = self.n_secure_recoveries
             drain_timeouts = self.n_drain_timeouts
@@ -711,11 +735,12 @@ class ShardedModelStore(_StoreBase):
 
     def shard_cluster_keys(self, shard: int):
         """Cluster keys owned by one shard (that shard's drain beat)."""
+        # fedlint: unlocked-ok(copy-on-write registry snapshot read)
         return [k for k in self._records
                 if k != GLOBAL_KEY and self.shard_of(k) == shard]
 
     # ------------------------------------------------------- batched updates
-    def enqueue_update(self, level: str, cluster_key: Optional[str],
+    def enqueue_update(self, level: str, cluster_key: str | None,
                        updated_params, updated_meta: ModelMeta,
                        delta: UpdateDelta) -> int:
         upd = PendingUpdate(updated_params, updated_meta, delta)
@@ -733,7 +758,7 @@ class ShardedModelStore(_StoreBase):
         sh.stats.observe_depth(depth)
         return depth
 
-    def pending_depth(self, level: str, cluster_key: Optional[str] = None) -> int:
+    def pending_depth(self, level: str, cluster_key: str | None = None) -> int:
         if self._key(level, cluster_key) == GLOBAL_KEY:
             total = 0
             for sh in self._shards:
@@ -742,7 +767,7 @@ class ShardedModelStore(_StoreBase):
             return total
         return super().pending_depth(level, cluster_key)
 
-    def effective_round(self, level: str, cluster_key: Optional[str] = None) -> int:
+    def effective_round(self, level: str, cluster_key: str | None = None) -> int:
         """Round including queued *and* in-flight (popped, not yet merged)
         updates — same staleness reference as ``ModelStore.effective_round``.
         For the global tier the shard slices are summed under the record's
@@ -761,7 +786,7 @@ class ShardedModelStore(_StoreBase):
             return rec.meta.round + queued + rec.inflight_rounds
 
     # ------------------------------------------------------------ drains
-    def drain(self, level: str, cluster_key: Optional[str] = None) -> int:
+    def drain(self, level: str, cluster_key: str | None = None) -> int:
         key = self._key(level, cluster_key)
         if key == GLOBAL_KEY:
             return self.drain_global()
@@ -798,9 +823,9 @@ class ShardedModelStore(_StoreBase):
                 # restore the popped slices (seq tags intact, FIFO per
                 # shard) and retire the in-flight rounds before surfacing
                 with rec.pending_lock:
-                    for sh, batch, sq in zip(self._shards, batches, seqs):
+                    for sh, batch, sq in zip(self._shards, batches, seqs, strict=True):
                         items = [(s, PendingUpdate(*u))
-                                 for s, u in zip(sq, batch)]
+                                 for s, u in zip(sq, batch, strict=True)]
                         with sh.lock:
                             sh.global_pending.extendleft(reversed(items))
                     rec.inflight_rounds -= total_rounds
@@ -836,7 +861,7 @@ class ShardedModelStore(_StoreBase):
         return _sharded_agg_stats(self, self._shards)
 
 
-def _sharded_agg_stats(store, shards, extra: Optional[dict] = None) -> dict:
+def _sharded_agg_stats(store, shards, extra: dict | None = None) -> dict:
     """Shared agg_stats assembly for the sharded store flavors (thread
     shards, process workers and TCP workers expose the same counter
     layout; the process/TCP store passes its flavor extras — ``transport``,
@@ -855,9 +880,13 @@ def _sharded_agg_stats(store, shards, extra: Optional[dict] = None) -> dict:
     with store._drain_lock:
         drain_updates = store._n_drain_updates
         drain_fast = store._n_drain_fast_path
+        drain_batches = store.n_drain_batches
         drain = {
-            "drain_batches": store.n_drain_batches,
-            "coalesce_factor": store.coalesce_factor(),
+            "drain_batches": drain_batches,
+            # inline (not coalesce_factor(): it takes this non-reentrant
+            # lock) from the same snapshot, so the ratio is consistent
+            "coalesce_factor": (store.n_drained / drain_batches)
+            if drain_batches else 0.0,
             "global_drains": store.n_global_drains,
             "global_partials": store.n_global_partials,
             "secure_rounds": store.n_secure_rounds,
@@ -1064,13 +1093,14 @@ class ProcessShardedModelStore(_StoreBase):
     def _seed_blob(self, shard_idx: int) -> bytes:
         recs = []
         for key in self.shard_cluster_keys(shard_idx):
+            # fedlint: unlocked-ok(copy-on-write registry snapshot read)
             params, meta = self._records[key].snapshot()
             recs.append((key, params, meta))
         return server_proc.make_seed_blob(recs, self.max_coalesce,
                                           self.agg_cfg, self.masker,
                                           self.mirror_sync_every)
 
-    def close(self, timeout: Optional[float] = None):
+    def close(self, timeout: float | None = None):
         """Stop every worker with a bounded join (terminate/kill fallback;
         TCP sessions end and the remote servers return to accepting).
         Syncs dirty mirrors first, so post-close reads see the freshest
@@ -1123,6 +1153,7 @@ class ProcessShardedModelStore(_StoreBase):
         return stable_shard(key, self.n_shards)
 
     def shard_cluster_keys(self, shard: int):
+        # fedlint: unlocked-ok(copy-on-write registry snapshot read)
         return [k for k in self._records
                 if k != GLOBAL_KEY and self.shard_of(k) == shard]
 
@@ -1145,7 +1176,7 @@ class ProcessShardedModelStore(_StoreBase):
             self._outbox_put(sh, raw)
 
     # ------------------------------------------------------- submit paths
-    def handle_model_update(self, level: str, cluster_key: Optional[str],
+    def handle_model_update(self, level: str, cluster_key: str | None,
                             updated_params, updated_meta: ModelMeta,
                             delta: UpdateDelta, *, blocking: bool = True) -> bool:
         # every update crosses a process boundary, so the store is
@@ -1158,7 +1189,7 @@ class ProcessShardedModelStore(_StoreBase):
             self.drain(level, cluster_key)
         return True
 
-    def enqueue_update(self, level: str, cluster_key: Optional[str],
+    def enqueue_update(self, level: str, cluster_key: str | None,
                        updated_params, updated_meta: ModelMeta,
                        delta: UpdateDelta) -> int:
         key = self._key(level, cluster_key)
@@ -1188,7 +1219,7 @@ class ProcessShardedModelStore(_StoreBase):
         sh.stats.observe_depth(depth)
         return depth
 
-    def pending_depth(self, level: str, cluster_key: Optional[str] = None) -> int:
+    def pending_depth(self, level: str, cluster_key: str | None = None) -> int:
         key = self._key(level, cluster_key)
         if key == GLOBAL_KEY:
             total = 0
@@ -1200,7 +1231,7 @@ class ProcessShardedModelStore(_StoreBase):
         with sh.journal_lock:
             return sh.pending_counts.get(key, 0)
 
-    def effective_round(self, level: str, cluster_key: Optional[str] = None) -> int:
+    def effective_round(self, level: str, cluster_key: str | None = None) -> int:
         """Same staleness reference as the in-thread stores.  The journal
         holds every queued *and* in-flight (popped by a worker fold, not yet
         acked) update, and acks land in the same ``journal_lock`` section
@@ -1287,7 +1318,7 @@ class ProcessShardedModelStore(_StoreBase):
             self._flush_outbox(sh)
 
     def _exchange(self, sh: _ProcShard, raw: bytes,
-                  timeout: Optional[float] = None):
+                  timeout: float | None = None):
         """Send one replying command and decode its reply, with crash and
         timeout handling: on ``WorkerUnavailable`` the worker is respawned
         (journal replay) and the command retried once.  Caller holds
@@ -1338,16 +1369,16 @@ class ProcessShardedModelStore(_StoreBase):
             # the emulation dispatches inline — scatter degenerates to a
             # deterministic sequential sweep over the single-shard RPC path
             return [self._rpc(sh, raw, lambda reply, sh=sh: on_reply(sh, reply))
-                    for sh, raw in zip(self._proc_shards, raws)]
+                    for sh, raw in zip(self._proc_shards, raws, strict=True)]
         for sh in self._proc_shards:
             sh.rpc_lock.acquire()
         try:
-            for sh, raw in zip(self._proc_shards, raws):
+            for sh, raw in zip(self._proc_shards, raws, strict=True):
                 with sh.journal_lock:
                     self._flush_outbox(sh)
                 sh.handle.put(raw)               # scatter: no waiting yet
             out = []
-            for sh, raw in zip(self._proc_shards, raws):
+            for sh, raw in zip(self._proc_shards, raws, strict=True):
                 try:
                     reply = server_proc.unpackb(
                         sh.handle.rpc_recv(self.drain_timeout_s))
@@ -1393,7 +1424,7 @@ class ProcessShardedModelStore(_StoreBase):
                           batches=batches + dbatches)
         return folded
 
-    def drain(self, level: str, cluster_key: Optional[str] = None) -> int:
+    def drain(self, level: str, cluster_key: str | None = None) -> int:
         key = self._key(level, cluster_key)
         if key == GLOBAL_KEY:
             return self.drain_global()
@@ -1454,7 +1485,7 @@ class ProcessShardedModelStore(_StoreBase):
             plan = plan_coalesce(rec.meta, [(m, d) for _, _, m, d in flat],
                                  self.agg_cfg)
             by_shard: dict[int, list] = {k: [] for k in range(self.n_shards)}
-            for (seq, k, _, _), w in zip(flat, plan.weights[1:]):
+            for (seq, k, _, _), w in zip(flat, plan.weights[1:], strict=True):
                 by_shard[k].append([seq, w])
             try:
                 # phase 2 — per-server partial reduction; custody marks the
@@ -1491,7 +1522,7 @@ class ProcessShardedModelStore(_StoreBase):
                 raise
             with rec.pending_lock:
                 rec.swap(new_params, plan.meta)
-                for sh, sq in zip(self._proc_shards, acked):
+                for sh, sq in zip(self._proc_shards, acked, strict=True):
                     with sh.journal_lock:
                         self._ack(sh, sq)
         with self._drain_lock:
@@ -1568,20 +1599,20 @@ class ProcessShardedModelStore(_StoreBase):
         return synced
 
     # ------------------------------------------------- reads (sync barrier)
-    def request_model(self, level: str, cluster_key: Optional[str] = None):
+    def request_model(self, level: str, cluster_key: str | None = None):
         self._sync_key(self._key(level, cluster_key))
         return super().request_model(level, cluster_key)
 
-    def params(self, level: str, cluster_key: Optional[str] = None):
+    def params(self, level: str, cluster_key: str | None = None):
         self._sync_key(self._key(level, cluster_key))
         return super().params(level, cluster_key)
 
-    def meta(self, level: str, cluster_key: Optional[str] = None) -> ModelMeta:
+    def meta(self, level: str, cluster_key: str | None = None) -> ModelMeta:
         self._sync_key(self._key(level, cluster_key))
         return super().meta(level, cluster_key)
 
     # ---------------------------------------------------- secure aggregation
-    def submit_secure(self, level: str, cluster_key: Optional[str],
+    def submit_secure(self, level: str, cluster_key: str | None,
                       client_id: str, round_id: int, masked_delta,
                       delta: UpdateDelta) -> int:
         key = self._key(level, cluster_key)
@@ -1606,7 +1637,7 @@ class ProcessShardedModelStore(_StoreBase):
         sh.stats.observe_depth(depth)
         return depth
 
-    def drain_secure(self, level: str, cluster_key: Optional[str],
+    def drain_secure(self, level: str, cluster_key: str | None,
                      round_id: int, expected_ids) -> int:
         key = self._key(level, cluster_key)
         if key == GLOBAL_KEY:
@@ -1637,7 +1668,7 @@ class ProcessShardedModelStore(_StoreBase):
                                    [str(i) for i in expected_ids]]), apply)
 
     # ------------------------------------------------------------- inspection
-    def _count_drain_timeout(self, shard: Optional[int] = None):
+    def _count_drain_timeout(self, shard: int | None = None):
         """Deadline misses are attributed per worker here: one stuck host
         must be findable without grepping logs (the runbook in
         ``docs/OPERATIONS.md`` keys on ``shard_drain_timeouts``)."""

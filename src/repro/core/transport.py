@@ -133,7 +133,7 @@ def send_frame(sock: socket.socket, payload: bytes,
 
 def recv_frame(sock: socket.socket) -> tuple[int, bytes]:
     """Read one frame; returns (kind, payload).  Raises ``ConnectionError``
-    on EOF, ``socket.timeout`` on the socket's own deadline, and the frame
+    on EOF, ``TimeoutError`` on the socket's own deadline, and the frame
     errors above on malformed bytes."""
     kind, length = parse_header(_recv_exact(sock, HEADER_SIZE))
     return kind, (_recv_exact(sock, length) if length else b"")
@@ -414,7 +414,7 @@ class TcpWorkerHandle(Transport):
         try:
             sock.settimeout(max(timeout, 1e-3))
             kind, payload = recv_frame(sock)
-        except socket.timeout:
+        except TimeoutError:
             raise WorkerTimeout(
                 f"shard server {self.address[0]}:{self.address[1]} missed "
                 f"the {timeout:.1f}s reply deadline") from None

@@ -14,6 +14,6 @@ def agg_ref(stacked: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
 
 def aggregate_pytrees_ref(trees, weights):
     out = jax.tree.map(lambda x: x.astype(jnp.float32) * weights[0], trees[0])
-    for t, w in zip(trees[1:], weights[1:]):
+    for t, w in zip(trees[1:], weights[1:], strict=True):
         out = jax.tree.map(lambda a, b, w=w: a + b.astype(jnp.float32) * w, out, t)
     return jax.tree.map(lambda a, t: a.astype(t.dtype), out, trees[0])

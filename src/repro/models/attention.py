@@ -7,7 +7,6 @@ peak memory stays linear in sequence length.
 
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -193,7 +192,7 @@ def _pallas_attention(qg, k, v, *, causal, window, scale):
 
 
 def attention_forward(cfg: ModelConfig, p: dict, x, *, positions, window: int,
-                      causal: bool, rules=None, cache: Optional[dict] = None,
+                      causal: bool, rules=None, cache: dict | None = None,
                       cache_pos=None, rolling: bool = False):
     """Full-sequence forward (cache=None) or single/multi-token decode step.
 
@@ -287,7 +286,7 @@ def _rms(x, scale, eps=1e-6):
 
 
 def mla_forward(cfg: ModelConfig, p: dict, x, *, positions, window: int,
-                causal: bool, rules=None, cache: Optional[dict] = None,
+                causal: bool, rules=None, cache: dict | None = None,
                 cache_pos=None, absorb: bool = True):
     """MLA attention.  Cache holds the latent c_kv + shared rope key only
     (the paper-faithful memory saving).  ``absorb=True`` uses the matrix-

@@ -12,7 +12,6 @@ on CPU in the smoke tests.  All stacks scan over layers so the HLO (and
 
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -106,7 +105,7 @@ class LanguageModel:
 
     # ------------------------------------------------------------- forward
     def forward(self, params, *, tokens=None, embeds=None, mask=None,
-                rules: Optional[Rules] = None, window_override=None,
+                rules: Rules | None = None, window_override=None,
                 mla_absorb: bool = True):
         """Full-sequence forward.  Returns (logits, aux)."""
         cfg = self.cfg
@@ -115,10 +114,10 @@ class LanguageModel:
         positions = jnp.arange(s)
         moe_loss = jnp.zeros((), jnp.float32)
 
-        for si, (mode, kinds, repeat) in enumerate(self.layout):
+        for si, (mode, kinds, _repeat) in enumerate(self.layout):
             seg_params = params["segments"][f"seg{si}"]
             if mode == "scan":
-                def body(carry, xs):
+                def body(carry, xs, kinds=kinds):
                     hh, aux = carry
                     for i, kind in enumerate(kinds):
                         hh, _, a = block_apply(
@@ -179,7 +178,8 @@ class LanguageModel:
                 group = {f"b{i}": init_block_cache(self.cfg, k, batch, max_len, dtype)
                          for i, k in enumerate(kinds)}
                 caches[f"seg{si}"] = jax.tree.map(
-                    lambda x: jnp.broadcast_to(x[None], (repeat,) + x.shape), group)
+                    lambda x, repeat=repeat: jnp.broadcast_to(x[None], (repeat,) + x.shape),
+                    group)
             else:
                 caches[f"seg{si}"] = {
                     f"b{i}": init_block_cache(self.cfg, k, batch, max_len, dtype)
@@ -200,11 +200,11 @@ class LanguageModel:
             positions = pos + jnp.arange(tokens.shape[1])            # (s,)
         new_caches = {}
 
-        for si, (mode, kinds, repeat) in enumerate(self.layout):
+        for si, (mode, kinds, _repeat) in enumerate(self.layout):
             seg_params = params["segments"][f"seg{si}"]
             seg_cache = caches[f"seg{si}"]
             if mode == "scan":
-                def body(hh, xs):
+                def body(hh, xs, kinds=kinds):
                     layer_p, layer_c = xs
                     new_c = {}
                     for i, kind in enumerate(kinds):

@@ -8,7 +8,6 @@ depth; decode is a single-step update with a constant-size state.
 
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -65,7 +64,7 @@ def _gates(p, x):
 
 
 def rglru_forward(cfg: ModelConfig, p: dict, x, *, rules=None,
-                  state: Optional[dict] = None):
+                  state: dict | None = None):
     """x: (b, l, d_model) -> (y, new_state). state = {"conv", "h"}."""
     b, l, _ = x.shape
     gate_branch = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate_branch"]),

@@ -8,7 +8,6 @@ trivially sub-quadratic for the SSM family.
 
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -148,7 +147,7 @@ def ssd_chunked(x, dt, A, B, C, chunk: int, init_state=None):
 
 
 def ssm_forward(cfg: ModelConfig, p: dict, x, *, rules=None,
-                state: Optional[dict] = None):
+                state: dict | None = None):
     """Mamba-2 mixer.  state=None: full-sequence (chunked SSD).
     state given: single-step recurrent decode; returns (y, new_state)."""
     s = cfg.ssm

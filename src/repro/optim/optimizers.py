@@ -9,7 +9,7 @@ optimizer HBM for the large dry-run configs (see EXPERIMENTS.md §Dry-run).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp

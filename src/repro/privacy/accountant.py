@@ -47,7 +47,7 @@ def rdp_to_epsilon(rdp, orders, delta: float) -> float:
     if delta <= 0 or delta >= 1:
         raise ValueError(f"delta must be in (0, 1), got {delta}")
     eps = math.inf
-    for r, a in zip(rdp, orders):
+    for r, a in zip(rdp, orders, strict=True):
         if a <= 1.0 or not math.isfinite(r):
             continue
         eps = min(eps, r + math.log(1.0 / delta) / (a - 1.0))

@@ -18,7 +18,6 @@ from __future__ import annotations
 
 import hashlib
 from dataclasses import dataclass
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -75,14 +74,14 @@ class ParamSpec:
     shape: tuple
     logical: tuple
     init: str = "normal"          # normal | zeros | ones | embed
-    scale: Optional[float] = None  # stddev override
-    dtype: Optional[str] = None
+    scale: float | None = None  # stddev override
+    dtype: str | None = None
 
     def __post_init__(self):
         assert len(self.shape) == len(self.logical), (self.shape, self.logical)
 
 
-def logical_to_spec(logical: tuple, rules: Rules, shape: Optional[tuple] = None) -> P:
+def logical_to_spec(logical: tuple, rules: Rules, shape: tuple | None = None) -> P:
     mesh_axes = []
     used: set = set()
     for i, name in enumerate(logical):
@@ -185,7 +184,7 @@ def stack_schema(schema: dict, n: int) -> dict:
     return go(schema)
 
 
-def constrain(x, logical: tuple, rules: Optional[Rules]):
+def constrain(x, logical: tuple, rules: Rules | None):
     """with_sharding_constraint by logical activation axes (no-op w/o rules)."""
     if rules is None:
         return x

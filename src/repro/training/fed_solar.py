@@ -43,7 +43,8 @@ def make_solar_fns(forecaster: SolarForecaster, lr: float = 5e-3,
                 reg = sum(jnp.sum(jnp.square(a.astype(jnp.float32)
                                              - b.astype(jnp.float32)))
                           for a, b in zip(jax.tree.leaves(p),
-                                          jax.tree.leaves(anchor_params)))
+                                          jax.tree.leaves(anchor_params),
+                                          strict=True))
                 loss = loss + 0.5 * lam * reg
             return loss
 

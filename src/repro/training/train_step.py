@@ -8,7 +8,6 @@ in/out shardings — this is what the multi-pod dry-run lowers.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -38,9 +37,9 @@ jax.tree_util.register_pytree_node(
 
 def build_train_step(model, cfg: ModelConfig, optimizer: Optimizer, *,
                      rules=None, grad_clip: float = 1.0,
-                     ewc: Optional[EWCState] = None,
+                     ewc: EWCState | None = None,
                      mla_absorb: bool = True,
-                     n_microbatches: Optional[int] = None):
+                     n_microbatches: int | None = None):
     """n_microbatches: gradient accumulation — splits the global batch into
     n sequential microbatches (lax.scan), dividing activation memory by n
     at identical math (same loss/grads up to f32 summation order)."""

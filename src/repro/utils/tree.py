@@ -35,7 +35,7 @@ def tree_weighted_sum(trees, weights):
     """sum_i weights[i] * trees[i] — the core FedAvg primitive."""
     assert len(trees) == len(weights) and trees
     out = tree_scale(trees[0], weights[0])
-    for t, w in zip(trees[1:], weights[1:]):
+    for t, w in zip(trees[1:], weights[1:], strict=True):
         out = jax.tree.map(lambda a, b, w=w: a + b * w, out, t)
     return out
 

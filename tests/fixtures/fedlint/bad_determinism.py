@@ -1,0 +1,31 @@
+"""Golden-bad fixture for the determinism rules (FED501-FED504).  Line
+numbers are pinned by tests/test_fedlint.py — edit with care."""
+
+import time
+
+import numpy as np
+from random import shuffle  # line 7: FED502
+
+
+def jitter(n):
+    return np.random.rand(n)                       # line 11: FED501
+
+
+def stamp():
+    return time.time()                             # line 15: FED503
+
+
+def ordered(keys):
+    out = [k for k in set(keys)]                   # line 19: FED504
+    shuffle(out)
+    return out
+
+
+def seeded_ok(n):
+    rng = np.random.default_rng(7)                 # allowed: seeded API
+    return rng.normal(size=n)
+
+
+def hatched(n):
+    # fedlint: nondet-ok(backoff jitter only, never orders work)
+    return np.random.rand(n)                       # suppressed, no finding

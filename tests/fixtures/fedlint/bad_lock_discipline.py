@@ -1,0 +1,38 @@
+"""Golden-bad fixture for the lock-discipline rule (FED101/FED102) and
+the escape-hatch policy (FED103).  Line numbers are pinned by
+tests/test_fedlint.py — edit with care."""
+
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.total = 0
+        self.pending = []
+
+    def add(self, n):
+        with self._lock:
+            self.total += n
+            self.pending.append(n)
+
+    def peek_bad(self):
+        return self.total                          # line 20: FED101
+
+    def reset_bad(self):
+        self.total = 0                             # line 23: FED102
+
+    def mutate_bad(self):
+        self.pending.append(0)                     # line 26: FED102
+
+    def peek_hatched(self):
+        # fedlint: unlocked-ok(single torn read tolerated for stats)
+        return self.total                          # suppressed, no finding
+
+    def peek_bare_hatch(self):
+        # a hatch with no reason: FED103, and it suppresses nothing
+        return self.total  # fedlint: unlocked-ok
+
+    def helper(self):
+        """Caller holds ``self._lock`` for the duration."""
+        return self.total                          # documented convention

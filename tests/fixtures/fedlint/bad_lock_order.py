@@ -1,0 +1,22 @@
+"""Golden-bad fixture for the lock-order rule (FED201): two methods
+acquire the same pair of locks in opposite orders, which can interleave
+into deadlock."""
+
+import threading
+
+
+class AB:
+    def __init__(self):
+        self.a_lock = threading.Lock()
+        self.b_lock = threading.Lock()
+        self.x = 0
+
+    def forward(self):
+        with self.a_lock:                          # a -> b
+            with self.b_lock:
+                self.x += 1
+
+    def backward(self):
+        with self.b_lock:                          # b -> a: cycle
+            with self.a_lock:
+                self.x -= 1

@@ -1,0 +1,2 @@
+"""Golden-bad kernel package: deliberately does NOT re-export from ops
+(FED303)."""

@@ -1,0 +1,5 @@
+"""Kernel module that never invokes ``pl.pallas_call`` (FED301)."""
+
+
+def _scale_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]

@@ -1,0 +1,7 @@
+"""Dispatcher that neither imports the kernel module nor resolves
+INTERPRET (FED303 x2), and whose public function drops the oracle's
+``alpha`` parameter (FED302)."""
+
+
+def scale(x, beta=2.0):
+    return [v * beta for v in x]

@@ -1,0 +1,5 @@
+"""Oracle with no signature-compatible twin (FED302)."""
+
+
+def scale_ref(x, alpha=1.0):
+    return [v * alpha for v in x]

@@ -1,0 +1,2 @@
+"""Golden-bad kernel package missing ops.py / ref.py / incomplete.py
+(FED301)."""

@@ -76,7 +76,8 @@ def test_pallas_path_matches_jit_path():
             UpdateDelta(100, 1, 1))
     out_jit, _ = aggregate_models(base, *args, AggregationConfig(use_pallas=False))
     out_pal, _ = aggregate_models(base, *args, AggregationConfig(use_pallas=True))
-    for a, b in zip(jax.tree.leaves(out_jit), jax.tree.leaves(out_pal)):
+    for a, b in zip(jax.tree.leaves(out_jit), jax.tree.leaves(out_pal),
+                    strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
 
 

@@ -149,7 +149,7 @@ def test_threaded_contention_no_lost_updates():
 
     def writer(t):
         rng = np.random.default_rng(t)
-        for i in range(per_thread):
+        for _ in range(per_thread):
             s = int(rng.integers(1, 100))
             store.handle_model_update(
                 "global", None, {"w": jnp.asarray(rng.uniform(-1, 1))},

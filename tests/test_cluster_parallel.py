@@ -43,9 +43,9 @@ def test_matches_independent_training(setup):
                                        batches[k])
         np.testing.assert_allclose(float(metrics["loss"][k]),
                                    float(ref_metrics["loss"]), rtol=1e-5)
-        for a, b in zip(jax.tree.leaves(jax.tree.map(lambda x: x[k],
-                                                     new_state.params)),
-                        jax.tree.leaves(ref_state.params)):
+        got = jax.tree.map(lambda x, k=k: x[k], new_state.params)
+        for a, b in zip(jax.tree.leaves(got),
+                        jax.tree.leaves(ref_state.params), strict=True):
             np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                        rtol=1e-4, atol=1e-6)
 
@@ -56,9 +56,10 @@ def test_global_tier_is_fedavg(setup):
     state, _ = jax.jit(cp.step)(state, stacked)
     counts = [100, 300, 600]
     g = cp.global_params(state, counts)
-    per_cluster = [jax.tree.map(lambda x: x[k], state.params) for k in range(3)]
+    per_cluster = [jax.tree.map(lambda x, k=k: x[k], state.params)
+                   for k in range(3)]
     ref = multi_aggregate(per_cluster, counts)
-    for a, b in zip(jax.tree.leaves(g), jax.tree.leaves(ref)):
+    for a, b in zip(jax.tree.leaves(g), jax.tree.leaves(ref), strict=True):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32),
                                    rtol=1e-4, atol=1e-6)

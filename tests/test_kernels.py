@@ -41,7 +41,7 @@ def test_agg_pytrees_dtype(dtype, rng):
     w = [0.2, 0.3, 0.5]
     out = aggregate_pytrees(trees, w)
     ref = aggregate_pytrees_ref(trees, w)
-    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ref), strict=True):
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32), atol=2e-2)
 

@@ -32,7 +32,8 @@ def test_microbatching_matches_full_batch(rng):
     s2, m2 = step_micro(state, batch)
     # loss: microbatch mean of per-microbatch means == full mean (equal sizes)
     np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-5)
-    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params),
+                    strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=2e-4, atol=2e-5)
 

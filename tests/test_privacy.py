@@ -152,7 +152,7 @@ def test_store_drain_secure_with_dropout():
     base, masked, plain = _masked_round(rng, masker, ids,
                                         round_id=0, model_key="__global__")
     # only a and b submit; c dropped — drain must reconstruct c's strays
-    for cid, (y, d) in zip(ids, masked):
+    for cid, (y, d) in zip(ids, masked, strict=True):
         if cid != "c":
             store.submit_secure("global", None, cid, 0, y, d)
     assert store.drain_secure("global", None, 0, ids) == 2
@@ -179,7 +179,7 @@ def test_drain_secure_missing_masker_raises():
 def test_accountant_epsilon_finite_and_grows():
     acc = RDPAccountant(target_delta=1e-5)
     eps_prev = 0.0
-    for step in range(1, 6):
+    for _step in range(1, 6):
         acc.record("c0", "__global__", noise_multiplier=1.1)
         eps = acc.client_epsilon("c0")
         assert np.isfinite(eps) and eps > eps_prev

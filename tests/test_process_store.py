@@ -192,7 +192,7 @@ def test_inprocess_kill_respawn_replays_journal(init_tree):
                                      batch_aggregation=True, max_coalesce=4,
                                      inprocess=True)
     rng = np.random.default_rng(3)
-    for i in range(8):
+    for _ in range(8):
         for key in keys:
             store.handle_model_update("cluster", key, make_tree(rng),
                                       ModelMeta(5, 1, 1), UpdateDelta(5, 1, 1))

@@ -14,7 +14,7 @@ def fleet():
 
 
 def test_production_physical_bounds(fleet):
-    for site, d in fleet:
+    for _site, d in fleet:
         y = d["production_norm"]
         assert y.min() >= 0.0
         assert y.max() <= 1.2
@@ -24,7 +24,7 @@ def test_production_physical_bounds(fleet):
 
 
 def test_features_within_table1_ranges(fleet):
-    for site, d in fleet:
+    for _site, d in fleet:
         X = d["features"]
         assert X.shape[1] == len(FEATURES)
         # normalized features bounded

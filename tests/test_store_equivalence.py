@@ -186,7 +186,7 @@ def test_effective_round_parity_flat_vs_sharded():
                                 batch_aggregation=True)
     proc = ProcessShardedModelStore(init, keys, n_shards=3,
                                     batch_aggregation=True, inprocess=True)
-    for i, (m, p, um, d) in enumerate(events):
+    for m, p, um, d in events:
         level, key = ("global", None) if m == GLOBAL_KEY else ("cluster", m)
         flat.handle_model_update(level, key, p, um, d)
         sharded.handle_model_update(level, key, p, um, d)
@@ -726,7 +726,7 @@ def test_threaded_sharded_stress_no_lost_updates_clean_shutdown():
 
     def submitter(t):
         trng = np.random.default_rng(1000 + t)
-        for i in range(per_thread):
+        for _ in range(per_thread):
             s = int(trng.integers(1, 100))
             tree = {"a": jnp.asarray(trng.standard_normal((4, 3)),
                                      jnp.float32),
@@ -829,7 +829,7 @@ def test_effective_round_never_regresses_during_drain(make):
     init = make_tree(rng)
     store = make(init)
     n = 60
-    for i in range(n):
+    for _ in range(n):
         s = int(rng.integers(1, 50))
         store.handle_model_update("cluster", "c0", make_tree(rng),
                                   ModelMeta(s, 1, 1), UpdateDelta(s, 1, 1))
@@ -852,7 +852,7 @@ def test_effective_round_never_regresses_during_drain(make):
     assert not t.is_alive()
     for lk, log in seen.items():
         assert log, lk
-        assert all(b >= a for a, b in zip(log, log[1:])), \
+        assert all(b >= a for a, b in zip(log, log[1:], strict=False)), \
             f"effective_round regressed for {lk}"
         assert log[-1] == n
         assert store.effective_round(*lk) == n
@@ -881,7 +881,9 @@ def test_failed_drain_requeues_batch_and_retires_inflight(make):
         store.handle_model_update(*lk, poison, ModelMeta(10, 1, 5),
                                   UpdateDelta(10, 1, 1))
         before = store.effective_round(*lk)
-        with pytest.raises(Exception):
+        # jnp raises TypeError on the shape mismatch; the process-sharded
+        # store surfaces remote-shard failures wrapped in RuntimeError
+        with pytest.raises((TypeError, RuntimeError)):
             store.drain(*lk)
         assert store.pending_depth(*lk) == 2          # batch restored
         assert store.effective_round(*lk) == before   # no phantom rounds

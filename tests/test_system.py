@@ -39,7 +39,7 @@ def test_solar_clustering_structure(solar_report):
            if cid.startswith("ori:")}
     assert len(loc) >= 2 and len(ori) >= 2
     # every client belongs to 1 location + 1 orientation cluster
-    for cid, keys in clusters.items():
+    for _cid, keys in clusters.items():
         assert any(k.startswith("loc:") for k in keys)
         assert any(k.startswith("ori:") for k in keys)
 

@@ -143,7 +143,7 @@ def test_tcp_lazy_mirror_sync_cuts_reply_bytes_at_equal_weights(
     def drive(sync_every):
         with _mk(init_tree, tcp_loopback_hosts, keys=keys, agg_cfg=NOFAST,
                  mirror_sync_every=sync_every) as store:
-            for i, (m, p, um, d) in enumerate(events):
+            for m, p, um, d in events:
                 store.handle_model_update("cluster", m, p, um, d)
                 store.drain("cluster", m)           # one reply per update
             store.sync_mirrors()
@@ -223,7 +223,7 @@ def test_tcp_server_killed_and_supervisor_restarted(init_tree):
                  agg_cfg=NOFAST) as store:
             rng = np.random.default_rng(7)
             refs = {"k0": [], "k1": [], GLOBAL_KEY: []}
-            for i in range(4):
+            for _ in range(4):
                 for key in ("k0", "k1"):
                     tree = make_tree(rng)
                     store.handle_model_update("cluster", key, tree,
@@ -232,7 +232,7 @@ def test_tcp_server_killed_and_supervisor_restarted(init_tree):
                     refs[key].append((tree, ModelMeta(6, 1, 1),
                                       UpdateDelta(6, 1, 1)))
             store.drain_all()                    # both workers hold state
-            for i in range(4):
+            for _ in range(4):
                 for key in ("k0", "k1"):
                     tree = make_tree(rng)
                     store.handle_model_update("cluster", key, tree,

@@ -19,7 +19,11 @@ import pytest
 from repro.checkpoint.msgpack_ckpt import packb, unpackb, unpackb_np
 from repro.core import transport
 from repro.core.aggregation import AggregationConfig
-from repro.core.server_proc import ShardWorker, make_seed_blob
+from repro.core.server_proc import (
+    InprocessWorkerHandle,
+    ShardWorker,
+    make_seed_blob,
+)
 from repro.core.transport import (
     FRAME_MAGIC,
     HEADER_SIZE,
@@ -352,3 +356,33 @@ def test_tcp_handle_frames_are_spec_frames():
     assert seen["msg"][0] == "seed" and seen["msg"][1] == 0
     assert seen["put"][0] == "ensure"
     assert h.tx_bytes > 0 and h.rx_bytes > 0
+
+
+def test_handle_tx_bytes_exact_under_concurrent_puts():
+    """``tx_bytes`` has two writer populations — fire-and-forget ``put()``
+    callers hold their shard's journal lock while replying ``rpc()``
+    callers hold the rpc lock — so the counter carries its own
+    ``_send_lock`` (fedlint FED102 fallout; see docs/INVARIANTS.md).
+    Every sent byte must be accounted exactly, no lost increments."""
+    blob = make_seed_blob([], 4, AggregationConfig(), None)
+    h = InprocessWorkerHandle(0, blob)
+    ensure = packb(["ensure", "c0", {"w": np.ones(3, np.float32)}])
+    ping = packb(["ping"])
+    n_putters, per_thread = 8, 40
+    barrier = threading.Barrier(n_putters + 1)
+
+    def putter():
+        barrier.wait()
+        for _ in range(per_thread):
+            h.put(ensure)
+
+    threads = [threading.Thread(target=putter) for _ in range(n_putters)]
+    for t in threads:
+        t.start()
+    barrier.wait()
+    for _ in range(per_thread):            # the second writer population
+        h.rpc(ping, timeout=5.0)
+    for t in threads:
+        t.join()
+    assert h.tx_bytes == \
+        n_putters * per_thread * len(ensure) + per_thread * len(ping)
