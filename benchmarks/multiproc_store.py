@@ -37,6 +37,14 @@ along for the counter-regime: with near-free jitted folds there is nothing
 to offload and the process store's transport makes it strictly slower —
 kept in the artifact so the crossover is visible, not hidden.
 
+Telemetry-overhead phase (``telemetry``): the same mixed storm on the
+process store at the largest K, telemetry off vs on (every submit traced,
+``trace_sample_n=1`` — the worst case).  ``telemetry_overhead`` is the
+off/on submits/s ratio (1.0 = free) and is gated tight by
+``scripts/bench_gate.py``: the observability layer's documented "≤ 5%
+submit-throughput cost" claim (docs/OBSERVABILITY.md) is enforced, not
+aspirational.
+
 Reported per row: wall-clock submits/s over the full mixed workload
 (drains included), fetches/s, coalesce accounting, and worker respawns
 (must be 0 in a clean run).  The headline is ``process_vs_threaded`` — the
@@ -63,6 +71,7 @@ from repro.core.aggregation import AggregationConfig, ModelMeta, UpdateDelta
 from repro.core.runtime_threaded import AsyncThreadedRuntime
 from repro.core.store import ProcessShardedModelStore, ShardedModelStore
 from repro.core.transport import LoopbackShardServers
+from repro.obs.record import Telemetry
 
 N_CLUSTERS = 16
 MAX_COALESCE = 16
@@ -188,6 +197,40 @@ def bench_mirror_sync(init, hosts, agg_cfg, n_updates):
     return out
 
 
+def bench_telemetry_overhead(init, agg_cfg, k, kw, reps=2):
+    """The mixed storm on the process store, telemetry off vs on (every
+    submit traced — the worst case); the off/on submits/s ratio is the
+    gated ``telemetry_overhead`` metric (1.0 = free, gate at 1.05).
+
+    The two modes alternate for ``reps`` repetitions and each mode keeps
+    its *best* throughput: a single off-then-on pair conflates telemetry
+    cost with process-spawn warm-up and scheduler luck (observed swings
+    exceed 50% on shared runners), while best-of-alternating isolates
+    the hook cost, which is what the 5% gate is about.
+    """
+    keys = [f"c{i}" for i in range(N_CLUSTERS)]
+    best = {"off": 0.0, "on": 0.0}
+    for rep in range(reps):
+        for mode in ("off", "on"):
+            store = ProcessShardedModelStore(
+                init, keys, agg_cfg=agg_cfg, n_shards=k,
+                batch_aggregation=True, max_coalesce=MAX_COALESCE,
+                drain_timeout_s=180.0,
+                telemetry=Telemetry() if mode == "on" else None)
+            try:
+                row = bench_mixed(f"process_tel_{mode}_{k}_r{rep}",
+                                  store, **kw)
+            finally:
+                store.close()
+            best[mode] = max(best[mode], row["submits_per_s"])
+    return {
+        "shards": k,
+        "off_submits_per_s": best["off"],
+        "on_submits_per_s": best["on"],
+        "overhead_ratio": best["off"] / best["on"],
+    }
+
+
 def _bench_pair(tag, init, agg_cfg, k, kw):
     keys = [f"c{i}" for i in range(N_CLUSTERS)]
     threaded = bench_mixed(
@@ -254,6 +297,8 @@ def run(fast: bool = False, out_path: str = "BENCH_multiproc.json") -> dict:
         mirror_sync = bench_mirror_sync(init, srv.hosts, kernel_cfg,
                                         n_updates=48 if fast else 96)
 
+    telemetry = bench_telemetry_overhead(init, kernel_cfg, max(ks), kw)
+
     report = {
         "config": {"writers": n_writers, "fetchers": n_fetchers,
                    "per_writer": per_writer, "per_fetcher": per_fetcher,
@@ -263,6 +308,7 @@ def run(fast: bool = False, out_path: str = "BENCH_multiproc.json") -> dict:
         "rows": rows,
         "process_vs_threaded": ratios,
         "mirror_sync": mirror_sync,
+        "telemetry": telemetry,
     }
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2)
@@ -298,4 +344,7 @@ if __name__ == "__main__":
     print(f"lazy mirror sync: reply bytes x{ms['reply_bytes_ratio']:.2f} "
           f"({ms['sync4']['reply_bytes']} vs {ms['sync1']['reply_bytes']}), "
           f"weights_match={ms['weights_match']}")
+    tl = rep["telemetry"]
+    print(f"telemetry overhead (off/on submits/s at K{tl['shards']}): "
+          f"x{tl['overhead_ratio']:.3f}")
     print("report -> BENCH_multiproc.json")

@@ -19,6 +19,15 @@ docs/ARCHITECTURE.md):
 shard_server``) on loopback ports via ``LoopbackShardServers`` — the
 same entrypoint you run per host in a real multi-host deployment — and
 points ``FedCCLConfig.server_hosts`` at them.
+
+``--metrics`` enables the telemetry layer (``docs/OBSERVABILITY.md``) on
+any topology and prints a one-screen latency/queue/staleness summary at
+exit; ``--trace-out spans.json`` additionally writes a Perfetto-loadable
+trace (open at ui.perfetto.dev) whose flow arrows follow each sampled
+submit across the parent -> worker process/TCP boundary:
+
+    PYTHONPATH=src python examples/quickstart.py --topology tcp \\
+        --metrics --trace-out spans.json
 """
 
 import argparse
@@ -36,10 +45,10 @@ from repro.optim.optimizers import adamw
 from repro.training.train_step import TrainState, build_train_step
 
 
-def make_config(topology: str, hosts) -> FedCCLConfig:
+def make_config(topology: str, hosts, telemetry: bool = False) -> FedCCLConfig:
     base = dict(spaces=(ClusterSpaceConfig(
         "loc", eps=150.0, min_samples=2, metric="haversine"),),
-        ewc_lambda=0.01, seed=0)
+        ewc_lambda=0.01, seed=0, telemetry=telemetry)
     if topology == "single":
         return FedCCLConfig(**base)
     base["batch_aggregation"] = True
@@ -54,6 +63,23 @@ def make_config(topology: str, hosts) -> FedCCLConfig:
     raise ValueError(f"unknown topology {topology!r}")
 
 
+def print_metrics_summary(fed: FedCCL) -> None:
+    """One screen: merged cross-site percentiles for the run."""
+    rep = fed.metrics_report()
+    print(f"telemetry sites: {rep['sites']} "
+          f"(dropped events: {rep['dropped_events']})")
+    for name, h in sorted(rep["histograms"].items()):
+        unit = " us" if name.endswith("_ns") else ""
+        scale = 1e3 if name.endswith("_ns") else 1.0
+        print(f"  {name:<22} n={h['count']:<6} "
+              f"p50={h['p50'] / scale:>10.1f}{unit} "
+              f"p95={h['p95'] / scale:>10.1f}{unit} "
+              f"p99={h['p99'] / scale:>10.1f}{unit} "
+              f"max={h['max'] / scale:>10.1f}{unit}")
+    for name, v in sorted(rep["gauges"].items()):
+        print(f"  {name:<22} {v}")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--topology",
@@ -61,7 +87,14 @@ def main():
                     default="single",
                     help="federation server flavor (see the README "
                          "topology table / docs/ARCHITECTURE.md)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="enable telemetry and print a metrics summary at "
+                         "exit (docs/OBSERVABILITY.md)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Perfetto-loadable trace-event JSON of the "
+                         "run's span chains (implies --metrics)")
     args = ap.parse_args()
+    telemetry = args.metrics or args.trace_out is not None
 
     cfg = reduced_for_smoke(get_config("gemma-2b"))
     model = build_model(cfg)
@@ -86,7 +119,7 @@ def main():
         print("loopback shard servers:", servers.hosts)
     try:
         fed = FedCCL(make_config(args.topology, servers.hosts if servers
-                                 else ()),
+                                 else (), telemetry),
                      init_params=model.init(jax.random.key(0)),
                      train_fn=train_fn)
 
@@ -122,6 +155,13 @@ def main():
                        None))
         print(f"new org assigned to {keys}; received specialized params "
               f"({sum(x.size for x in jax.tree.leaves(params)):,} weights)")
+        if telemetry:
+            # dump before shutdown: the obsdump RPC needs live workers
+            if args.trace_out:
+                fed.write_trace(args.trace_out)
+                print(f"wrote Perfetto trace to {args.trace_out} "
+                      f"(open at ui.perfetto.dev)")
+            print_metrics_summary(fed)
         fed.shutdown()
     finally:
         if servers is not None:

@@ -76,6 +76,17 @@ def _multiproc_metrics(report: dict) -> dict:
             (ms["sync1"]["reply_bytes"], None)
         out["multiproc/tcp_sync4_reply_bytes"] = \
             (ms["sync4"]["reply_bytes"], None)
+    tl = report.get("telemetry")
+    if tl:
+        # off/on submits/s within one run (machine cancels out); 1.0 =
+        # telemetry is free.  Gated TIGHT (see TIGHT_TOLERANCE): the
+        # docs' "<= 5% submit-throughput cost" claim is enforced, and
+        # regressing it means a hook landed on the hot path
+        out["multiproc/telemetry_overhead"] = (tl["overhead_ratio"], False)
+        out["multiproc/telemetry_off_submits_per_s"] = \
+            (tl["off_submits_per_s"], None)
+        out["multiproc/telemetry_on_submits_per_s"] = \
+            (tl["on_submits_per_s"], None)
     return out
 
 
@@ -107,8 +118,16 @@ BENCHES = [
 # reintroduction drops the ratio ~4x) without flaking on scheduler noise
 WIDE_TOLERANCE_PREFIXES = ("multiproc/process_vs_threaded/",)
 
+# metrics that carry a documented *bound* rather than a throughput: the
+# telemetry off/on ratio is near 1.0 by construction and its baseline is
+# pinned there, so the default 25% would let a 25% telemetry tax through —
+# gate it at the docs' promised 5% instead, overriding --tolerance
+TIGHT_TOLERANCE = {"multiproc/telemetry_overhead": 0.05}
+
 
 def _tolerance_for(metric: str, base_tol: float) -> float:
+    if metric in TIGHT_TOLERANCE:
+        return TIGHT_TOLERANCE[metric]
     if metric.startswith(WIDE_TOLERANCE_PREFIXES):
         return 2.0 * base_tol
     return base_tol
@@ -174,7 +193,9 @@ def main() -> int:
         for mod_name, artifact, extract in BENCHES:
             if args.bench and mod_name not in args.bench:
                 continue
-            metrics = {m: medians[m]
+            # bound metrics gate against their documented ideal (1.0),
+            # not whatever this machine happened to measure
+            metrics = {m: (1.0 if m in TIGHT_TOLERANCE else medians[m])
                        for m in extract(reports[mod_name])}
             blob = {"source": f"median of {args.runs} REPRO_BENCH_FAST=1 "
                               f"runs (scripts/bench_gate.py)",

@@ -10,6 +10,7 @@ from scripts.fedlint.rules.locks import (
     LockDisciplineRule,
     LockOrderRule,
 )
+from scripts.fedlint.rules.obs import ObservabilityRule
 from scripts.fedlint.rules.wire import WireDriftRule
 
 RULE_CLASSES = (
@@ -19,6 +20,7 @@ RULE_CLASSES = (
     KernelTwinRule,
     WireDriftRule,
     DeterminismRule,
+    ObservabilityRule,
 )
 
 REGISTRY = {cls.name: cls for cls in RULE_CLASSES}

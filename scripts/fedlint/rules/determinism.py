@@ -26,6 +26,12 @@ import ast
 from scripts.fedlint.core import Finding, Rule, SourceFile
 
 CORE_PREFIX = "src/repro/core/"
+OBS_PREFIX = "src/repro/obs/"
+
+#: the one module allowed to read the wall clock (its anchor pair is what
+#: re-anchors cross-process telemetry onto a shared timeline; see
+#: repro.obs.clock and the FED60x observability rules)
+SANCTIONED_CLOCK = "src/repro/obs/clock.py"
 
 #: tests that pin cross-runtime equivalence and wire determinism
 ADJACENT_TESTS = frozenset({
@@ -62,11 +68,17 @@ class DeterminismRule(Rule):
     }
 
     def applies(self, rel: str) -> bool:
-        return rel.startswith(CORE_PREFIX) or rel in ADJACENT_TESTS
+        return (rel.startswith((CORE_PREFIX, OBS_PREFIX))
+                or rel in ADJACENT_TESTS)
 
     def check(self, src: SourceFile) -> list[Finding]:
         out: list[Finding] = []
         set_attrs = self._set_attrs(src.tree)
+        # repro.obs.clock is the single sanctioned wall-clock site: its
+        # wall/monotonic anchor pair never *orders* work, it only
+        # re-anchors telemetry dumps for export (FED601/602 guard the
+        # rest of the clock discipline)
+        clock_exempt = src.rel == SANCTIONED_CLOCK
 
         def flag(line: int, rule_id: str, msg: str) -> None:
             if not src.hatched(line, HATCH):
@@ -101,7 +113,8 @@ class DeterminismRule(Rule):
             # FED503: wall clock
             elif isinstance(node, ast.Call):
                 f = node.func
-                if (isinstance(f, ast.Attribute)
+                if (not clock_exempt
+                        and isinstance(f, ast.Attribute)
                         and isinstance(f.value, ast.Name)
                         and (f.value.id, f.attr) in WALL_CLOCK):
                     flag(node.lineno, "FED503",

@@ -1,0 +1,97 @@
+"""Observability lint (FED601–FED602).
+
+The telemetry layer (``src/repro/obs/``, docs/OBSERVABILITY.md) is the
+*only* sanctioned way library code reports what it is doing:
+
+* FED601 — ``print(...)`` or the stdlib ``logging`` module inside the
+  library core.  Both bypass the ring-buffer recorders (events are lost
+  to exporters), serialize hot paths on interpreter-global locks, and —
+  for the worker processes — interleave with the parent's stdout.
+  Record a ``Telemetry`` event/metric instead; CLI entry points
+  (``src/repro/launch/``) may print.
+* FED602 — direct monotonic-clock reads (``time.monotonic``,
+  ``time.perf_counter``, ...) anywhere but ``repro.obs.clock``.  Every
+  timestamp must come from the one clock shim so cross-process dumps
+  re-anchor onto a single timeline (and so tests can interpose the
+  clock in one place).  ``time.sleep`` is not a read and stays fine.
+
+Deliberate exceptions carry ``# fedlint: obs-ok(reason)``.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from scripts.fedlint.core import Finding, Rule, SourceFile
+
+CORE_PREFIX = "src/repro/core/"
+OBS_PREFIX = "src/repro/obs/"
+
+#: the one module allowed to touch ``time`` clocks directly
+SANCTIONED_CLOCK = "src/repro/obs/clock.py"
+
+MONO_READS = frozenset({
+    "monotonic", "monotonic_ns", "perf_counter", "perf_counter_ns",
+})
+
+HATCH = "obs"
+
+
+class ObservabilityRule(Rule):
+    name = "observability"
+    id_docs = {
+        "FED601": "print()/logging in library core; record telemetry "
+                  "events instead",
+        "FED602": "monotonic clock read outside repro.obs.clock",
+    }
+
+    def applies(self, rel: str) -> bool:
+        return rel.startswith((CORE_PREFIX, OBS_PREFIX))
+
+    def check(self, src: SourceFile) -> list[Finding]:
+        out: list[Finding] = []
+
+        def flag(line: int, rule_id: str, msg: str) -> None:
+            if not src.hatched(line, HATCH):
+                out.append(Finding(src.rel, line, rule_id, msg))
+
+        for node in ast.walk(src.tree):
+            # FED601: print(...) calls
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id == "print"):
+                flag(node.lineno, "FED601",
+                     "`print()` in library core bypasses the telemetry "
+                     "recorders and interleaves with worker stdout; "
+                     "record a `Telemetry` event or metric instead")
+            # FED601: stdlib logging (import or attribute use)
+            elif (isinstance(node, (ast.Import, ast.ImportFrom))
+                    and any((alias.name == "logging"
+                             or alias.name.startswith("logging."))
+                            for alias in node.names)
+                    and (not isinstance(node, ast.ImportFrom)
+                         or node.module in (None, "logging"))):
+                flag(node.lineno, "FED601",
+                     "stdlib `logging` in library core serializes hot "
+                     "paths on a global lock; record a `Telemetry` "
+                     "event or metric instead")
+            # FED602: monotonic reads outside the clock shim
+            elif (src.rel != SANCTIONED_CLOCK
+                    and isinstance(node, ast.Attribute)
+                    and isinstance(node.value, ast.Name)
+                    and node.value.id == "time"
+                    and node.attr in MONO_READS):
+                flag(node.lineno, "FED602",
+                     f"`time.{node.attr}` read outside repro.obs.clock; "
+                     f"go through `repro.obs.clock.{node.attr}` so every "
+                     f"timestamp shares one re-anchorable clock")
+            elif (src.rel != SANCTIONED_CLOCK
+                    and isinstance(node, ast.ImportFrom)
+                    and node.module == "time"
+                    and any(alias.name in MONO_READS
+                            for alias in node.names)):
+                flag(node.lineno, "FED602",
+                     "importing monotonic clocks from `time` outside "
+                     "repro.obs.clock; import them from "
+                     "`repro.obs.clock` instead")
+        return sorted(set(out))

@@ -25,6 +25,8 @@ from repro.core.store import (
     ProcessShardedModelStore,
     ShardedModelStore,
 )
+from repro.obs.export import metrics_json, prometheus_text, write_perfetto
+from repro.obs.record import Telemetry
 from repro.privacy.accountant import RDPAccountant
 from repro.privacy.dp import DPConfig, DPPrivatizer
 from repro.privacy.secure_agg import PairwiseMasker
@@ -92,6 +94,18 @@ class FedCCLConfig:
     # order of n_samples * dp_clip to actually hide the weighted deltas —
     # see the magnitude caveat in repro.privacy.secure_agg
     secure_mask_scale: float = 1.0
+    # ---- telemetry (repro.obs) --------------------------------------------
+    # True wires a Telemetry sink through the store (and, for the
+    # process/TCP topologies, into every worker): submit/enqueue/fold spans
+    # in per-thread ring buffers plus log-bucketed latency, queue-depth and
+    # staleness histograms, read back via FedCCL.metrics_report() and
+    # write_trace() — see docs/OBSERVABILITY.md.  Off = zero-cost (stores
+    # hold None and hot paths pay one attribute check).
+    telemetry: bool = False
+    # trace-sample every Nth submit: 1 = every submit gets a cross-process
+    # span chain; larger N thins the flow arrows (metrics and events are
+    # always recorded when telemetry is on)
+    trace_sample_n: int = 1
 
 
 class FedCCL:
@@ -104,6 +118,8 @@ class FedCCL:
         self.accountant = (RDPAccountant(target_delta=cfg.target_delta)
                            if cfg.dp_clip is not None else None)
         agg_cfg = AggregationConfig(use_pallas=cfg.use_pallas_agg)
+        tel = (Telemetry(sample_n=cfg.trace_sample_n)
+               if cfg.telemetry else None)
         if cfg.server_hosts:
             self.store = ProcessShardedModelStore(
                 init_params, agg_cfg=agg_cfg,
@@ -111,7 +127,8 @@ class FedCCL:
                 batch_aggregation=cfg.batch_aggregation,
                 max_coalesce=cfg.max_coalesce, masker=self.masker,
                 drain_timeout_s=cfg.drain_timeout_s,
-                mirror_sync_every=cfg.mirror_sync_every)
+                mirror_sync_every=cfg.mirror_sync_every,
+                telemetry=tel)
         elif cfg.server_processes > 0:
             self.store = ProcessShardedModelStore(
                 init_params, agg_cfg=agg_cfg, n_shards=cfg.server_processes,
@@ -119,19 +136,19 @@ class FedCCL:
                 max_coalesce=cfg.max_coalesce, masker=self.masker,
                 drain_timeout_s=cfg.drain_timeout_s,
                 mirror_sync_every=cfg.mirror_sync_every,
-                inprocess=(cfg.runtime == "sim"))
+                inprocess=(cfg.runtime == "sim"), telemetry=tel)
         elif cfg.server_shards > 0:
             self.store = ShardedModelStore(
                 init_params, agg_cfg=agg_cfg, n_shards=cfg.server_shards,
                 batch_aggregation=cfg.batch_aggregation,
                 max_coalesce=cfg.max_coalesce, masker=self.masker,
-                drain_timeout_s=cfg.drain_timeout_s)
+                drain_timeout_s=cfg.drain_timeout_s, telemetry=tel)
         else:
             self.store = ModelStore(
                 init_params, agg_cfg=agg_cfg,
                 batch_aggregation=cfg.batch_aggregation,
                 max_coalesce=cfg.max_coalesce, masker=self.masker,
-                drain_timeout_s=cfg.drain_timeout_s)
+                drain_timeout_s=cfg.drain_timeout_s, telemetry=tel)
         self.spaces = [
             ClusterSpace(s.name, IncrementalDBSCAN(s.eps, s.min_samples, s.metric))
             for s in cfg.spaces]
@@ -232,6 +249,32 @@ class FedCCL:
             report["per_client"] = self.accountant.client_report()
             report["per_model"] = self.accountant.model_report()
         return report
+
+    # ------------------------------------------------------------ telemetry
+    def metrics_report(self, fmt: str = "json"):
+        """Merged cross-site telemetry (``FedCCLConfig.telemetry=True``).
+
+        ``fmt="json"`` returns a dict — counters, gauges, and
+        p50/p95/p99/mean/max summaries per log-bucketed histogram
+        (``submit_latency_ns``, ``drain_fold_ns_host``/``_pallas``,
+        ``queue_depth``, ``staleness_at_fold``, ...).  ``fmt="prometheus"``
+        returns the text exposition page for a scrape endpoint.  Sites are
+        the parent plus every worker (pulled over the wire via ``obsdump``);
+        metric names/units are catalogued in docs/OBSERVABILITY.md."""
+        dump = self.store.telemetry_dump()
+        if fmt == "prometheus":
+            return prometheus_text(dump)
+        if fmt != "json":
+            raise ValueError(f"unknown metrics format {fmt!r} "
+                             "(expected 'json' or 'prometheus')")
+        return metrics_json(dump)
+
+    def write_trace(self, path) -> None:
+        """Write the run's span chains as Chrome trace-event JSON —
+        loadable in Perfetto (ui.perfetto.dev) or chrome://tracing.  One
+        Perfetto process per telemetry site; sampled submits draw flow
+        arrows across the parent -> worker process/TCP boundary."""
+        write_perfetto(self.store.telemetry_dump(), path)
 
     # ------------------------------------------------------------- inference
     def model_for(self, client_id: str, level: str = "auto"):

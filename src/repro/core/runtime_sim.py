@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.core.protocol import Client
 from repro.core.store import ModelStore
+from repro.obs import clock
 
 
 @dataclass(order=True)
@@ -122,6 +123,12 @@ class AsyncSimRuntime:
                     if batched and (self.store.pending_depth(level, key)
                                     >= self.store.max_coalesce):
                         self.store.drain(level, key)
+                tel = getattr(self.store, "telemetry", None)
+                if tel is not None:
+                    # instantaneous marker (sim time is virtual): one event
+                    # per completed client round on the real-clock timeline
+                    tel.event("client.round", clock.monotonic_ns(), 0,
+                              args={"client": client.spec.client_id})
                 self.completed_rounds[client.spec.client_id] += 1
                 if self.completed_rounds[client.spec.client_id] < target:
                     self._push(self.now + 1e-3, "round_start", ev.client_idx)

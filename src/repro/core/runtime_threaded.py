@@ -61,20 +61,29 @@ class AsyncThreadedRuntime:
         self.errors: list[BaseException] = []
         self.drain_workers: list[threading.Thread] = []
 
+    def _one_round(self, client: Client):
+        client.train_local()
+        for key in client.cluster_keys:
+            p, m = client.fetch(self.store, "cluster", key)
+            args = client.train_update(
+                p, m, self.store.model_key("cluster", key))
+            client.submit(self.store, "cluster", key, *args)
+        p, m = client.fetch(self.store, "global", None)
+        args = client.train_update(p, m, self.store.model_key("global"))
+        client.submit(self.store, "global", None, *args)
+
     def _client_loop(self, client: Client, idx: int):
         try:
             if self.stagger:
                 time.sleep(self.stagger * idx)
+            tel = getattr(self.store, "telemetry", None)
             for _ in range(self.rounds):
-                client.train_local()
-                for key in client.cluster_keys:
-                    p, m = client.fetch(self.store, "cluster", key)
-                    args = client.train_update(
-                        p, m, self.store.model_key("cluster", key))
-                    client.submit(self.store, "cluster", key, *args)
-                p, m = client.fetch(self.store, "global", None)
-                args = client.train_update(p, m, self.store.model_key("global"))
-                client.submit(self.store, "global", None, *args)
+                if tel is None:
+                    self._one_round(client)
+                else:
+                    with tel.span("client.round",
+                                  args={"client": client.spec.client_id}):
+                        self._one_round(client)
         except BaseException as e:  # surfaced by join()
             self.errors.append(e)
 

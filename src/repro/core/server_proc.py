@@ -47,7 +47,6 @@ from __future__ import annotations
 import multiprocessing as mp
 import queue as _queue
 import threading
-import time
 from collections import deque
 
 from repro.checkpoint.msgpack_ckpt import packb
@@ -57,10 +56,12 @@ from repro.core.transport import (      # noqa: F401  (re-exported: the
     WorkerTimeout,                      # are imported from here by old code)
     WorkerUnavailable,
 )
+from repro.obs import clock
+from repro.obs.record import Telemetry, current_trace
 
 # commands that produce exactly one reply; everything else is fire-and-forget
 REPLY_OPS = frozenset({"drain", "drain_shard", "gmeta", "greduce", "sdrain",
-                       "sync", "ping", "stop"})
+                       "sync", "ping", "obsdump", "stop"})
 
 
 # ------------------------------------------------------------------ wire fmt
@@ -86,11 +87,14 @@ def delta_from_wire(w):
 
 
 def make_seed_blob(shard_records, max_coalesce: int, agg_cfg,
-                   masker, mirror_sync_every: int = 1) -> bytes:
+                   masker, mirror_sync_every: int = 1,
+                   telemetry=None) -> bytes:
     """Everything a fresh worker needs, in wire format: its owned cluster
     records, the fold config, the masker parameters (the masker must live
-    worker-side — secure rounds are model-local per server process), and
-    the lazy-mirror-sync cadence."""
+    worker-side — secure rounds are model-local per server process), the
+    lazy-mirror-sync cadence, and the telemetry config (``None`` = off,
+    else ``{"sample_n": N}`` — the worker builds its own ``Telemetry``
+    and ships it back via the ``obsdump`` command)."""
     return packb({
         "records": [[key, params, meta_to_wire(meta)]
                     for key, params, meta in shard_records],
@@ -99,6 +103,7 @@ def make_seed_blob(shard_records, max_coalesce: int, agg_cfg,
         "masker": (None if masker is None
                    else [int(masker.seed), float(masker.mask_scale)]),
         "sync_every": int(mirror_sync_every),
+        "telemetry": telemetry,
     })
 
 
@@ -131,6 +136,11 @@ class ShardWorker:
 
             seed, scale = blob["masker"]
             self.masker = PairwiseMasker(seed=seed, mask_scale=scale)
+        tcfg = blob.get("telemetry")
+        self.tel = (Telemetry(sample_n=int(tcfg.get("sample_n", 1)),
+                              site=f"shard-{shard_idx}")
+                    if tcfg else None)
+        self._route = "pallas" if use_pallas else "host"
         # key -> {"params", "meta", "pending": deque[(seq, p, m, d)],
         #         "secure": {round_id: [(seq, client_id, masked, delta)]},
         #         "unsynced": [seqs folded but not yet shipped with params],
@@ -257,6 +267,12 @@ class ShardWorker:
                 out.append([key, acked, rec["params"],
                             meta_to_wire(rec["meta"])])
             return ["synced", out]
+        if op == "obsdump":
+            # telemetry snapshot: the worker's metrics + event rings, with
+            # its own wall/monotonic anchor so the parent can merge every
+            # site onto one timeline (repro.obs.export)
+            return ["obsdumped",
+                    self.tel.dump() if self.tel is not None else None]
         if op == "ping":
             return ["pong", self.idx, sorted(self.records)]
         raise ValueError(f"unknown worker op {op!r}")
@@ -277,11 +293,19 @@ class ShardWorker:
         from repro.core.aggregation import coalesced_aggregate
 
         rec = self.records[key]
+        tel = self.tel
         folded = fast = batches = 0
         acked: list[int] = []
+        # staleness-at-fold telescoping: ``base + cum`` is the round the
+        # model WOULD have reached folding strictly sequentially, so the
+        # per-update observation is independent of drain chunk boundaries —
+        # the cross-topology parity invariant (docs/OBSERVABILITY.md)
+        base_round = rec["meta"].round
+        cum_rounds = 0
         while rec["pending"]:
             take = min(len(rec["pending"]), self.max_coalesce)
             batch = [rec["pending"].popleft() for _ in range(take)]
+            t0 = clock.monotonic_ns() if tel is not None else 0
             try:
                 res = coalesced_aggregate(
                     rec["params"], rec["meta"],
@@ -289,6 +313,18 @@ class ShardWorker:
             except BaseException as e:
                 rec["pending"].extendleft(reversed(batch))
                 return ["error", key, f"{type(e).__name__}: {e}"]
+            if tel is not None:
+                dur = clock.monotonic_ns() - t0
+                tel.metrics.histogram(
+                    f"drain_fold_ns_{self._route}").observe(dur)
+                tel.metrics.histogram("coalesce_batch").observe(len(batch))
+                stale = tel.metrics.histogram("staleness_at_fold")
+                for _, _, m, d in batch:
+                    stale.observe(max(0, base_round + cum_rounds - m.round))
+                    cum_rounds += d.rounds
+                tel.event("worker.fold", t0, dur, current_trace(),
+                          {"key": key, "n": len(batch),
+                           "seqs": [int(s) for s, _, _, _ in batch]})
             rec["params"], rec["meta"] = res.params, res.meta
             folded += res.n_folded
             fast += res.n_fast_path
@@ -302,6 +338,10 @@ class ShardWorker:
         if self.sync_every > 1 and rec["drains"] < self.sync_every:
             return ["drained", key, folded, fast, batches, acked,
                     None, meta_to_wire(rec["meta"])]
+        if tel is not None:
+            # mirror-sync age: how many drain replies this params-carrying
+            # reply had accumulated (1 = eager sync, ~sync_every when lazy)
+            tel.metrics.histogram("mirror_sync_lag").observe(rec["drains"])
         full_acked, rec["unsynced"], rec["drains"] = rec["unsynced"], [], 0
         return ["drained", key, folded, fast, batches, full_acked,
                 rec["params"], meta_to_wire(rec["meta"])]
@@ -360,6 +400,7 @@ class ShardWorker:
         batch = rec["secure"].pop(round_id, [])
         if not batch:
             return ["sdrained", key, 0, 0, [], None, None]
+        t0 = clock.monotonic_ns() if self.tel is not None else 0
         try:
             submitted = {cid for _, cid, _, _ in batch}
             missing = sorted(set(expected_ids) - submitted)
@@ -378,6 +419,12 @@ class ShardWorker:
         except BaseException as e:
             rec["secure"][round_id] = batch + rec["secure"].get(round_id, [])
             return ["error", key, f"{type(e).__name__}: {e}"]
+        if self.tel is not None:
+            dur = clock.monotonic_ns() - t0
+            self.tel.metrics.histogram("secure_round_ns").observe(dur)
+            self.tel.event("worker.secure_fold", t0, dur, current_trace(),
+                           {"key": key, "n": len(batch),
+                            "missing": len(missing)})
         rec["params"], rec["meta"] = res.params, res.meta
         self.held.difference_update(int(s) for s, _, _, _ in batch)
         # secure replies always carry params (full-round folds are the sync
@@ -469,9 +516,9 @@ class ProcessWorkerHandle(Transport):
         instead of burning the whole deadline; a live-but-silent one raises
         ``WorkerTimeout`` at the deadline.  Caller holds the shard's rpc
         lock."""
-        deadline = time.monotonic() + timeout
+        deadline = clock.monotonic() + timeout
         while True:
-            remaining = deadline - time.monotonic()
+            remaining = deadline - clock.monotonic()
             try:
                 reply = self.rsp_q.get(timeout=max(min(remaining, 0.2), 0.01))
                 self.rx_bytes += len(reply)

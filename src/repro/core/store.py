@@ -74,6 +74,8 @@ from repro.core.server_proc import (
     meta_from_wire,
     meta_to_wire,
 )
+from repro.obs import clock
+from repro.obs.record import current_trace, trace_scope
 
 GLOBAL_KEY = "__global__"
 
@@ -148,7 +150,8 @@ class ModelRecord:
 # identically in both; only the global tier differs).  Callers hold rec.lock.
 
 def _drain_record_once(rec: ModelRecord, max_coalesce: int,
-                       agg_cfg: AggregationConfig):
+                       agg_cfg: AggregationConfig, tel=None,
+                       route: str = "host", key: str = ""):
     """Pop and fold one coalesced batch; returns the CoalesceResult or None.
 
     The two pending_lock critical sections keep ``effective_round`` readers
@@ -164,6 +167,8 @@ def _drain_record_once(rec: ModelRecord, max_coalesce: int,
         rec.inflight_rounds += rounds
     if not batch:
         return None
+    base_round = rec.meta.round
+    t0 = clock.monotonic_ns() if tel is not None else 0
     try:
         res = coalesced_aggregate(rec.params, rec.meta,
                                   [(u.params, u.meta, u.delta)
@@ -177,6 +182,22 @@ def _drain_record_once(rec: ModelRecord, max_coalesce: int,
             rec.pending.extendleft(reversed(batch))
             rec.inflight_rounds -= rounds
         raise
+    if tel is not None:
+        dur = clock.monotonic_ns() - t0
+        tel.metrics.histogram(f"drain_fold_ns_{route}").observe(dur)
+        tel.metrics.histogram("coalesce_batch").observe(len(batch))
+        stale = tel.metrics.histogram("staleness_at_fold")
+        # telescoped staleness: ``ModelMeta.accumulate`` advances ``round``
+        # additively by each delta's rounds, so measuring every update
+        # against base + rounds-folded-before-it is independent of chunk
+        # boundaries — the histogram is identical across every topology's
+        # drains of the same FIFO schedule (test_store_equivalence)
+        cum = 0
+        for u in batch:
+            stale.observe(max(0, base_round + cum - u.meta.round))
+            cum += u.delta.rounds
+        tel.event("fold", t0, dur, current_trace(),
+                  {"key": key, "n": len(batch)})
     with rec.pending_lock:
         rec.swap(res.params, res.meta)
         rec.inflight_rounds -= rounds
@@ -351,9 +372,15 @@ class _StoreBase(_RegistryBase):
     def __init__(self, init_params, cluster_keys=(),
                  agg_cfg: AggregationConfig = AggregationConfig(),
                  batch_aggregation: bool = False, max_coalesce: int = 16,
-                 masker=None, drain_timeout_s: float = 30.0):
+                 masker=None, drain_timeout_s: float = 30.0,
+                 telemetry=None):
         super().__init__(init_params, cluster_keys)
         self.agg_cfg = agg_cfg
+        # telemetry sink (repro.obs.record.Telemetry) or None = off; the
+        # hot paths pay one attribute check when disabled
+        self._tel = telemetry
+        self._route = "pallas" if agg_cfg.use_pallas else "host"
+        self._submit_seq = itertools.count()   # trace-sampling counter
         self.batch_aggregation = batch_aggregation
         self.max_coalesce = max(int(max_coalesce), 1)
         # bounded-drain deadline (FedCCLConfig.drain_timeout_s): worker-reply
@@ -438,7 +465,10 @@ class _StoreBase(_RegistryBase):
 
     @property
     def max_queue_depth(self) -> int:
-        return max(s.snapshot()[4] for s in self._all_submit_stats())
+        # default=0: a store whose flavor reports no submit sinks (or one
+        # inspected before its shards exist) must read as empty, not raise
+        return max((s.snapshot()[4] for s in self._all_submit_stats()),
+                   default=0)
 
     # -------------------------------------------------------------- protocol
     def handle_model_update(self, level: str, cluster_key: str | None,
@@ -450,7 +480,31 @@ class _StoreBase(_RegistryBase):
 
         In batched mode the update is enqueued instead (never blocks, always
         accepted); a later drain folds the whole queue at once.
+
+        With telemetry on, every Nth submit (``trace_sample_n``) mints a
+        trace id held in thread-local scope for the duration of the call —
+        downstream enqueues, inline folds and wire frames pick it up via
+        ``current_trace()``, which is what chains one submit's spans across
+        process/TCP boundaries (docs/OBSERVABILITY.md).
         """
+        tel = self._tel
+        if tel is None:
+            return self._handle_update(level, cluster_key, updated_params,
+                                       updated_meta, delta, blocking=blocking)
+        n = next(self._submit_seq)
+        trace = (n + 1) if tel.sampled(n) else 0
+        t0 = clock.monotonic_ns()
+        with trace_scope(trace):
+            ok = self._handle_update(level, cluster_key, updated_params,
+                                     updated_meta, delta, blocking=blocking)
+        dur = clock.monotonic_ns() - t0
+        tel.metrics.histogram("submit_latency_ns").observe(dur)
+        tel.event("submit", t0, dur, trace, {"level": level})
+        return ok
+
+    def _handle_update(self, level: str, cluster_key: str | None,
+                       updated_params, updated_meta: ModelMeta,
+                       delta: UpdateDelta, *, blocking: bool = True) -> bool:
         if self.batch_aggregation:
             self.enqueue_update(level, cluster_key, updated_params,
                                 updated_meta, delta)
@@ -477,10 +531,16 @@ class _StoreBase(_RegistryBase):
         rec = self._record(key)
         st = self._submit_stats(key)
         st.count_enqueue()          # before publish — see _SubmitStats
+        tel = self._tel
+        t0 = clock.monotonic_ns() if tel is not None else 0
         with rec.pending_lock:
             rec.pending.append(upd)
             depth = len(rec.pending)
         st.observe_depth(depth)
+        if tel is not None:
+            tel.metrics.histogram("queue_depth").observe(depth)
+            tel.event("enqueue", t0, clock.monotonic_ns() - t0,
+                      current_trace(), {"key": key, "depth": depth})
         return depth
 
     def enqueue_update(self, level: str, cluster_key: str | None,
@@ -521,7 +581,8 @@ class _StoreBase(_RegistryBase):
             # model lock first so concurrent drains stay FIFO; enqueues only
             # touch pending_lock and keep flowing while we aggregate
             with rec.lock:
-                res = _drain_record_once(rec, self.max_coalesce, self.agg_cfg)
+                res = _drain_record_once(rec, self.max_coalesce, self.agg_cfg,
+                                         self._tel, self._route, key)
             if res is None:
                 return drained
             # `res` is a drain-local CoalesceResult whose field name
@@ -560,11 +621,18 @@ class _StoreBase(_RegistryBase):
         """
         key = self._key(level, cluster_key)
         rec = self._record(key)
+        tel = self._tel
+        t0 = clock.monotonic_ns() if tel is not None else 0
         with rec.lock:
             folded, recovered = _drain_secure_record(
                 rec, key, round_id, expected_ids, self.masker, self.agg_cfg)
         if not folded:
             return 0
+        if tel is not None:
+            dur = clock.monotonic_ns() - t0
+            tel.metrics.histogram("secure_round_ns").observe(dur)
+            tel.event("secure_fold", t0, dur, current_trace(),
+                      {"key": key, "n": folded})
         self._count_drain(folded, 0, secure=True, recovered=recovered)
         return folded
 
@@ -588,6 +656,21 @@ class _StoreBase(_RegistryBase):
         (``FedCCLConfig.mirror_sync_every``)."""
         return 0
 
+    # ------------------------------------------------------------- telemetry
+    @property
+    def telemetry(self):
+        """The store's ``repro.obs.record.Telemetry`` sink (None = off)."""
+        return self._tel
+
+    def telemetry_dump(self) -> dict:
+        """Multi-site telemetry dump — ``{"sites": [...]}``, the shape every
+        ``repro.obs.export`` exporter consumes.  In-thread stores record at
+        one site; the process/TCP store overrides this to append one site
+        per worker (the ``obsdump`` wire command)."""
+        if self._tel is None:
+            return {"sites": []}
+        return {"sites": [self._tel.dump()]}
+
 
 class ModelStore(_StoreBase):
     """Thread-safe store for global + cluster models: one submit-side stats
@@ -596,10 +679,11 @@ class ModelStore(_StoreBase):
     def __init__(self, init_params, cluster_keys=(),
                  agg_cfg: AggregationConfig = AggregationConfig(),
                  batch_aggregation: bool = False, max_coalesce: int = 16,
-                 masker=None, drain_timeout_s: float = 30.0):
+                 masker=None, drain_timeout_s: float = 30.0,
+                 telemetry=None):
         super().__init__(init_params, cluster_keys, agg_cfg,
                          batch_aggregation, max_coalesce, masker,
-                         drain_timeout_s)
+                         drain_timeout_s, telemetry)
         self._submit = _SubmitStats()
 
     def _submit_stats(self, key: str) -> _SubmitStats:
@@ -711,11 +795,11 @@ class ShardedModelStore(_StoreBase):
                  agg_cfg: AggregationConfig = AggregationConfig(),
                  n_shards: int = 4, batch_aggregation: bool = False,
                  max_coalesce: int = 16, masker=None,
-                 drain_timeout_s: float = 30.0):
+                 drain_timeout_s: float = 30.0, telemetry=None):
         self.n_shards = max(int(n_shards), 1)
         super().__init__(init_params, cluster_keys, agg_cfg,
                          batch_aggregation, max_coalesce, masker,
-                         drain_timeout_s)
+                         drain_timeout_s, telemetry)
         self._shards = [_Shard(i) for i in range(self.n_shards)]
         self._gseq = itertools.count()      # global-queue arrival order
         # two-level fold instrumentation (under the shared _drain_lock)
@@ -752,10 +836,16 @@ class ShardedModelStore(_StoreBase):
         seq = next(self._gseq)
         sh = self._shards[seq % self.n_shards]
         sh.stats.count_enqueue()    # before publish — see _SubmitStats
+        tel = self._tel
+        t0 = clock.monotonic_ns() if tel is not None else 0
         with sh.lock:
             sh.global_pending.append((seq, upd))
             depth = len(sh.global_pending)
         sh.stats.observe_depth(depth)
+        if tel is not None:
+            tel.metrics.histogram("queue_depth").observe(depth)
+            tel.event("enqueue", t0, clock.monotonic_ns() - t0,
+                      current_trace(), {"key": GLOBAL_KEY, "depth": depth})
         return depth
 
     def pending_depth(self, level: str, cluster_key: str | None = None) -> int:
@@ -815,6 +905,8 @@ class ShardedModelStore(_StoreBase):
                 with rec.pending_lock:
                     rec.inflight_rounds -= total_rounds
                 return 0
+            tel = self._tel
+            t0 = clock.monotonic_ns() if tel is not None else 0
             try:
                 res = two_level_coalesced_aggregate(
                     rec.params, rec.meta, batches, self.agg_cfg,
@@ -830,6 +922,25 @@ class ShardedModelStore(_StoreBase):
                             sh.global_pending.extendleft(reversed(items))
                     rec.inflight_rounds -= total_rounds
                 raise
+            if tel is not None:
+                dur = clock.monotonic_ns() - t0
+                tel.metrics.histogram(
+                    f"drain_fold_ns_{self._route}").observe(dur)
+                tel.metrics.histogram("coalesce_batch").observe(n)
+                stale = tel.metrics.histogram("staleness_at_fold")
+                base_round = rec.meta.round
+                # seq order == arrival order == the flat store's FIFO, so
+                # the telescoped staleness per update matches the flat
+                # drain's exactly (see _drain_record_once)
+                cum = 0
+                for _, m, d in sorted(
+                        (s, u[1], u[2])
+                        for sq, b in zip(seqs, batches, strict=True)
+                        for s, u in zip(sq, b, strict=True)):
+                    stale.observe(max(0, base_round + cum - m.round))
+                    cum += d.rounds
+                tel.event("fold", t0, dur, current_trace(),
+                          {"key": GLOBAL_KEY, "n": n})
             with rec.pending_lock:
                 rec.swap(res.params, res.meta)
                 rec.inflight_rounds -= total_rounds
@@ -1054,7 +1165,8 @@ class ProcessShardedModelStore(_StoreBase):
                  n_shards: int = 4, batch_aggregation: bool = True,
                  max_coalesce: int = 16, masker=None,
                  drain_timeout_s: float = 30.0, inprocess: bool = False,
-                 server_hosts=None, mirror_sync_every: int = 1):
+                 server_hosts=None, mirror_sync_every: int = 1,
+                 telemetry=None):
         if server_hosts:
             # one worker per remote server; addresses fix the shard count
             self.server_hosts = [transport.parse_host(h)
@@ -1065,7 +1177,7 @@ class ProcessShardedModelStore(_StoreBase):
         self.n_shards = max(int(n_shards), 1)
         super().__init__(init_params, cluster_keys, agg_cfg,
                          batch_aggregation, max_coalesce, masker,
-                         drain_timeout_s)
+                         drain_timeout_s, telemetry)
         self.inprocess = bool(inprocess) and self.server_hosts is None
         self.mirror_sync_every = max(int(mirror_sync_every), 1)
         self._gseq = itertools.count()
@@ -1096,9 +1208,11 @@ class ProcessShardedModelStore(_StoreBase):
             # fedlint: unlocked-ok(copy-on-write registry snapshot read)
             params, meta = self._records[key].snapshot()
             recs.append((key, params, meta))
+        tcfg = ({"sample_n": self._tel.sample_n}
+                if self._tel is not None else None)
         return server_proc.make_seed_blob(recs, self.max_coalesce,
                                           self.agg_cfg, self.masker,
-                                          self.mirror_sync_every)
+                                          self.mirror_sync_every, tcfg)
 
     def close(self, timeout: float | None = None):
         """Stop every worker with a bounded join (terminate/kill fallback;
@@ -1176,9 +1290,9 @@ class ProcessShardedModelStore(_StoreBase):
             self._outbox_put(sh, raw)
 
     # ------------------------------------------------------- submit paths
-    def handle_model_update(self, level: str, cluster_key: str | None,
-                            updated_params, updated_meta: ModelMeta,
-                            delta: UpdateDelta, *, blocking: bool = True) -> bool:
+    def _handle_update(self, level: str, cluster_key: str | None,
+                       updated_params, updated_meta: ModelMeta,
+                       delta: UpdateDelta, *, blocking: bool = True) -> bool:
         # every update crosses a process boundary, so the store is
         # queue-based even in "direct" mode: a non-batched config folds
         # synchronously right after the enqueue (a coalesced fold of each
@@ -1194,6 +1308,8 @@ class ProcessShardedModelStore(_StoreBase):
                        delta: UpdateDelta) -> int:
         key = self._key(level, cluster_key)
         seq = next(self._gseq)
+        tel = self._tel
+        trace = current_trace() if tel is not None else 0
         if key == GLOBAL_KEY:
             # global tier: strike a round-robin worker slice (the two-level
             # fold is seq-sorted, so slice assignment is semantically free)
@@ -1210,6 +1326,7 @@ class ProcessShardedModelStore(_StoreBase):
                 ["sub", seq, key, updated_params, meta_to_wire(updated_meta),
                  delta_to_wire(delta)])
         sh.stats.count_enqueue()        # before publish — see _SubmitStats
+        t0 = clock.monotonic_ns() if tel is not None else 0
         with sh.journal_lock:
             sh.journal[seq] = _JournalEntry(kind, key, delta.rounds, raw)
             sh.pending_counts[key] = sh.pending_counts.get(key, 0) + 1
@@ -1217,6 +1334,16 @@ class ProcessShardedModelStore(_StoreBase):
             depth = sh.pending_counts[key]
             self._outbox_put(sh, raw)
         sh.stats.observe_depth(depth)
+        if tel is not None:
+            tel.metrics.histogram("queue_depth").observe(depth)
+            args = {"key": key, "depth": depth}
+            if trace:
+                # the wire seq links this submit to the worker-side fold
+                # event that consumes it (its args carry the batch's seqs),
+                # since outbox batching means the *frame* that ships the
+                # update may carry another call's trace context
+                args["seq"] = seq
+            tel.event("enqueue", t0, clock.monotonic_ns() - t0, trace, args)
         return depth
 
     def pending_depth(self, level: str, cluster_key: str | None = None) -> int:
@@ -1482,6 +1609,8 @@ class ProcessShardedModelStore(_StoreBase):
             n = len(flat)
             if n == 0:
                 return 0
+            tel = self._tel
+            t0 = clock.monotonic_ns() if tel is not None else 0
             plan = plan_coalesce(rec.meta, [(m, d) for _, _, m, d in flat],
                                  self.agg_cfg)
             by_shard: dict[int, list] = {k: [] for k in range(self.n_shards)}
@@ -1520,6 +1649,24 @@ class ProcessShardedModelStore(_StoreBase):
             except BaseException:
                 self._abort_global_drain()
                 raise
+            if tel is not None:
+                dur = clock.monotonic_ns() - t0
+                tel.metrics.histogram(
+                    f"drain_fold_ns_{self._route}").observe(dur)
+                tel.metrics.histogram("coalesce_batch").observe(n)
+                stale = tel.metrics.histogram("staleness_at_fold")
+                base_round = rec.meta.round
+                # parent-side only: the workers' greduce partials observe
+                # nothing for the global tier, or every update would be
+                # counted twice.  ``flat`` is seq-sorted, so the telescoped
+                # staleness matches the flat store's (see _drain_record_once)
+                cum = 0
+                for _, _, m, d in flat:
+                    stale.observe(max(0, base_round + cum - m.round))
+                    cum += d.rounds
+                tel.event("merge", t0, dur, current_trace(),
+                          {"key": GLOBAL_KEY, "n": n,
+                           "partials": len(partials)})
             with rec.pending_lock:
                 rec.swap(new_params, plan.meta)
                 for sh, sq in zip(self._proc_shards, acked, strict=True):
@@ -1566,8 +1713,13 @@ class ProcessShardedModelStore(_StoreBase):
     def _sync_shard(self, sh: _ProcShard) -> int:
         with self._drain_lock:
             self.n_mirror_syncs += 1
-        return self._rpc(sh, server_proc.packb(["sync"]),
-                         lambda reply: self._apply_synced(sh, reply))
+        tel = self._tel
+        if tel is None:
+            return self._rpc(sh, server_proc.packb(["sync"]),
+                             lambda reply: self._apply_synced(sh, reply))
+        with tel.span("mirror_sync", current_trace(), {"shard": sh.idx}):
+            return self._rpc(sh, server_proc.packb(["sync"]),
+                             lambda reply: self._apply_synced(sh, reply))
 
     def _sync_key(self, key: str):
         """Read barrier for one model: if its mirror is dirty (lazy mirror
@@ -1688,6 +1840,38 @@ class ProcessShardedModelStore(_StoreBase):
         tx = sum(sh.handle.tx_bytes for sh in self._proc_shards)
         rx = sum(sh.handle.rx_bytes for sh in self._proc_shards)
         return tx, rx
+
+    def telemetry_dump(self) -> dict:
+        """Parent site plus one site per live worker, fetched over the
+        worker transport (the ``obsdump`` command — docs/WIRE_PROTOCOL.md).
+        A worker that cannot reply is skipped: its rings died with it, and
+        the respawned worker's telemetry restarts empty (which is also why
+        journal replay can never double-count spans — only the surviving
+        session's events are ever dumped).  Wire-byte and dirty-mirror
+        gauges are stamped at dump time."""
+        if self._tel is None:
+            return {"sites": []}
+        tx, rx = self.wire_bytes()
+        gauge = self._tel.metrics.gauge
+        gauge("wire_tx_bytes").set(tx)
+        gauge("wire_rx_bytes").set(rx)
+        dirty = 0
+        for sh in self._proc_shards:
+            with sh.journal_lock:
+                dirty += len(sh.dirty)
+        gauge("dirty_mirrors").set(dirty)
+        sites = [self._tel.dump()]
+        if self._closed:
+            return {"sites": sites}
+        raw = server_proc.packb(["obsdump"])
+        for sh in self._proc_shards:
+            try:
+                dump = self._rpc(sh, raw, lambda reply: reply[1])
+            except BaseException:
+                continue
+            if dump is not None:
+                sites.append(dump)
+        return {"sites": sites}
 
     def agg_stats(self) -> dict:
         tx, rx = self.wire_bytes()

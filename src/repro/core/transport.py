@@ -24,12 +24,15 @@ byte — ``tests/test_wire_protocol.py`` holds the golden-bytes tests.
 Frame layout (all integers big-endian):
 
     offset  size  field
-    0       2     magic    b"FC"
-    2       1     version  0x01 (see the versioning rules in the spec)
-    3       1     kind     0x00 command (parent->worker),
-                           0x01 reply   (worker->parent)
-    4       4     length   payload byte length (u32)
-    8       len   payload  msgpack message (checkpoint array ext codec)
+    0       2     magic      b"FC"
+    2       1     version    0x02 (see the versioning rules in the spec)
+    3       1     kind       0x00 command (parent->worker),
+                             0x01 reply   (worker->parent)
+    4       4     length     payload byte length (u32)
+    8       8     trace_ctx  telemetry trace context (u64; 0 = untraced) —
+                             propagates one submit's span chain across the
+                             TCP boundary (``repro.obs.record``)
+    16      len   payload    msgpack message (checkpoint array ext codec)
 
 The connection handshake doubles as crash recovery: every (re)connect
 sends a ``["seed", shard_idx, seed_blob]`` command and waits for the
@@ -55,13 +58,15 @@ import time
 
 from repro.checkpoint.msgpack_ckpt import packb
 from repro.checkpoint.msgpack_ckpt import unpackb_np as unpackb
+from repro.obs import clock
+from repro.obs.record import current_trace
 
 FRAME_MAGIC = b"FC"
-WIRE_VERSION = 1
+WIRE_VERSION = 2
 KIND_COMMAND = 0x00
 KIND_REPLY = 0x01
-_HEADER = struct.Struct(">2sBBI")       # magic, version, kind, length
-HEADER_SIZE = _HEADER.size              # 8 bytes
+_HEADER = struct.Struct(">2sBBIQ")      # magic, version, kind, length,
+HEADER_SIZE = _HEADER.size              # trace_ctx — 16 bytes
 MAX_FRAME_BYTES = 1 << 31               # sanity bound on declared lengths
 
 
@@ -85,17 +90,19 @@ class FrameVersionError(FrameProtocolError):
 
 # -------------------------------------------------------------------- frames
 
-def pack_frame(payload: bytes, kind: int = KIND_COMMAND) -> bytes:
+def pack_frame(payload: bytes, kind: int = KIND_COMMAND,
+               trace_ctx: int = 0) -> bytes:
     """One wire frame, exactly as specified in ``docs/WIRE_PROTOCOL.md``."""
-    return _HEADER.pack(FRAME_MAGIC, WIRE_VERSION, kind, len(payload)) \
-        + payload
+    return _HEADER.pack(FRAME_MAGIC, WIRE_VERSION, kind, len(payload),
+                        trace_ctx) + payload
 
 
-def parse_header(header: bytes) -> tuple[int, int]:
-    """Validate an 8-byte frame header; returns (kind, payload_length).
-    Raises ``FrameProtocolError`` / ``FrameVersionError`` with actionable
-    messages instead of ever yielding garbage params downstream."""
-    magic, version, kind, length = _HEADER.unpack(header)
+def parse_header(header: bytes) -> tuple[int, int, int]:
+    """Validate a 16-byte frame header; returns (kind, payload_length,
+    trace_ctx).  Raises ``FrameProtocolError`` / ``FrameVersionError`` with
+    actionable messages instead of ever yielding garbage params
+    downstream."""
+    magic, version, kind, length, trace_ctx = _HEADER.unpack(header)
     if magic != FRAME_MAGIC:
         raise FrameProtocolError(
             f"not a FedCCL frame (magic {magic!r}, expected {FRAME_MAGIC!r})")
@@ -109,7 +116,7 @@ def parse_header(header: bytes) -> tuple[int, int]:
     if length > MAX_FRAME_BYTES:
         raise FrameProtocolError(f"frame length {length} exceeds sanity "
                                  f"bound {MAX_FRAME_BYTES}")
-    return kind, length
+    return kind, length, trace_ctx
 
 
 def _recv_exact(sock: socket.socket, n: int) -> bytes:
@@ -124,19 +131,19 @@ def _recv_exact(sock: socket.socket, n: int) -> bytes:
 
 
 def send_frame(sock: socket.socket, payload: bytes,
-               kind: int = KIND_COMMAND) -> int:
+               kind: int = KIND_COMMAND, trace_ctx: int = 0) -> int:
     """Write one frame; returns bytes put on the wire."""
-    frame = pack_frame(payload, kind)
+    frame = pack_frame(payload, kind, trace_ctx)
     sock.sendall(frame)
     return len(frame)
 
 
-def recv_frame(sock: socket.socket) -> tuple[int, bytes]:
-    """Read one frame; returns (kind, payload).  Raises ``ConnectionError``
-    on EOF, ``TimeoutError`` on the socket's own deadline, and the frame
-    errors above on malformed bytes."""
-    kind, length = parse_header(_recv_exact(sock, HEADER_SIZE))
-    return kind, (_recv_exact(sock, length) if length else b"")
+def recv_frame(sock: socket.socket) -> tuple[int, bytes, int]:
+    """Read one frame; returns (kind, payload, trace_ctx).  Raises
+    ``ConnectionError`` on EOF, ``TimeoutError`` on the socket's own
+    deadline, and the frame errors above on malformed bytes."""
+    kind, length, trace_ctx = parse_header(_recv_exact(sock, HEADER_SIZE))
+    return kind, (_recv_exact(sock, length) if length else b""), trace_ctx
 
 
 def parse_host(spec: str) -> tuple[str, int]:
@@ -184,10 +191,10 @@ class LoopbackShardServers:
              "--host", "127.0.0.1", "--port", str(port)],
             stdout=subprocess.PIPE, stderr=subprocess.DEVNULL,
             text=True, env=env)
-        deadline = time.monotonic() + self.startup_timeout
+        deadline = clock.monotonic() + self.startup_timeout
         line = ""
         while True:
-            if time.monotonic() >= deadline:
+            if clock.monotonic() >= deadline:
                 proc.kill()
                 raise RuntimeError(
                     f"shard server {i} did not announce within "
@@ -338,7 +345,7 @@ class TcpWorkerHandle(Transport):
 
     # ------------------------------------------------------------- lifecycle
     def _start(self, seed_blob: bytes):
-        deadline = time.monotonic() + self.connect_timeout
+        deadline = clock.monotonic() + self.connect_timeout
         last_err: Exception | None = None
         while True:
             try:
@@ -346,7 +353,7 @@ class TcpWorkerHandle(Transport):
                 break
             except OSError as e:
                 last_err = e
-                if time.monotonic() >= deadline:
+                if clock.monotonic() >= deadline:
                     raise WorkerUnavailable(
                         f"shard server {self.address[0]}:{self.address[1]} "
                         f"unreachable within {self.connect_timeout:.0f}s: "
@@ -395,7 +402,11 @@ class TcpWorkerHandle(Transport):
                     f"shard server {self.address[0]}:{self.address[1]} "
                     f"connection is down")
             try:
-                self.tx_bytes += send_frame(sock, raw, KIND_COMMAND)
+                # the thread-local trace context (set by the store's submit
+                # path for sampled submits, and by drain RPCs) rides the
+                # frame header across the TCP boundary
+                self.tx_bytes += send_frame(sock, raw, KIND_COMMAND,
+                                            current_trace())
             except OSError as e:
                 self._mark_broken()
                 raise WorkerUnavailable(
@@ -413,7 +424,7 @@ class TcpWorkerHandle(Transport):
                 f"connection is down")
         try:
             sock.settimeout(max(timeout, 1e-3))
-            kind, payload = recv_frame(sock)
+            kind, payload, _ = recv_frame(sock)
         except TimeoutError:
             raise WorkerTimeout(
                 f"shard server {self.address[0]}:{self.address[1]} missed "

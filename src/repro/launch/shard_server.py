@@ -41,6 +41,7 @@ from repro.core.transport import (
     recv_frame,
     send_frame,
 )
+from repro.obs.record import trace_scope
 
 
 def serve_session(conn: socket.socket) -> bool:
@@ -51,7 +52,7 @@ def serve_session(conn: socket.socket) -> bool:
     worker = None
     while True:
         try:
-            _, raw = recv_frame(conn)
+            _, raw, trace_ctx = recv_frame(conn)
         except FrameProtocolError as e:
             # a malformed or version-mismatched frame is answered loudly
             # (the parent raises it verbatim) and ends the session — a
@@ -88,7 +89,11 @@ def serve_session(conn: socket.socket) -> bool:
             send_frame(conn, packb(["stopped", worker.idx]), KIND_REPLY)
             return True
         try:
-            reply = worker.handle(msg)
+            # restore the parent's trace context from the frame header, so
+            # spans the worker records while handling this command join the
+            # originating submit's span chain (docs/OBSERVABILITY.md)
+            with trace_scope(trace_ctx):
+                reply = worker.handle(msg)
         except BaseException as e:
             reply = ["error", op, f"{type(e).__name__}: {e}"]
             if op not in REPLY_OPS:          # deferred, like worker_main

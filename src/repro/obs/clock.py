@@ -1,0 +1,34 @@
+"""The one sanctioned clock site.
+
+Everything in ``src/repro/core`` and ``src/repro/obs`` reads clocks through
+this module — fedlint enforces it statically (FED503 bans wall-clock reads
+in the deterministic core, FED602 bans raw monotonic reads outside this
+file), so there is exactly one place to audit for "does anything order work
+by clock time?" (nothing does: monotonic values time *durations* and
+deadlines; the single wall-clock read below only anchors them).
+
+Monotonic timestamps are comparable across processes on the same host
+(``CLOCK_MONOTONIC`` is system-wide on Linux), but NOT across hosts — a
+remote shard server's event timestamps live on its own monotonic axis.
+``wall_anchor()`` captures a ``(wall_ns, mono_ns)`` pair at ``Telemetry``
+construction; merging telemetry dumps re-anchors every event onto the wall
+axis via ``wall_ns + (t - mono_ns)``, which is exact on one host and
+NTP-accurate across hosts.
+"""
+
+from __future__ import annotations
+
+import time
+
+#: duration/deadline clocks — aliases, so call sites read
+#: ``clock.monotonic()`` and fedlint can pin this file as the only
+#: place the underlying ``time`` functions appear.
+monotonic = time.monotonic
+monotonic_ns = time.monotonic_ns
+
+
+def wall_anchor() -> tuple[int, int]:
+    """``(wall_ns, mono_ns)`` sampled back to back — the pair that maps
+    this process's monotonic timestamps onto the wall clock.  The ONE
+    wall-clock read in the repo (fedlint FED503 exempts only this file)."""
+    return (time.time_ns(), time.monotonic_ns())

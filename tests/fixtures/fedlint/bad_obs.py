@@ -1,0 +1,26 @@
+"""Golden-bad fixture for the observability rules (FED601/FED602).
+
+Scanned by tests only (the CLI walker skips ``fixtures``); every finding
+below is asserted by ``tests/test_fedlint.py`` with the fixture mounted
+at a ``src/repro/core/`` path.
+"""
+
+import logging                                   # FED601: logging import
+import time
+
+
+def noisy_drain(store):
+    print("draining", store)                     # FED601: print in core
+    logging.info("drained")                      # (import already flagged)
+
+
+def timed_fold(fold):
+    t0 = time.monotonic_ns()                     # FED602: direct read
+    fold()
+    return time.perf_counter() - t0              # FED602: direct read
+
+
+def hatched_probe():
+    # fedlint: obs-ok(one-shot debug probe in a cold error path)
+    print("worker wedged")                       # hatched: not a finding
+    return time.monotonic()                      # FED602: hatch is line-local

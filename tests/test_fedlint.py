@@ -23,6 +23,7 @@ from scripts.fedlint.rules.locks import (  # noqa: E402
     LockDisciplineRule,
     LockOrderRule,
 )
+from scripts.fedlint.rules.obs import ObservabilityRule  # noqa: E402
 from scripts.fedlint.rules.wire import TRANSPORT, WireDriftRule  # noqa: E402
 
 FIXTURES = REPO_ROOT / "tests" / "fixtures" / "fedlint"
@@ -135,7 +136,7 @@ def _wire_findings(old: str, new: str):
 
 
 def test_wire_version_bump_without_doc_update_fails():
-    findings = _wire_findings("WIRE_VERSION = 1", "WIRE_VERSION = 2")
+    findings = _wire_findings("WIRE_VERSION = 2", "WIRE_VERSION = 3")
     assert any(f.rule == "FED402" and "WIRE_VERSION" in f.message
                for f in findings)
 
@@ -189,9 +190,64 @@ def test_determinism_seeded_and_hatched_uses_pass():
 def test_determinism_rule_scope():
     rule = DeterminismRule()
     assert rule.applies("src/repro/core/store.py")
+    assert rule.applies("src/repro/obs/record.py")
     assert rule.applies("tests/test_store_equivalence.py")
     assert not rule.applies("src/repro/models/lstm.py")
     assert not rule.applies("tests/test_clustering.py")
+
+
+def test_determinism_clock_shim_exempt_from_wall_clock_ban():
+    """repro.obs.clock is the ONE sanctioned wall-clock site; the same
+    read anywhere else in scope stays a FED503 finding."""
+    clock_rel = "src/repro/obs/clock.py"
+    src = SourceFile(REPO_ROOT / clock_rel, rel=clock_rel)
+    assert [f for f in DeterminismRule().check(src)
+            if f.rule == "FED503"] == []
+    elsewhere = SourceFile(REPO_ROOT / clock_rel,
+                           rel="src/repro/core/sneaky_clock.py")
+    assert any(f.rule == "FED503"
+               for f in DeterminismRule().check(elsewhere))
+
+
+# =========================================================================
+# observability (FED601/FED602)
+# =========================================================================
+
+
+def test_observability_fixture_findings():
+    src = SourceFile(FIXTURES / "bad_obs.py",
+                     rel="src/repro/core/bad_obs.py")
+    got = _ids(ObservabilityRule().check(src))
+    assert got == [
+        ("FED601", 8),      # import logging
+        ("FED601", 13),     # print() in core
+        ("FED602", 18),     # time.monotonic_ns()
+        ("FED602", 20),     # time.perf_counter()
+        ("FED602", 26),     # hatch above covers only the print line
+    ]
+
+
+def test_observability_hatched_print_suppressed():
+    src = SourceFile(FIXTURES / "bad_obs.py",
+                     rel="src/repro/core/bad_obs.py")
+    flagged = {f.line for f in ObservabilityRule().check(src)}
+    text = src.text.splitlines()
+    hatched = next(i for i, ln in enumerate(text, 1)
+                   if "hatched: not a finding" in ln)
+    assert hatched not in flagged
+
+
+def test_observability_rule_scope_and_clock_sanction():
+    rule = ObservabilityRule()
+    assert rule.applies("src/repro/core/store.py")
+    assert rule.applies("src/repro/obs/record.py")
+    # CLI entry points and examples may print
+    assert not rule.applies("src/repro/launch/shard_server.py")
+    assert not rule.applies("examples/quickstart.py")
+    # the clock shim itself reads time.monotonic freely (FED602 exempt)
+    clock_rel = "src/repro/obs/clock.py"
+    src = SourceFile(REPO_ROOT / clock_rel, rel=clock_rel)
+    assert rule.check(src) == []
 
 
 # =========================================================================

@@ -1,0 +1,316 @@
+"""Telemetry layer unit tests: log-bucketed histograms (observe, merge,
+percentiles), event rings (overwrite-oldest, dropped accounting), the
+thread-local trace context, the exporters (JSON, Prometheus text, Perfetto
+trace events with cross-site flow chains), and the store-side hooks a
+single-process ``ModelStore`` exercises end to end.  Cross-topology parity
+lives in ``test_store_equivalence.py``; wire propagation in
+``test_tcp_transport.py`` / ``test_wire_protocol.py``.
+"""
+
+import json
+import threading
+
+import numpy as np
+
+from repro.core.aggregation import AggregationConfig, ModelMeta, UpdateDelta
+from repro.core.store import ModelStore
+from repro.obs.export import (
+    merged_metrics,
+    metrics_json,
+    perfetto_trace,
+    prometheus_text,
+    write_perfetto,
+)
+from repro.obs.metrics import (
+    LogHistogram,
+    MetricsRegistry,
+    bucket_le,
+    merge_hist_dumps,
+    merge_metric_dumps,
+    percentile_from_buckets,
+)
+from repro.obs.record import Telemetry, current_trace, trace_scope
+
+# =========================================================================
+# metrics: log-bucketed histograms
+# =========================================================================
+
+
+def test_log_histogram_bucketing_by_bit_length():
+    h = LogHistogram()
+    for v in (0, 1, 2, 3, 1000, -5):
+        h.observe(v)
+    s = h.snapshot()
+    assert s["count"] == 6 and s["max"] == 1000 and s["sum"] == 1006
+    assert s["buckets"][0] == 2          # 0 and clamped -5
+    assert s["buckets"][1] == 1          # 1
+    assert s["buckets"][2] == 2          # 2, 3
+    assert s["buckets"][1000 .bit_length()] == 1
+    assert bucket_le(0) == 0 and bucket_le(3) == 7
+
+
+def test_log_histogram_merge_equals_single_recorder():
+    rng = np.random.default_rng(7)
+    vals = [int(v) for v in rng.integers(0, 1 << 20, size=200)]
+    one, a, b = LogHistogram(), LogHistogram(), LogHistogram()
+    for i, v in enumerate(vals):
+        one.observe(v)
+        (a if i % 2 else b).observe(v)
+    assert merge_hist_dumps(a.snapshot(), b.snapshot()) == one.snapshot()
+
+
+def test_percentiles_within_one_octave():
+    h = LogHistogram()
+    for _ in range(100):
+        h.observe(1000)                  # bucket 10: [512, 1024)
+    s = h.snapshot()
+    p50 = percentile_from_buckets(s, 0.50)
+    assert 512 <= p50 < 1024             # geometric midpoint of the octave
+    assert percentile_from_buckets(s, 0.99) == p50
+    assert percentile_from_buckets({"buckets": [0] * 64, "count": 0,
+                                    "sum": 0, "max": 0}, 0.5) == 0.0
+
+
+def test_registry_dump_merge_gauges_sum_counters_add():
+    r1, r2 = MetricsRegistry(), MetricsRegistry()
+    r1.counter("folds").inc(3)
+    r2.counter("folds").inc(4)
+    r1.gauge("wire_tx_bytes").set(100)
+    r2.gauge("wire_tx_bytes").set(50)
+    r1.histogram("lat").observe(8)
+    r2.histogram("lat").observe(9)
+    m = merge_metric_dumps(r1.dump(), r2.dump())
+    assert m["counters"]["folds"] == 7
+    assert m["gauges"]["wire_tx_bytes"] == 150.0   # per-site totals sum
+    assert m["histograms"]["lat"]["count"] == 2
+
+
+# =========================================================================
+# event rings + trace context
+# =========================================================================
+
+
+def test_ring_overwrites_oldest_and_counts_dropped():
+    tel = Telemetry(ring_cap=4)
+    for i in range(7):
+        tel.event(f"e{i}", t0_ns=i, dur_ns=0)
+    dump = tel.dump()
+    assert dump["dropped"] == 3
+    assert [ev[2] for ev in dump["events"]] == ["e3", "e4", "e5", "e6"]
+
+
+def test_dump_merges_threads_in_timestamp_order():
+    tel = Telemetry()
+    tel.event("main", t0_ns=5, dur_ns=0)
+
+    def other():
+        tel.event("worker", t0_ns=1, dur_ns=0)
+
+    t = threading.Thread(target=other)
+    t.start()
+    t.join()
+    names = [ev[2] for ev in tel.dump()["events"]]
+    assert names == ["worker", "main"]
+
+
+def test_trace_scope_nests_and_restores():
+    assert current_trace() == 0
+    with trace_scope(7):
+        assert current_trace() == 7
+        with trace_scope(9):
+            assert current_trace() == 9
+        assert current_trace() == 7
+    assert current_trace() == 0
+
+
+def test_trace_context_is_thread_local():
+    seen = {}
+
+    def other():
+        seen["other"] = current_trace()
+
+    with trace_scope(5):
+        t = threading.Thread(target=other)
+        t.start()
+        t.join()
+    assert seen["other"] == 0
+
+
+def test_sampling_thins_traces_only():
+    tel = Telemetry(sample_n=3)
+    assert [tel.sampled(n) for n in range(7)] == \
+        [True, False, False, True, False, False, True]
+    assert Telemetry().sample_n == 1     # default: trace everything
+
+
+def test_span_records_one_event_with_duration():
+    tel = Telemetry()
+    with tel.span("mirror_sync", trace=3, args={"shard": 1}):
+        pass
+    ((t0, dur, name, trace, tid, args),) = tel.dump()["events"]
+    assert name == "mirror_sync" and trace == 3 and args == {"shard": 1}
+    assert dur >= 0 and tid == threading.get_ident()
+
+
+# =========================================================================
+# exporters
+# =========================================================================
+
+
+def _site(name, events=(), metrics=None):
+    reg = MetricsRegistry()
+    for mname, vals in (metrics or {}).items():
+        for v in vals:
+            reg.histogram(mname).observe(v)
+    return {"site": name, "anchor": [1_000_000, 0], "sample_n": 1,
+            "dropped": 0, "events": [list(e) for e in events],
+            "metrics": reg.dump()}
+
+
+def test_metrics_json_shape_and_percentile_fields():
+    dump = {"sites": [_site("parent", metrics={"lat": [10, 20, 3000]}),
+                      _site("shard-0", metrics={"lat": [15]})]}
+    rep = metrics_json(dump)
+    assert rep["sites"] == ["parent", "shard-0"]
+    h = rep["histograms"]["lat"]
+    assert h["count"] == 4 and h["max"] == 3000
+    assert set(h) == {"count", "sum", "mean", "max", "p50", "p95", "p99"}
+    assert h["p50"] <= h["p95"] <= h["p99"] <= 4096   # octave bound
+
+
+def test_prometheus_text_format():
+    dump = {"sites": [_site("parent", metrics={"lat_ns": [1, 1, 900]})]}
+    text = prometheus_text(dump)
+    lines = text.splitlines()
+    assert "# TYPE fedccl_lat_ns histogram" in lines
+    assert 'fedccl_lat_ns_bucket{le="1"} 2' in lines
+    assert 'fedccl_lat_ns_bucket{le="+Inf"} 3' in lines
+    assert "fedccl_lat_ns_sum 902" in lines
+    assert "fedccl_lat_ns_count 3" in lines
+    # cumulative buckets are monotone
+    cum = [int(ln.rsplit(" ", 1)[1]) for ln in lines if "_bucket{" in ln]
+    assert cum == sorted(cum)
+
+
+def test_perfetto_chains_flow_across_sites_via_trace_and_seq():
+    """The cross-boundary join: submit/enqueue share a trace id on the
+    parent; the worker fold shares the wire seq with the enqueue — the
+    exporter must emit one flow chain crossing both process tracks."""
+    # event tuples: (t0, dur, name, trace, tid, args)
+    parent = _site("parent", events=[
+        (100, 50, "submit", 5, 1, None),
+        (110, 10, "enqueue", 5, 1, {"key": "c0", "seq": 9}),
+    ])
+    worker = _site("shard-0", events=[
+        (400, 30, "worker.fold", 0, 2, {"key": "c0", "seqs": [9]}),
+    ])
+    trace = perfetto_trace({"sites": [parent, worker]})
+    evs = trace["traceEvents"]
+    flows = [e for e in evs if e["ph"] in ("s", "t", "f")]
+    # chain 5 (trace) links submit->enqueue; chain 10 (seq 9 + 1) links
+    # enqueue->worker.fold — so flows appear on BOTH pids
+    assert {f["pid"] for f in flows} == {0, 1}
+    assert {f["id"] for f in flows} == {5, 10}
+    x = [e for e in evs if e["ph"] == "X"]
+    assert {e["name"] for e in x} == {"submit", "enqueue", "worker.fold"}
+    # re-anchoring: ts = (wall + (t - mono)) / 1000 us
+    assert min(e["ts"] for e in x) == (1_000_000 + 100) / 1000.0
+
+
+def test_perfetto_trace_equals_seq_plus_one_joins_chain_once():
+    """Regression: stores mint trace ids from the submit seq counter, so a
+    traced enqueue carries ``trace == seq + 1`` — it must appear in that
+    flow chain once, not once per linking scheme."""
+    parent = _site("parent", events=[
+        (100, 50, "submit", 10, 1, None),
+        (110, 10, "enqueue", 10, 1, {"key": "c0", "seq": 9}),
+    ])
+    worker = _site("shard-0", events=[
+        (400, 30, "worker.fold", 0, 2, {"key": "c0", "seqs": [9]}),
+    ])
+    evs = perfetto_trace({"sites": [parent, worker]})["traceEvents"]
+    flows = [e for e in evs if e["ph"] in ("s", "t", "f")]
+    assert {f["id"] for f in flows} == {10}      # one merged chain
+    assert [f["ph"] for f in sorted(flows, key=lambda f: f["ts"])] == \
+        ["s", "t", "f"]                          # each hop exactly once
+    assert {f["pid"] for f in flows} == {0, 1}
+
+
+def test_perfetto_singleton_chains_emit_no_flow():
+    dump = {"sites": [_site("parent",
+                            events=[(1, 1, "submit", 42, 1, None)])]}
+    evs = perfetto_trace(dump)["traceEvents"]
+    assert [e["ph"] for e in evs if e["ph"] not in ("M",)] == ["X"]
+
+
+def test_write_perfetto_is_loadable_json(tmp_path):
+    path = tmp_path / "trace.json"
+    write_perfetto({"sites": [_site("parent",
+                                    events=[(1, 2, "fold", 0, 1, None)])]},
+                   path)
+    loaded = json.loads(path.read_text())
+    assert loaded["displayTimeUnit"] == "ms"
+    assert any(e.get("name") == "fold" for e in loaded["traceEvents"])
+
+
+# =========================================================================
+# store hooks (single-process end to end) + regressions
+# =========================================================================
+
+
+def _tree(rng):
+    return {"w": rng.normal(size=8).astype(np.float32)}
+
+
+def test_max_queue_depth_empty_store_is_zero_not_valueerror():
+    """Regression: the bare ``max(...)`` raised ValueError when a store
+    reported no submit sinks (e.g. inspected before its shards exist)."""
+    store = ModelStore(_tree(np.random.default_rng(0)), ["c0"])
+
+    class _NoSinks(ModelStore):
+        def _all_submit_stats(self):
+            return []
+
+    empty = _NoSinks(_tree(np.random.default_rng(0)), ["c0"])
+    assert empty.max_queue_depth == 0
+    assert store.max_queue_depth == 0        # fresh store: nothing queued
+
+
+def test_model_store_records_metrics_events_and_trace_chain():
+    rng = np.random.default_rng(1)
+    tel = Telemetry()
+    store = ModelStore(_tree(rng), ["c0"],
+                       agg_cfg=AggregationConfig(sequential_fast_path=False),
+                       batch_aggregation=True, max_coalesce=4, telemetry=tel)
+    for _ in range(3):
+        store.handle_model_update("cluster", "c0", _tree(rng),
+                                  ModelMeta(5, 1, 1), UpdateDelta(5, 1, 1))
+    store.drain_all()
+    dump = store.telemetry_dump()
+    assert [s["site"] for s in dump["sites"]] == ["parent"]
+
+    m = merged_metrics(dump)
+    assert m["histograms"]["submit_latency_ns"]["count"] == 3
+    assert m["histograms"]["queue_depth"]["count"] == 3
+    assert m["histograms"]["coalesce_batch"]["count"] >= 1
+    assert m["histograms"]["staleness_at_fold"]["count"] == 3
+    assert m["histograms"]["drain_fold_ns_host"]["count"] >= 1
+
+    events = dump["sites"][0]["events"]
+    by_name = {}
+    for t0, dur, name, trace, tid, args in events:
+        by_name.setdefault(name, []).append(trace)
+    # every submit minted a distinct trace id; its enqueue adopted it
+    assert sorted(by_name["submit"]) == sorted(by_name["enqueue"])
+    assert len(set(by_name["submit"])) == 3 and 0 not in by_name["submit"]
+
+
+def test_telemetry_off_store_records_nothing():
+    rng = np.random.default_rng(2)
+    store = ModelStore(_tree(rng), ["c0"], batch_aggregation=True)
+    store.handle_model_update("cluster", "c0", _tree(rng),
+                              ModelMeta(5, 1, 1), UpdateDelta(5, 1, 1))
+    store.drain_all()
+    assert store.telemetry is None
+    assert store.telemetry_dump() == {"sites": []}
+    assert current_trace() == 0              # no leaked trace context

@@ -65,6 +65,8 @@ from repro.core.store import (
     ProcessShardedModelStore,
     ShardedModelStore,
 )
+from repro.obs.export import merged_metrics
+from repro.obs.record import Telemetry
 from repro.privacy.secure_agg import PairwiseMasker
 
 NOFAST = AggregationConfig(sequential_fast_path=False)
@@ -286,6 +288,68 @@ def test_random_drain_orderings_property(seed):
             assert store.meta(*lk) == seq[m][1]
             assert_trees_close(store.params(*lk), seq[m][0],
                                msg=f"{type(store).__name__} {m}")
+
+
+# =========================================================================
+# telemetry parity: same schedule, same observations, every topology
+# =========================================================================
+
+
+@pytest.mark.slow
+def test_telemetry_parity_across_topologies(tcp_loopback_hosts):
+    """The same pre-built schedule observed on every topology must report
+    the same telemetry, wherever the events were physically recorded
+    (parent thread, worker process, remote TCP server): identical
+    staleness histograms — telescoped observation makes them independent
+    of drain chunk boundaries, so different drain RNGs below are free —
+    and one submit + one enqueue event per update."""
+    rng = np.random.default_rng(42)
+    init = make_tree(rng)
+    keys = [f"loc:{i}" for i in range(5)]
+    models = [GLOBAL_KEY] + keys
+    events = make_schedule(rng, models, n_updates=40)
+
+    def build(kind, tel):
+        if kind == "flat":
+            return ModelStore(init, keys, agg_cfg=NOFAST,
+                              batch_aggregation=True, max_coalesce=5,
+                              telemetry=tel)
+        if kind == "sharded":
+            return ShardedModelStore(init, keys, agg_cfg=NOFAST, n_shards=4,
+                                     batch_aggregation=True, max_coalesce=5,
+                                     telemetry=tel)
+        if kind == "process":
+            return ProcessShardedModelStore(init, keys, agg_cfg=NOFAST,
+                                            n_shards=4,
+                                            batch_aggregation=True,
+                                            max_coalesce=5, inprocess=True,
+                                            telemetry=tel)
+        return ProcessShardedModelStore(init, keys, agg_cfg=NOFAST,
+                                        batch_aggregation=True,
+                                        max_coalesce=5,
+                                        server_hosts=tcp_loopback_hosts,
+                                        drain_timeout_s=60.0, telemetry=tel)
+
+    results = {}
+    for i, kind in enumerate(("flat", "sharded", "process", "tcp")):
+        store = build(kind, Telemetry())
+        replay_through_store(store, events, np.random.default_rng(10 + i))
+        dump = store.telemetry_dump()      # before close: obsdump needs
+        if hasattr(store, "close"):        # live workers
+            store.close()
+        merged = merged_metrics(dump)
+        names = [ev[2] for site in dump["sites"] for ev in site["events"]]
+        results[kind] = {
+            "staleness": merged["histograms"]["staleness_at_fold"],
+            "submits": names.count("submit"),
+            "enqueues": names.count("enqueue"),
+        }
+
+    ref = results["flat"]
+    assert ref["submits"] == ref["enqueues"] == len(events)
+    assert ref["staleness"]["count"] == len(events)   # once per update
+    for kind, got in results.items():
+        assert got == ref, kind
 
 
 # =========================================================================

@@ -24,6 +24,7 @@ from repro.core.aggregation import ModelMeta, UpdateDelta
 from repro.core.runtime_threaded import AsyncThreadedRuntime
 from repro.core.store import GLOBAL_KEY, ModelStore, ProcessShardedModelStore
 from repro.core.transport import LoopbackShardServers
+from repro.obs.record import Telemetry
 
 from test_store_equivalence import (
     NOFAST,
@@ -109,6 +110,44 @@ def test_tcp_connection_loss_reconnect_replays_journal(init_tree,
             assert store.meta(*lk).round == er         # no loss, no double
             assert store.effective_round(*lk) == er
             assert store.pending_depth(*lk) == 0
+
+
+@pytest.mark.slow
+def test_tcp_replay_does_not_double_count_spans(init_tree,
+                                                tcp_loopback_hosts):
+    """Connection loss + journal replay must not duplicate telemetry:
+    re-seeding a reconnected server replaces its recorders together with
+    its state, so the final dump shows each folded wire seq in exactly
+    one ``worker.fold`` event — the pre-drop session's events (including
+    folds the replay re-runs) are never re-dumped."""
+    keys = ["c0", "c1"]
+    rng = np.random.default_rng(8)
+    tel = Telemetry()
+    with _mk(init_tree, tcp_loopback_hosts[:2], keys=keys, agg_cfg=NOFAST,
+             max_coalesce=4, telemetry=tel) as store:
+        n2 = 0
+        for i in range(8):
+            store.handle_model_update("cluster", keys[i % 2], make_tree(rng),
+                                      ModelMeta(5, 1, 1),
+                                      UpdateDelta(5, 1, 1))
+            if i >= 4:
+                n2 += 1                    # submitted after the drop
+            if i == 3:
+                store.drain_all()          # folded + params-acked
+                for sh in store._proc_shards:
+                    sh.handle.kill()       # sever every connection
+        store.drain_all()                  # reconnect, re-seed, replay
+        assert store.agg_stats()["respawns"] >= 2
+        dump = store.telemetry_dump()      # before close (live workers)
+
+    folded_seqs = [s for site in dump["sites"] for ev in site["events"]
+                   if ev[2] == "worker.fold" for s in (ev[5] or {})["seqs"]]
+    assert len(folded_seqs) == len(set(folded_seqs))   # no span twice
+    # every post-drop submit folded in the surviving session, exactly once
+    assert len(folded_seqs) >= n2
+    # and the parent's own span chain is intact: one submit per update
+    parent = dump["sites"][0]["events"]
+    assert sum(1 for ev in parent if ev[2] == "submit") == 8
 
 
 @pytest.mark.slow

@@ -44,44 +44,55 @@ from repro.core.transport import (
 # =========================================================================
 
 
+def _hdr(version: int, kind: int, length: int, trace: int = 0) -> bytes:
+    """Hand-rolled spec header — deliberately not via pack_frame."""
+    return (b"FC" + bytes([version, kind]) + length.to_bytes(4, "big")
+            + trace.to_bytes(8, "big"))
+
+
 def test_frame_golden_bytes_match_spec():
     """The normative layout: 2B magic "FC", 1B version, 1B kind, 4B
-    big-endian length, then the payload verbatim."""
+    big-endian length, 8B big-endian trace_ctx (0 = untraced), then the
+    payload verbatim."""
     frame = pack_frame(b"hello", KIND_COMMAND)
-    assert frame == b"FC" + bytes([1, 0]) + (5).to_bytes(4, "big") + b"hello"
+    assert frame == _hdr(2, 0, 5) + b"hello"
     reply = pack_frame(b"", KIND_REPLY)
-    assert reply == b"FC" + bytes([1, 1]) + (0).to_bytes(4, "big")
-    assert HEADER_SIZE == 8
-    assert FRAME_MAGIC == b"FC" and WIRE_VERSION == 1
+    assert reply == _hdr(2, 1, 0)
+    traced = pack_frame(b"hi", KIND_COMMAND, trace_ctx=0xDEAD_BEEF)
+    assert traced == _hdr(2, 0, 2, 0xDEAD_BEEF) + b"hi"
+    assert HEADER_SIZE == 16
+    assert FRAME_MAGIC == b"FC" and WIRE_VERSION == 2
 
 
 def test_parse_header_roundtrip():
-    kind, length = parse_header(pack_frame(b"xyz", KIND_REPLY)[:HEADER_SIZE])
-    assert (kind, length) == (KIND_REPLY, 3)
+    kind, length, trace = parse_header(
+        pack_frame(b"xyz", KIND_REPLY, trace_ctx=7)[:HEADER_SIZE])
+    assert (kind, length, trace) == (KIND_REPLY, 3, 7)
 
 
 def test_frame_bad_magic_rejected():
     with pytest.raises(FrameProtocolError, match="not a FedCCL frame"):
-        parse_header(b"XX" + bytes([1, 0]) + (0).to_bytes(4, "big"))
+        parse_header(b"XX" + _hdr(2, 0, 0)[2:])
 
 
 def test_frame_version_mismatch_raises_clear_error():
     """A peer speaking a different wire version must raise an actionable
-    error — never unpack garbage params (versioning rules in the spec)."""
-    future = b"FC" + bytes([2, 0]) + (0).to_bytes(4, "big")
+    error — never unpack garbage params (versioning rules in the spec).
+    A v1 peer's 8-byte header still carries magic+version first, so the
+    error fires before the short header can be misparsed."""
+    old = _hdr(1, 0, 0)
     with pytest.raises(FrameVersionError) as ei:
-        parse_header(future)
+        parse_header(old)
     msg = str(ei.value)
-    assert "version 2" in msg and "speaks 1" in msg
+    assert "version 1" in msg and "speaks 2" in msg
     assert "WIRE_PROTOCOL" in msg
 
 
 def test_frame_unknown_kind_and_oversize_rejected():
     with pytest.raises(FrameProtocolError, match="kind"):
-        parse_header(b"FC" + bytes([1, 7]) + (0).to_bytes(4, "big"))
+        parse_header(_hdr(2, 7, 0))
     with pytest.raises(FrameProtocolError, match="sanity"):
-        parse_header(b"FC" + bytes([1, 0]) +
-                     (transport.MAX_FRAME_BYTES + 1).to_bytes(4, "big"))
+        parse_header(_hdr(2, 0, transport.MAX_FRAME_BYTES + 1))
 
 
 def test_send_recv_frame_over_socketpair():
@@ -90,10 +101,26 @@ def test_send_recv_frame_over_socketpair():
         payload = packb({"x": np.arange(6, dtype=np.float32)})
         n = send_frame(a, payload, KIND_COMMAND)
         assert n == HEADER_SIZE + len(payload)
-        kind, got = recv_frame(b)
-        assert kind == KIND_COMMAND and got == payload
+        kind, got, trace = recv_frame(b)
+        assert kind == KIND_COMMAND and got == payload and trace == 0
         np.testing.assert_array_equal(unpackb_np(got)["x"],
                                       np.arange(6, dtype=np.float32))
+    finally:
+        a.close()
+        b.close()
+
+
+def test_send_recv_frame_trace_ctx_roundtrip():
+    """trace_ctx survives the socket verbatim and defaults to 0; the
+    payload bytes are identical either way (observability-only field)."""
+    a, b = socket.socketpair()
+    try:
+        payload = packb(["ping"])
+        send_frame(a, payload, KIND_COMMAND, trace_ctx=(1 << 63) + 5)
+        kind, got, trace = recv_frame(b)
+        assert (kind, got, trace) == (KIND_COMMAND, payload, (1 << 63) + 5)
+        send_frame(a, payload, KIND_COMMAND)
+        assert recv_frame(b) == (KIND_COMMAND, payload, 0)
     finally:
         a.close()
         b.close()
@@ -102,7 +129,7 @@ def test_send_recv_frame_over_socketpair():
 def test_recv_frame_version_mismatch_over_socket():
     a, b = socket.socketpair()
     try:
-        a.sendall(b"FC" + bytes([9, 0]) + (0).to_bytes(4, "big"))
+        a.sendall(_hdr(9, 0, 0))
         with pytest.raises(FrameVersionError):
             recv_frame(b)
     finally:
@@ -336,10 +363,10 @@ def test_tcp_handle_frames_are_spec_frames():
 
     def fake_server():
         conn, _ = srv.accept()
-        kind, payload = recv_frame(conn)
+        kind, payload, _ = recv_frame(conn)
         seen["kind"], seen["msg"] = kind, unpackb_np(payload)
         send_frame(conn, packb(["seeded", 0]), KIND_REPLY)
-        kind, payload = recv_frame(conn)
+        kind, payload, _ = recv_frame(conn)
         seen["put"] = unpackb_np(payload)
         conn.close()
 
