@@ -30,6 +30,14 @@ fraction of the reply bytes; ``reply_bytes_ratio`` is the gated metric
 (``scripts/bench_gate.py``) and ``weights_match`` is asserted here, so a
 semantics regression fails the benchmark itself.
 
+Fetch-storm phase (``fetch_storm``): the wire-v3 read tier at ~10x the
+writer count on serving-size (~2 MB) snapshots — parent-served
+(``request_model`` + per-fetch ``packb``, the pre-v3 path) vs
+worker-served read sessions, unconditional and seq-conditional.  The
+gated ratios are ``worker_vs_parent_fetches`` (conditional worker-served
+throughput over parent-served) and ``conditional_bytes_ratio``
+(conditional rx bytes over unconditional at the same fan-in).
+
 Fold route: the accelerator aggregation path (``use_pallas=True`` —
 ``kernels/fedavg_agg``; Pallas interpret mode on CPU hosts), the
 configuration the jax_pallas server targets.  One plain-jnp pair rides
@@ -197,6 +205,104 @@ def bench_mirror_sync(init, hosts, agg_cfg, n_updates):
     return out
 
 
+def bench_fetch_storm(hosts, agg_cfg, *, n_fetchers, per_fetcher,
+                      t_params=500_000, n_keys=8):
+    """Read-tier storm (wire v3): the same fetch fan-in served three ways.
+
+    ``parent``       every fetch is ``request_model`` + ``packb`` in the
+                     parent process — the pre-v3 serving path, where the
+                     parent pays one wire serialization per fetch.
+    ``worker_full``  unconditional ``FetchClient`` fetches: the shard
+                     servers' read sessions ship the cached packed
+                     snapshot every time (no per-fetch ``packb``, but the
+                     full payload crosses the wire and is decoded).
+    ``worker_cond``  seq-conditional fetches — the read tier's steady
+                     state: one full per (fetcher, key), not-modified
+                     acks after.
+
+    Sized for serving-size models (~2 MB snapshots at the default
+    ``t_params``): that is the regime the read tier exists for — at toy
+    sizes a loopback RPC costs more than the serialization it avoids.
+    The fetcher count is ~10x the mixed storm's writers.  Gated ratios:
+    ``worker_vs_parent_fetches`` (conditional worker-served fetches/s
+    over parent-served, higher is better) and
+    ``conditional_bytes_ratio`` (conditional rx bytes over unconditional
+    rx bytes at the same fan-in, lower is better).
+    """
+    from repro.core.fetch import FetchClient
+
+    rng = np.random.default_rng(11)
+    init = {"w": jnp.asarray(rng.standard_normal(t_params), jnp.float32)}
+    keys = [f"c{i}" for i in range(n_keys)]
+    store = ProcessShardedModelStore(
+        init, keys, agg_cfg=agg_cfg, server_hosts=hosts,
+        batch_aggregation=True, max_coalesce=MAX_COALESCE,
+        drain_timeout_s=180.0)
+    try:
+        for key in keys:                     # every worker holds a fold
+            tree = {"w": jnp.asarray(rng.standard_normal(t_params),
+                                     jnp.float32)}
+            store.handle_model_update("cluster", key, tree,
+                                      ModelMeta(50, 1, 1),
+                                      UpdateDelta(50, 1, 1))
+        store.drain_all()
+
+        def storm(fn):
+            res = [None] * n_fetchers
+            threads = [threading.Thread(
+                target=lambda i=i: res.__setitem__(i, fn(i)))
+                for i in range(n_fetchers)]
+            t0 = time.perf_counter()
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            return time.perf_counter() - t0, res
+
+        def parent_served(idx):
+            key = keys[idx % n_keys]
+            for _ in range(per_fetcher):
+                params, _ = store.request_model("cluster", key)
+                packb(params)                # one serialization per fetch
+            return {"rx": 0, "counts": {}}
+
+        def worker_served(conditional):
+            def fn(idx):
+                with FetchClient(store, conditional=conditional) as fc:
+                    key = keys[idx % n_keys]
+                    for _ in range(per_fetcher):
+                        fc.fetch("cluster", key)
+                    assert fc.counts["fallback"] == 0, fc.counts
+                    return {"rx": fc.rx_bytes, "counts": dict(fc.counts)}
+            return fn
+
+        out = {"fetchers": n_fetchers, "per_fetcher": per_fetcher,
+               "params": t_params, "keys": n_keys}
+        total = n_fetchers * per_fetcher
+        for name, fn in (("parent", parent_served),
+                         ("worker_full", worker_served(False)),
+                         ("worker_cond", worker_served(True))):
+            wall, res = storm(fn)
+            out[name] = {
+                "fetches_per_s": total / wall,
+                "wall_s": wall,
+                "rx_bytes": sum(r["rx"] for r in res),
+                "not_modified": sum(r["counts"].get("not_modified", 0)
+                                    for r in res),
+            }
+        assert store.agg_stats()["respawns"] == 0, "storm killed a worker"
+        out["worker_vs_parent_fetches"] = \
+            out["worker_cond"]["fetches_per_s"] / \
+            out["parent"]["fetches_per_s"]
+        out["conditional_bytes_ratio"] = \
+            out["worker_cond"]["rx_bytes"] / out["worker_full"]["rx_bytes"]
+        out["not_modified_frac"] = \
+            out["worker_cond"]["not_modified"] / total
+        return out
+    finally:
+        store.close()
+
+
 def bench_telemetry_overhead(init, agg_cfg, k, kw, reps=2):
     """The mixed storm on the process store, telemetry off vs on (every
     submit traced — the worst case); the off/on submits/s ratio is the
@@ -296,6 +402,9 @@ def run(fast: bool = False, out_path: str = "BENCH_multiproc.json") -> dict:
             tcp["submits_per_s"] / threaded_at_k[k_tcp]["submits_per_s"]
         mirror_sync = bench_mirror_sync(init, srv.hosts, kernel_cfg,
                                         n_updates=48 if fast else 96)
+        fetch_storm = bench_fetch_storm(
+            srv.hosts, kernel_cfg, n_fetchers=10 * n_writers,
+            per_fetcher=16 if fast else 60)
 
     telemetry = bench_telemetry_overhead(init, kernel_cfg, max(ks), kw)
 
@@ -308,6 +417,7 @@ def run(fast: bool = False, out_path: str = "BENCH_multiproc.json") -> dict:
         "rows": rows,
         "process_vs_threaded": ratios,
         "mirror_sync": mirror_sync,
+        "fetch_storm": fetch_storm,
         "telemetry": telemetry,
     }
     with open(out_path, "w") as f:
@@ -344,6 +454,12 @@ if __name__ == "__main__":
     print(f"lazy mirror sync: reply bytes x{ms['reply_bytes_ratio']:.2f} "
           f"({ms['sync4']['reply_bytes']} vs {ms['sync1']['reply_bytes']}), "
           f"weights_match={ms['weights_match']}")
+    fs = rep["fetch_storm"]
+    print(f"fetch storm ({fs['fetchers']} fetchers, {fs['params']} params): "
+          f"parent {fs['parent']['fetches_per_s']:.0f}/s, worker-cond "
+          f"{fs['worker_cond']['fetches_per_s']:.0f}/s "
+          f"(x{fs['worker_vs_parent_fetches']:.2f}); conditional bytes "
+          f"x{fs['conditional_bytes_ratio']:.3f} of unconditional")
     tl = rep["telemetry"]
     print(f"telemetry overhead (off/on submits/s at K{tl['shards']}): "
           f"x{tl['overhead_ratio']:.3f}")

@@ -76,6 +76,22 @@ def _multiproc_metrics(report: dict) -> dict:
             (ms["sync1"]["reply_bytes"], None)
         out["multiproc/tcp_sync4_reply_bytes"] = \
             (ms["sync4"]["reply_bytes"], None)
+    fs = report.get("fetch_storm")
+    if fs:
+        # read tier (wire v3), same run / same fan-in so the machine
+        # cancels out: conditional worker-served fetches/s over the
+        # pre-v3 parent-served path (higher is better), and the
+        # conditional path's rx bytes over unconditional full fetches
+        # (lower is better).  Fallbacks/respawns fail the bench itself.
+        out["multiproc/fetch_storm/worker_vs_parent_fetches"] = \
+            (fs["worker_vs_parent_fetches"], True)
+        out["multiproc/fetch_storm/conditional_bytes_ratio"] = \
+            (fs["conditional_bytes_ratio"], False)
+        for mode in ("parent", "worker_full", "worker_cond"):
+            out[f"multiproc/fetch_storm/{mode}_fetches_per_s"] = \
+                (fs[mode]["fetches_per_s"], None)
+        out["multiproc/fetch_storm/not_modified_frac"] = \
+            (fs["not_modified_frac"], None)
     tl = report.get("telemetry")
     if tl:
         # off/on submits/s within one run (machine cancels out); 1.0 =
@@ -116,7 +132,8 @@ BENCHES = [
 # K processes): gate them at 2x the tolerance — still catches the
 # catastrophic regressions this pipeline exists for (e.g. a cold-compile
 # reintroduction drops the ratio ~4x) without flaking on scheduler noise
-WIDE_TOLERANCE_PREFIXES = ("multiproc/process_vs_threaded/",)
+WIDE_TOLERANCE_PREFIXES = ("multiproc/process_vs_threaded/",
+                           "multiproc/fetch_storm/")
 
 # metrics that carry a documented *bound* rather than a throughput: the
 # telemetry off/on ratio is near 1.0 by construction and its baseline is

@@ -40,6 +40,7 @@ OP_FILES = (
     TRANSPORT,
     SERVER_PROC,
     "src/repro/core/store.py",
+    "src/repro/core/fetch.py",
     "src/repro/launch/shard_server.py",
 )
 

@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.core.aggregation import AggregationConfig
 from repro.core.clustering import IncrementalDBSCAN
+from repro.core.fetch import FetchClient
 from repro.core.predict_evolve import ClusterSpace, PredictEvolve
 from repro.core.protocol import Client, ClientSpec
 from repro.core.runtime_sim import AsyncSimRuntime
@@ -71,7 +72,19 @@ class FedCCLConfig:
     # server_processes/server_shards; len(server_hosts) fixes the shard
     # count.  Crash recovery carries over: a lost connection reconnects,
     # re-seeds and replays the journal (idempotent by update seq).
+    # Read replicas: an entry may list extra addresses separated by "|"
+    # ("owner:9701|replica:9711") — the first address owns the shard
+    # (submits/drains), the rest mirror it for read fan-out (the parent
+    # pushes folded params; fetch clients round-robin across all).
     server_hosts: tuple = ()
+    # read tier: serve model fetches (FedCCL.model_for / fetcher.fetch)
+    # from the shard servers over read-only TCP sessions instead of the
+    # parent mirrors — seq-conditional (not-modified acks and compressed
+    # deltas against the client's held version), with automatic parent
+    # fallback for the global tier, non-TCP topologies, and unreachable
+    # servers.  See docs/ARCHITECTURE.md (read tier) and
+    # docs/WIRE_PROTOCOL.md §4.7.
+    fetch_from_workers: bool = False
     # lazy mirror sync (process/TCP stores): workers ship full params only
     # every Nth drain reply per model and ack with seq-stamped metadata
     # otherwise — cuts reply bandwidth ~N-fold on the drain path.  Reads,
@@ -154,8 +167,17 @@ class FedCCL:
             for s in cfg.spaces]
         self.pe = PredictEvolve(self.spaces, self.store)
         self.clients: list[Client] = []
+        # client-id index for model_for: registration keeps it in sync, so
+        # serving stays O(1) in fleet size (the list is the ordered public
+        # view; the dict is the lookup path)
+        self._clients_by_id: dict[str, Client] = {}
         self._init_params = init_params
         self._runtime = None
+        # read tier (cfg.fetch_from_workers): a FetchClient serves
+        # model_for/fetch worker-side when the store exposes TCP endpoints,
+        # parent-side (with the conditional wire cache) otherwise
+        self.fetcher = (FetchClient(self.store, telemetry=tel)
+                        if cfg.fetch_from_workers else None)
 
     def _make_privatizer(self, client_id: str, index: int):
         if self.cfg.dp_clip is None:
@@ -179,6 +201,7 @@ class FedCCL:
                        privatizer=self._make_privatizer(spec.client_id, i))
             c.local_params = self._init_params
             self.clients.append(c)
+            self._clients_by_id[spec.client_id] = c
         return assignments
 
     # ------------------------------------------------------------------- run
@@ -199,6 +222,8 @@ class FedCCL:
         worker processes with a bounded join (no-op for in-thread stores).
         Model state stays readable — the parent keeps authoritative
         mirrors of every tier."""
+        if self.fetcher is not None:
+            self.fetcher.close()
         close = getattr(self.store, "close", None)
         if close is not None:
             close()
@@ -214,6 +239,7 @@ class FedCCL:
                    privatizer=self._make_privatizer(spec.client_id, 3000 + idx))
         c.local_params = params
         self.clients.append(c)
+        self._clients_by_id[spec.client_id] = c
         return keys, params
 
     # --------------------------------------------------------------- privacy
@@ -277,16 +303,27 @@ class FedCCL:
         write_perfetto(self.store.telemetry_dump(), path)
 
     # ------------------------------------------------------------- inference
+    def _serve_params(self, level: str, key: str | None = None):
+        """One served read: through the fetch client when the read tier is
+        on (worker-served where the topology allows, conditional either
+        way), else a parent-mirror snapshot."""
+        if self.fetcher is not None:
+            return self.fetcher.fetch(level, key)[0]
+        return self.store.params(level, key)
+
     def model_for(self, client_id: str, level: str = "auto"):
-        client = next((c for c in self.clients
-                       if c.spec.client_id == client_id), None)
+        client = self._clients_by_id.get(client_id)
         if client is None:
-            raise KeyError(f"unknown client_id {client_id!r}; known clients: "
-                           f"{sorted(c.spec.client_id for c in self.clients)}")
+            known = sorted(self._clients_by_id)
+            shown = ", ".join(repr(k) for k in known[:8])
+            if len(known) > 8:
+                shown += f", ... ({len(known)} clients total)"
+            raise KeyError(f"unknown client_id {client_id!r}; "
+                           f"known clients: [{shown}]")
         if level == "local":
             return client.local_params, "local"
         if level == "global":
-            return self.store.params("global"), "global"
+            return self._serve_params("global"), "global"
         if level.startswith("cluster"):
             if ":" in level:
                 key = level.split(":", 1)[1]
@@ -295,6 +332,6 @@ class FedCCL:
             else:
                 # noise client (DBSCAN label -1): no cluster model exists,
                 # fall back to the global tier instead of crashing
-                return self.store.params("global"), "global"
-            return self.store.params("cluster", key), f"cluster:{key}"
-        return self.pe.choose_inference_model(client)
+                return self._serve_params("global"), "global"
+            return self._serve_params("cluster", key), f"cluster:{key}"
+        return self.pe.choose_inference_model(client, serve=self._serve_params)

@@ -1,0 +1,346 @@
+"""Read-tier fetch path (wire protocol v3).
+
+The write tier scales by sharding folds across worker processes
+(``repro.core.server_proc``); this module is its read-side counterpart:
+clients fetch model snapshots **directly from shard servers** over the
+same TCP transport instead of funnelling every read through the parent's
+mirrors.  Three pieces live here because they are shared by every serving
+site (shard worker, read replica, and the parent's in-process fallback):
+
+* a **version-keyed wire cache** (:class:`WireCache`) — each model
+  snapshot is serialized to canonical msgpack bytes at most once per
+  version, where a version is the model's ``(samples, epochs, round)``
+  meta triple (monotone under every fold path, including secure rounds);
+
+* a **seq-conditional serve helper** (:func:`serve_fetch`) — a client
+  that says "I hold version V" gets a not-modified ack when V is current,
+  a compressed byte *delta* when V is in the serving cache's history, and
+  the full packed snapshot otherwise;
+
+* a **fetch client** (:class:`FetchClient`) — opens read-only TCP
+  sessions to shard owners and read replicas (fan-out is round-robin per
+  shard), holds the last packed snapshot per key so conditional fetches
+  work, and transparently falls back to the parent store when the
+  topology has no servers, the key is parent-owned (the global model), or
+  a server is unreachable.
+
+Delta codec: both sides hold the *canonical msgpack encoding* of the
+model (``repro.checkpoint.msgpack_ckpt`` is deterministic: little-endian
+arrays, sorted map keys), so two versions of one model encode to
+equal-length byte strings whose XOR is mostly zeros — structure bytes
+cancel exactly and float bytes share exponent/high-mantissa prefixes
+between nearby folds.  ``delta = zlib(xor(base, new))`` is therefore both
+small and *lossless*: ``apply_delta(base, delta)`` reproduces the new
+packed bytes exactly, so a delta-served fetch is byte-identical to a
+full fetch.  A delta that fails to beat ``_DELTA_MAX_RATIO`` of the full
+payload is discarded and the full snapshot sent instead.
+"""
+
+from __future__ import annotations
+
+import socket
+import threading
+import zlib
+from collections import deque
+
+import numpy as np
+
+from repro.checkpoint.msgpack_ckpt import packb
+from repro.checkpoint.msgpack_ckpt import unpackb_np as unpackb
+from repro.core.transport import KIND_COMMAND, pack_frame, recv_frame
+from repro.obs import clock
+from repro.obs.record import current_trace
+
+# result kinds carried in the ``fetched`` reply (integers, not op strings:
+# they are payload discriminators, not commands — see docs/WIRE_PROTOCOL.md)
+FETCH_FULL = 0          # payload = packed snapshot bytes
+FETCH_NOT_MODIFIED = 1  # payload = None; client's held version is current
+FETCH_DELTA = 2         # payload = zlib(xor) patch over the held version
+
+#: packed versions kept per key as delta bases, beyond the current one
+DELTA_HISTORY = 4
+#: a delta must be at least this much smaller than the full payload to
+#: be worth the decompress+xor on the client
+_DELTA_MAX_RATIO = 0.9
+
+
+# ---------------------------------------------------------------- codec
+
+def encode_delta(base: bytes, new: bytes) -> bytes | None:
+    """Compressed byte-XOR patch taking ``base`` to ``new``; ``None`` when
+    the encodings have different lengths (tree structure changed)."""
+    if len(base) != len(new):
+        return None
+    x = np.bitwise_xor(np.frombuffer(base, dtype=np.uint8),
+                       np.frombuffer(new, dtype=np.uint8))
+    return zlib.compress(x.tobytes(), 1)
+
+
+def apply_delta(base: bytes, delta: bytes) -> bytes:
+    """Invert :func:`encode_delta`: exact bytes of the new encoding."""
+    x = zlib.decompress(delta)
+    if len(x) != len(base):
+        raise ValueError(
+            f"delta length {len(x)} does not match held snapshot "
+            f"{len(base)} — held version is not the delta's base")
+    return np.bitwise_xor(np.frombuffer(base, dtype=np.uint8),
+                          np.frombuffer(x, dtype=np.uint8)).tobytes()
+
+
+def _meta_from_wire(w):
+    from repro.core.aggregation import ModelMeta
+
+    return ModelMeta(int(w[0]), int(w[1]), int(w[2]))
+
+
+# ----------------------------------------------------------- wire cache
+
+class WireCache:
+    """Version-keyed cache of canonical msgpack snapshots.
+
+    ``packed_for`` serializes a model at most once per version and
+    retires superseded versions into a bounded per-key history that
+    ``base_for`` searches for delta bases.  Thread-safe: serving sites
+    call it concurrently from read sessions; ``packb`` runs outside the
+    lock (it can be the expensive part) and the first finished encoding
+    of a version wins.
+    """
+
+    def __init__(self, history: int = DELTA_HISTORY):
+        self._lock = threading.Lock()
+        self._cur: dict[str, tuple[tuple, bytes]] = {}
+        self._hist: dict[str, deque] = {}
+        self.history = int(history)
+
+    def packed_for(self, key: str, version, params) -> bytes:
+        version = tuple(int(v) for v in version)
+        with self._lock:
+            cur = self._cur.get(key)
+            if cur is not None and cur[0] == version:
+                return cur[1]
+        packed = packb(params)
+        with self._lock:
+            cur = self._cur.get(key)
+            if cur is not None and cur[0] == version:
+                return cur[1]
+            if cur is not None:
+                self._hist.setdefault(
+                    key, deque(maxlen=self.history)).append(cur)
+            self._cur[key] = (version, packed)
+        return packed
+
+    def base_for(self, key: str, version) -> bytes | None:
+        version = tuple(int(v) for v in version)
+        with self._lock:
+            cur = self._cur.get(key)
+            if cur is not None and cur[0] == version:
+                return cur[1]
+            for v, p in reversed(self._hist.get(key, deque())):
+                if v == version:
+                    return p
+        return None
+
+
+def serve_fetch(cache: WireCache, key: str, params, meta_w, held):
+    """``(kind, payload)`` tail of a ``fetched`` reply.
+
+    ``held`` is the client's ``[samples, epochs, round]`` triple or
+    ``None`` for an unconditional fetch.  ``params`` is only serialized
+    when the reply actually carries bytes (cache hit = no ``packb``).
+    """
+    version = tuple(int(v) for v in meta_w)
+    if held is not None and tuple(int(v) for v in held) == version:
+        return FETCH_NOT_MODIFIED, None
+    packed = cache.packed_for(key, version, params)
+    if held is not None:
+        base = cache.base_for(key, held)
+        if base is not None:
+            delta = encode_delta(base, packed)
+            if delta is not None and len(delta) < _DELTA_MAX_RATIO * len(packed):
+                return FETCH_DELTA, delta
+    return FETCH_FULL, packed
+
+
+# ----------------------------------------------------------- read conns
+
+class FetchUnavailable(ConnectionError):
+    """Every serving endpoint for the shard failed; caller should fall
+    back to the parent store."""
+
+
+class _ReadConn:
+    """One read-only session to a shard server.  The first command on a
+    v3 connection classifies the session: a ``fetch``/``ping`` opener
+    makes it a concurrent read session (no seed handshake)."""
+
+    def __init__(self, addr, connect_timeout: float, io_timeout: float):
+        self.sock = socket.create_connection(addr, timeout=connect_timeout)
+        self.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self.sock.settimeout(io_timeout)
+        self.lock = threading.Lock()
+
+    def rpc(self, msg) -> tuple[list, int, int]:
+        """Returns ``(reply, tx_bytes, rx_bytes)``."""
+        frame = pack_frame(packb(msg), KIND_COMMAND,
+                           trace_ctx=current_trace() or 0)
+        with self.lock:
+            self.sock.sendall(frame)
+            _kind, payload, _trace = recv_frame(self.sock)
+        return unpackb(payload), len(frame), 16 + len(payload)
+
+    def close(self):
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
+# ---------------------------------------------------------- fetch client
+
+class FetchClient:
+    """Seq-conditional model fetches, worker-served when the topology
+    allows.
+
+    ``fetch(level, cluster_key)`` returns ``(params, meta)`` with params
+    decoded from the canonical wire encoding (numpy-backed, byte-identical
+    values to the store's own copies).  The client remembers the packed
+    bytes of each key it has fetched, so repeat fetches ride the
+    conditional path: a not-modified ack costs a few dozen bytes and no
+    deserialization, a delta costs the patch.
+
+    Serving order per shard is round-robin over ``store.fetch_endpoints()``
+    (read replicas + the shard owner); a failed endpoint is skipped and
+    its connection dropped, and when every endpoint fails — or the store
+    has no TCP servers at all, or the key is parent-owned (the global
+    model) — the fetch is served by the parent through
+    ``store.fetch_wire`` (same conditional semantics, no sockets).
+    """
+
+    def __init__(self, store, *, use_workers: bool | None = None,
+                 conditional: bool = True, endpoints=None, telemetry=None,
+                 connect_timeout: float = 5.0, io_timeout: float = 30.0):
+        self.store = store
+        if endpoints is None:
+            eps = getattr(store, "fetch_endpoints", None)
+            endpoints = eps() if callable(eps) else None
+        self._endpoints = endpoints
+        if use_workers is None:
+            use_workers = endpoints is not None
+        self.use_workers = bool(use_workers) and endpoints is not None
+        self.conditional = bool(conditional)
+        self._global_key = store.model_key("global")
+        self._tel = telemetry
+        self._connect_timeout = float(connect_timeout)
+        self._io_timeout = float(io_timeout)
+        self._lock = threading.Lock()
+        self._held: dict[str, tuple[tuple, bytes, object, object]] = {}
+        self._conns: dict[tuple[int, int], _ReadConn] = {}
+        self._rr: dict[int, int] = {}
+        self.tx_bytes = 0
+        self.rx_bytes = 0
+        self.counts = {"full": 0, "not_modified": 0, "delta": 0,
+                       "fallback": 0}
+
+    # -- wiring -----------------------------------------------------
+
+    def _conn_for(self, shard: int, slot: int) -> _ReadConn:
+        ck = (shard, slot)
+        conn = self._conns.get(ck)
+        if conn is None:
+            conn = _ReadConn(self._endpoints[shard][slot],
+                             self._connect_timeout, self._io_timeout)
+            self._conns[ck] = conn
+        return conn
+
+    def _drop_conn(self, shard: int, slot: int):
+        conn = self._conns.pop((shard, slot), None)
+        if conn is not None:
+            conn.close()
+
+    def _fetch_remote(self, key: str, held):
+        shard = self.store.shard_of(key)
+        slots = len(self._endpoints[shard])
+        start = self._rr.get(shard, 0)
+        self._rr[shard] = (start + 1) % slots
+        last_err: Exception | None = None
+        for i in range(slots):
+            slot = (start + i) % slots
+            try:
+                reply, tx, rx = self._conn_for(shard, slot).rpc(
+                    ["fetch", key, held])
+            except (OSError, ConnectionError, TimeoutError) as e:
+                self._drop_conn(shard, slot)
+                last_err = e
+                continue
+            self.tx_bytes += tx
+            self.rx_bytes += rx
+            if reply and reply[0] == "error":
+                # e.g. a replica that has not mirrored this key yet —
+                # try the next endpoint, then the parent
+                last_err = KeyError(str(reply[2:3]))
+                continue
+            return reply[2], reply[3], reply[4]
+        raise FetchUnavailable(str(last_err))
+
+    # -- public API -------------------------------------------------
+
+    def fetch(self, level: str, cluster_key: str | None = None):
+        """``(params, meta)`` for the model, served worker-side when
+        possible.  Raises ``KeyError`` for unknown models (via the
+        parent, which is authoritative for the key space)."""
+        key = self.store.model_key(level, cluster_key)
+        with self._lock:
+            h = self._held.get(key)
+        held = list(h[0]) if (self.conditional and h is not None) else None
+        t0 = clock.monotonic_ns()
+        kind = payload = meta_w = None
+        if self.use_workers and key != self._global_key:
+            try:
+                kind, payload, meta_w = self._fetch_remote(key, held)
+            except FetchUnavailable:
+                self.counts["fallback"] += 1
+        if meta_w is None:
+            kind, payload, meta_w = self.store.fetch_wire(
+                level, cluster_key, held=held)
+        params, meta, packed = self._decode(key, kind, payload, meta_w, h)
+        with self._lock:
+            self._held[key] = (tuple(int(v) for v in meta_w), packed,
+                               params, meta)
+        self._observe(kind, payload, clock.monotonic_ns() - t0)
+        return params, meta
+
+    def _decode(self, key, kind, payload, meta_w, h):
+        if kind == FETCH_NOT_MODIFIED:
+            if h is None:
+                raise ValueError(f"not-modified for {key!r} but nothing held")
+            return h[2], h[3], h[1]
+        if kind == FETCH_DELTA:
+            if h is None:
+                raise ValueError(f"delta for {key!r} but nothing held")
+            packed = apply_delta(h[1], payload)
+        else:
+            packed = payload
+        return unpackb(packed), _meta_from_wire(meta_w), packed
+
+    def _observe(self, kind, payload, dur_ns):
+        name = ("full", "not_modified", "delta")[kind]
+        self.counts[name] += 1
+        tel = self._tel
+        if tel is None:
+            return
+        tel.metrics.counter(f"fetch_{name}").inc()
+        tel.metrics.histogram("fetch_latency_ns").observe(dur_ns)
+        if kind == FETCH_DELTA:
+            tel.metrics.histogram("fetch_delta_bytes").observe(len(payload))
+
+    def close(self):
+        with self._lock:
+            conns, self._conns = dict(self._conns), {}
+        for conn in conns.values():
+            conn.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -73,11 +73,22 @@ class PredictEvolve:
             params, _ = self.store.request_model("global")
         return keys, params
 
-    def choose_inference_model(self, client: Client):
+    def choose_inference_model(self, client: Client, serve=None):
         """Paper §VI open question — we implement the pragmatic default:
-        prefer the first cluster model, else global."""
+        prefer the first cluster model, else global.
+
+        ``serve(level, key=None) -> params`` overrides the read path so a
+        caller can route the chosen tier through its serving tier (the
+        FedCCL facade passes its ``_serve_params``, which fetches
+        worker-side when the read tier is on); default is a parent read.
+        """
         if client.cluster_keys:
-            params, _ = self.store.request_model("cluster", client.cluster_keys[0])
-            return params, f"cluster:{client.cluster_keys[0]}"
+            key = client.cluster_keys[0]
+            if serve is not None:
+                return serve("cluster", key), f"cluster:{key}"
+            params, _ = self.store.request_model("cluster", key)
+            return params, f"cluster:{key}"
+        if serve is not None:
+            return serve("global"), "global"
         params, _ = self.store.request_model("global")
         return params, "global"

@@ -83,8 +83,17 @@ class Client:
         return n_samples
 
     # ----------------------------------------------------- shared-tier round
-    def fetch(self, store: ModelStore, level: str, cluster_key=None):
-        """RequestModel: snapshot the shared model (start of async round)."""
+    def fetch(self, store: ModelStore, level: str, cluster_key=None, *,
+              fetcher=None):
+        """RequestModel: snapshot the shared model (start of async round).
+
+        With a ``fetcher`` (``repro.core.fetch.FetchClient``) the snapshot
+        is served through the read tier — directly from the shard workers
+        when the topology allows, seq-conditionally either way — instead
+        of the parent mirrors.  Both paths return byte-identical
+        ``(params, meta)``."""
+        if fetcher is not None:
+            return fetcher.fetch(level, cluster_key)
         params, meta = store.request_model(level, cluster_key)
         return params, meta
 

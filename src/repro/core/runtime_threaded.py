@@ -48,12 +48,25 @@ class AsyncThreadedRuntime:
     def __init__(self, clients: list[Client], store: ModelStore,
                  rounds_per_client: int = 2, stagger: float = 0.0,
                  drain_poll: float = 0.001,
+                 drain_poll_max: float | None = None,
                  join_timeout: float | None = None):
         self.clients = clients
         self.store = store
         self.rounds = rounds_per_client
         self.stagger = stagger
         self.drain_poll = drain_poll
+        # adaptive pump backoff ceiling: consecutive empty sweeps double
+        # the sleep from drain_poll up to this bound (reset by any
+        # non-empty sweep).  For the process/TCP stores an *empty* beat is
+        # not free — it is a scatter-gather RPC round trip per worker
+        # (queue wakeups, msgpack decode, context switches on the parent
+        # core), so a tight fixed poll under an idle or read-heavy load
+        # steals exactly the parent CPU the serving paths need (the
+        # process-topology fetch regression in benchmarks/NOTES.md).  The
+        # default ceiling keeps worst-case submit->fold latency ~8ms.
+        self.drain_poll_max = (max(drain_poll, 0.008)
+                               if drain_poll_max is None
+                               else max(drain_poll_max, drain_poll))
         # bounded shutdown deadline: the store's drain_timeout_s
         # (FedCCLConfig.drain_timeout_s) unless explicitly overridden
         self.join_timeout = (store.drain_timeout_s if join_timeout is None
@@ -92,9 +105,13 @@ class AsyncThreadedRuntime:
         slice of the store until stopped, then one final sweep so nothing a
         client enqueued before exiting is left behind."""
         try:
+            delay = self.drain_poll
             while not stop.is_set():
                 if drain_fn() == 0:
-                    time.sleep(self.drain_poll)
+                    time.sleep(delay)
+                    delay = min(delay * 2, self.drain_poll_max)
+                else:
+                    delay = self.drain_poll
             drain_fn()
         except BaseException as e:
             self.errors.append(e)

@@ -51,6 +51,7 @@ from collections import deque
 
 from repro.checkpoint.msgpack_ckpt import packb
 from repro.checkpoint.msgpack_ckpt import unpackb_np as unpackb
+from repro.core.fetch import WireCache, serve_fetch
 from repro.core.transport import (      # noqa: F401  (re-exported: the
     Transport,                          # exceptions predate transport.py and
     WorkerTimeout,                      # are imported from here by old code)
@@ -61,7 +62,7 @@ from repro.obs.record import Telemetry, current_trace
 
 # commands that produce exactly one reply; everything else is fire-and-forget
 REPLY_OPS = frozenset({"drain", "drain_shard", "gmeta", "greduce", "sdrain",
-                       "sync", "ping", "obsdump", "stop"})
+                       "sync", "ping", "obsdump", "stop", "fetch"})
 
 
 # ------------------------------------------------------------------ wire fmt
@@ -116,8 +117,12 @@ class ShardWorker:
     their secure-round buckets, and the shard's slice of the global queue.
     Folds reuse ``coalesced_aggregate`` byte-for-byte with the in-thread
     stores, so the Algorithm-2 semantics cannot drift between topologies.
-    Single-threaded by construction (one consumer per SPSC queue), so it
-    needs no locks.
+    The command path is single-threaded by construction (one consumer per
+    SPSC queue), so it needs no locks.  The read path (wire v3) is the one
+    concurrent entry point: ``fetch`` may be called from TCP read-session
+    threads while the command session folds — it touches only each
+    record's published ``snap`` tuple (swapped by a single reference
+    assignment after every fold) and the internally-locked wire cache.
     """
 
     def __init__(self, shard_idx: int, seed_blob: bytes):
@@ -146,6 +151,7 @@ class ShardWorker:
         #         "unsynced": [seqs folded but not yet shipped with params],
         #         "drains": replies since the last params-carrying one}
         self.records: dict[str, dict] = {}
+        self.wire_cache = WireCache()
         for key, params, meta_w in blob["records"]:
             self._ensure(key, params, meta_from_wire(meta_w))
         self.gslice: deque = deque()       # (seq, params, meta, delta)
@@ -170,11 +176,19 @@ class ShardWorker:
         from repro.core.aggregation import ModelMeta
 
         if key not in self.records:
-            self.records[key] = {"params": params,
-                                 "meta": meta if meta is not None
-                                 else ModelMeta(),
-                                 "pending": deque(), "secure": {},
-                                 "unsynced": [], "drains": 0}
+            rec = {"params": params,
+                   "meta": meta if meta is not None else ModelMeta(),
+                   "pending": deque(), "secure": {},
+                   "unsynced": [], "drains": 0}
+            self._publish(rec)
+            self.records[key] = rec
+
+    @staticmethod
+    def _publish(rec):
+        """Swap the record's read-path snapshot: one reference assignment,
+        so concurrent ``fetch`` callers see (params, meta) move atomically
+        and never a half-updated pair."""
+        rec["snap"] = (rec["params"], meta_to_wire(rec["meta"]))
 
     def _is_replay_dup(self, seq: int) -> bool:
         """True if this submit seq is already held and must be dropped as
@@ -235,6 +249,12 @@ class ShardWorker:
             _, key, params = msg
             self._ensure(key, params)
             return None
+        if op == "fetch":
+            return self.fetch(msg[1], msg[2] if len(msg) > 2 else None)
+        if op == "mirror":
+            _, key, params, meta_w = msg
+            self._mirror(key, params, meta_w)
+            return None
         if op == "drain":
             return self._drain_key(msg[1])
         if op == "drain_shard":
@@ -276,6 +296,45 @@ class ShardWorker:
         if op == "ping":
             return ["pong", self.idx, sorted(self.records)]
         raise ValueError(f"unknown worker op {op!r}")
+
+    # -------------------------------------------------------------- read path
+    def fetch(self, key: str, held=None):
+        """Serve one read-tier conditional fetch (wire v3).
+
+        The ONLY worker entry point that is safe to call concurrently with
+        the command session: it reads the record's published ``snap``
+        tuple and the internally-locked wire cache, never the mutable fold
+        state.  ``held`` is the client's ``[samples, epochs, round]``
+        version or ``None``; the reply's ``result`` discriminator is
+        ``FETCH_FULL`` / ``FETCH_NOT_MODIFIED`` / ``FETCH_DELTA``."""
+        rec = self.records.get(key)
+        snap = rec.get("snap") if rec is not None else None
+        if snap is None:
+            raise KeyError(f"shard {self.idx} does not serve {key!r}")
+        params, meta_w = snap
+        tel = self.tel
+        t0 = clock.monotonic_ns() if tel is not None else 0
+        kind, payload = serve_fetch(self.wire_cache, key, params, meta_w,
+                                    held)
+        if tel is not None:
+            name = ("full", "not_modified", "delta")[kind]
+            tel.metrics.counter(f"fetch_{name}").inc()
+            tel.metrics.histogram("fetch_serve_ns").observe(
+                clock.monotonic_ns() - t0)
+            if payload is not None:
+                tel.metrics.histogram("fetch_reply_bytes").observe(
+                    len(payload))
+        return ["fetched", key, kind, payload, meta_w]
+
+    def _mirror(self, key: str, params, meta_w):
+        """Replica state push: overwrite this server's copy of a model it
+        mirrors for read fan-out.  Replicas never receive submits or
+        drains — the shard owner folds, the parent pushes the folded
+        mirror here, read sessions serve it."""
+        self._ensure(key, params, meta_from_wire(meta_w))
+        rec = self.records[key]
+        rec["params"], rec["meta"] = params, meta_from_wire(meta_w)
+        self._publish(rec)
 
     # ----------------------------------------------------------------- drains
     def _drain_key(self, key: str):
@@ -326,6 +385,7 @@ class ShardWorker:
                           {"key": key, "n": len(batch),
                            "seqs": [int(s) for s, _, _, _ in batch]})
             rec["params"], rec["meta"] = res.params, res.meta
+            self._publish(rec)
             folded += res.n_folded
             fast += res.n_fast_path
             batches += 1
@@ -426,6 +486,7 @@ class ShardWorker:
                            {"key": key, "n": len(batch),
                             "missing": len(missing)})
         rec["params"], rec["meta"] = res.params, res.meta
+        self._publish(rec)
         self.held.difference_update(int(s) for s, _, _, _ in batch)
         # secure replies always carry params (full-round folds are the sync
         # points of secure mode) and therefore flush any accumulated lazy

@@ -56,6 +56,7 @@ from collections import deque
 from dataclasses import dataclass
 
 from repro.core import server_proc, transport
+from repro.core.fetch import WireCache, serve_fetch
 from repro.core.aggregation import (
     AggregationConfig,
     ModelMeta,
@@ -254,6 +255,9 @@ class _RegistryBase:
         for key in cluster_keys:
             records[str(key)] = ModelRecord(init_params)
         self._records: dict[str, ModelRecord] = records
+        # read-tier serving cache: canonical wire bytes per (key, version),
+        # shared by fetch_wire() across every store flavor (repro.core.fetch)
+        self._wire_cache = WireCache()
 
     # ------------------------------------------------------------------ keys
     @staticmethod
@@ -303,6 +307,24 @@ class _RegistryBase:
         """RequestModel — snapshot read (no model lock needed for consistency;
         the paper's clients read whatever the latest aggregated state is)."""
         return self._record(self._key(level, cluster_key)).snapshot()
+
+    def fetch_wire(self, level: str, cluster_key: str | None = None,
+                   held=None):
+        """Parent-served conditional fetch: ``(result, payload, meta_wire)``
+        with the same semantics as a shard server's ``fetch`` reply
+        (``repro.core.fetch.serve_fetch``) — not-modified ack when the
+        client's held ``[samples, epochs, round]`` version is current, a
+        lossless compressed delta when the held version is still cached,
+        else the full canonical msgpack snapshot.  Serialization is cached
+        per version, so repeat fetches of an unchanged model never re-pack
+        (the fix for the process-topology fetch regression: the old path
+        re-serialized the identical mirror on every fetch)."""
+        params, meta = self.request_model(level, cluster_key)
+        meta_w = meta_to_wire(meta)
+        kind, payload = serve_fetch(self._wire_cache,
+                                    self._key(level, cluster_key),
+                                    params, meta_w, held)
+        return kind, payload, meta_w
 
     # ------------------------------------------------------------- inspection
     def meta(self, level: str, cluster_key: str | None = None) -> ModelMeta:
@@ -1070,12 +1092,16 @@ class _ProcShard:
 
     __slots__ = ("idx", "stats", "handle", "rpc_lock", "journal",
                  "journal_lock", "pending_counts", "pending_rounds",
-                 "secure_counts", "outbox", "dirty", "deferred")
+                 "secure_counts", "outbox", "dirty", "deferred",
+                 "replicas", "replica_pushes", "replica_drops")
 
     def __init__(self, idx: int):
         self.idx = idx
         self.stats = _SubmitStats()
         self.handle = None
+        self.replicas: list = []          # read-replica transports (TCP)
+        self.replica_pushes = 0           # mirror pushes delivered
+        self.replica_drops = 0            # pushes skipped (replica down)
         self.rpc_lock = threading.RLock()
         self.journal: dict[int, _JournalEntry] = {}     # seq -> entry
         self.journal_lock = threading.Lock()
@@ -1168,12 +1194,24 @@ class ProcessShardedModelStore(_StoreBase):
                  server_hosts=None, mirror_sync_every: int = 1,
                  telemetry=None):
         if server_hosts:
-            # one worker per remote server; addresses fix the shard count
-            self.server_hosts = [transport.parse_host(h)
-                                 for h in server_hosts]
+            # one worker per remote server; addresses fix the shard count.
+            # Read-replica syntax: "owner:port|replica:port|..." — the
+            # first address owns the shard (submits, drains, secure
+            # rounds); the rest mirror it for read fan-out (the parent
+            # pushes folded params, fetch clients round-robin across all)
+            owners, replicas = [], []
+            for h in server_hosts:
+                parts = [p for p in
+                         (s.strip() for s in str(h).split("|")) if p]
+                owners.append(transport.parse_host(parts[0]))
+                replicas.append([transport.parse_host(p)
+                                 for p in parts[1:]])
+            self.server_hosts = owners
+            self.replica_hosts = replicas if any(replicas) else None
             n_shards = len(self.server_hosts)
         else:
             self.server_hosts = None
+            self.replica_hosts = None
         self.n_shards = max(int(n_shards), 1)
         super().__init__(init_params, cluster_keys, agg_cfg,
                          batch_aggregation, max_coalesce, masker,
@@ -1190,6 +1228,14 @@ class ProcessShardedModelStore(_StoreBase):
         self._proc_shards = [_ProcShard(i) for i in range(self.n_shards)]
         for sh in self._proc_shards:
             sh.handle = self._make_handle(sh.idx)
+            if self.replica_hosts:
+                # replicas are seeded exactly like the owner (same blob =
+                # same starting mirrors); they then receive only `mirror`
+                # pushes, never submits or drains
+                for addr in self.replica_hosts[sh.idx]:
+                    sh.replicas.append(transport.TcpWorkerHandle(
+                        sh.idx, self._seed_blob(sh.idx), addr,
+                        connect_timeout=max(self.drain_timeout_s, 10.0)))
 
     # --------------------------------------------------------------- lifecycle
     def _make_handle(self, shard_idx: int) -> transport.Transport:
@@ -1236,6 +1282,11 @@ class ProcessShardedModelStore(_StoreBase):
                     sh.handle.stop(min(t, 10.0))
                 except BaseException:
                     sh.handle.discard()
+                for h in sh.replicas:
+                    try:
+                        h.stop(min(t, 10.0))
+                    except BaseException:
+                        h.discard()
 
     def __enter__(self):
         return self
@@ -1288,6 +1339,9 @@ class ProcessShardedModelStore(_StoreBase):
         raw = server_proc.packb(["ensure", key, seed])
         with sh.journal_lock:
             self._outbox_put(sh, raw)
+        for h in sh.replicas:       # replicas must serve the key too
+            if h.alive():
+                h.put(raw)
 
     # ------------------------------------------------------- submit paths
     def _handle_update(self, level: str, cluster_key: str | None,
@@ -1523,6 +1577,31 @@ class ProcessShardedModelStore(_StoreBase):
             for sh in self._proc_shards:
                 sh.rpc_lock.release()
 
+    def _push_replicas(self, sh: _ProcShard, key: str, params, meta_w):
+        """Best-effort mirror push to the shard's read replicas after an
+        authoritative mirror swap (fire-and-forget ``mirror`` op).  A dead
+        replica drops pushes (fetch clients fail over to the owner or the
+        parent) and gets a throttled reconnect attempt — ``restart``
+        re-seeds it from the parent mirrors, which resyncs every key it
+        missed.  Callers hold ``sh.rpc_lock`` (reply application), so the
+        counters need no extra lock; never called under ``journal_lock``."""
+        if not sh.replicas:
+            return
+        raw = server_proc.packb(["mirror", key, params, meta_w])
+        for h in sh.replicas:
+            if h.alive():
+                h.put(raw)
+                sh.replica_pushes += 1
+                continue
+            sh.replica_drops += 1
+            if sh.replica_drops % 32 == 1:
+                try:
+                    h.restart(self._seed_blob(sh.idx))
+                    h.put(raw)
+                    sh.replica_pushes += 1
+                except BaseException:
+                    h.discard()
+
     def _apply_drained(self, sh: _ProcShard, reply) -> int:
         _, key, folded, fast, batches, acked, params, meta_w = reply
         if not folded:
@@ -1547,6 +1626,7 @@ class ProcessShardedModelStore(_StoreBase):
             self._ack(sh, acked)     # flushes earlier provisional acks too
             sh.dirty.discard(key)
             dfolded, dfast, dbatches = sh.deferred.pop(key, (0, 0, 0))
+        self._push_replicas(sh, key, params, meta_w)
         self._count_drain(folded + dfolded, fast + dfast,
                           batches=batches + dbatches)
         return folded
@@ -1705,6 +1785,7 @@ class ProcessShardedModelStore(_StoreBase):
                 self._ack(sh, acked)
                 sh.dirty.discard(key)
                 counts = sh.deferred.pop(key, None)
+            self._push_replicas(sh, key, params, meta_w)
             if counts:
                 self._count_drain(counts[0], counts[1], batches=counts[2])
             n += 1
@@ -1721,10 +1802,39 @@ class ProcessShardedModelStore(_StoreBase):
             return self._rpc(sh, server_proc.packb(["sync"]),
                              lambda reply: self._apply_synced(sh, reply))
 
+    def fetch_endpoints(self):
+        """Read-tier serving addresses per shard — replicas first, the
+        shard owner last — or ``None`` when the workers are not reachable
+        over TCP (spawned/inprocess flavors serve reads parent-side).
+        ``repro.core.fetch.FetchClient`` round-robins over each list."""
+        if self.server_hosts is None:
+            return None
+        out = []
+        for sh in self._proc_shards:
+            addrs = (list(self.replica_hosts[sh.idx])
+                     if self.replica_hosts else [])
+            addrs.append(self.server_hosts[sh.idx])
+            out.append(addrs)
+        return out
+
     def _sync_key(self, key: str):
         """Read barrier for one model: if its mirror is dirty (lazy mirror
         sync), pull the worker's params before the read.  Clean keys — and
-        the parent-owned global model — cost one set lookup."""
+        the parent-owned global model — cost one set lookup.
+
+        Audit note (stale-read window): a provisional (meta-only) ack and
+        a concurrent read race on ``sh.dirty``.  Both sides take
+        ``journal_lock``, so exactly two interleavings exist: the reader
+        checks after ``_apply_drained`` marked the key (mark visible →
+        barrier syncs, fresh read), or before (the ack is still being
+        applied, so the read linearizes ahead of it — indistinguishable
+        from the drain reply still being in flight, the same lag eager
+        ``mirror_sync_every=1`` has between a worker fold and the parent
+        swap).  There is NO window where a visible dirty mark is skipped,
+        which is the invariant the barrier promises and
+        ``test_process_store.py`` pins with a timed-thread regression
+        test (reads started after the ack application returns must
+        observe the fold)."""
         if self.mirror_sync_every <= 1 or key == GLOBAL_KEY or self._closed:
             return
         sh = self._proc_shards[self.shard_of(key)]
@@ -1810,6 +1920,7 @@ class ProcessShardedModelStore(_StoreBase):
                 sh.secure_counts.pop((key, int(round_id)), None)
                 sh.dirty.discard(key)
                 counts = sh.deferred.pop(key, None)
+            self._push_replicas(sh, key, params, meta_w)
             if counts:
                 self._count_drain(counts[0], counts[1], batches=counts[2])
             self._count_drain(folded, 0, secure=True, recovered=recovered)
@@ -1839,6 +1950,9 @@ class ProcessShardedModelStore(_StoreBase):
         bytes-on-wire metric (``benchmarks/multiproc_store.py``)."""
         tx = sum(sh.handle.tx_bytes for sh in self._proc_shards)
         rx = sum(sh.handle.rx_bytes for sh in self._proc_shards)
+        for sh in self._proc_shards:
+            tx += sum(h.tx_bytes for h in sh.replicas)
+            rx += sum(h.rx_bytes for h in sh.replicas)
         return tx, rx
 
     def telemetry_dump(self) -> dict:
@@ -1883,5 +1997,11 @@ class ProcessShardedModelStore(_StoreBase):
                      "shard_drain_timeouts":
                          list(self.n_shard_drain_timeouts),
                      "wire_tx_bytes": tx,
-                     "wire_rx_bytes": rx}
+                     "wire_rx_bytes": rx,
+                     "replicas": sum(len(sh.replicas)
+                                     for sh in self._proc_shards),
+                     "replica_pushes": sum(sh.replica_pushes
+                                           for sh in self._proc_shards),
+                     "replica_drops": sum(sh.replica_drops
+                                          for sh in self._proc_shards)}
         return _sharded_agg_stats(self, self._proc_shards, extra)

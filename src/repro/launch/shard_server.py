@@ -17,13 +17,22 @@ On startup the server prints one machine-readable line::
     SHARD_SERVER_LISTENING host=0.0.0.0 port=9701
 
 (the loopback spawner in tests/benchmarks parses it to learn the ephemeral
-port).  Sessions are sequential: one parent at a time, each beginning with
-a ``seed`` command that (re)builds the worker state from the parent's
-mirrors — so a reconnecting parent always re-seeds, and journal replay
-plus the worker's held-seq dedup make the hand-off exact.  A parent's
-``stop`` (or a dropped connection) ends the session; the server keeps
-listening for the next parent.  The server's own lifecycle belongs to its
-supervisor (systemd/k8s/the loopback helper) — see ``docs/OPERATIONS.md``.
+port).  Wire v3 classifies each connection by its FIRST command:
+
+* ``fetch`` / ``ping`` opens a **read session** — any number run
+  concurrently, serving conditional model fetches straight off the
+  worker's published snapshots (``ShardWorker.fetch``), so reads scale
+  out without touching the parent;
+* anything else opens a **command session** — exactly one at a time
+  (guarded by a server-wide lock), beginning with a ``seed`` command that
+  (re)builds the worker state from the parent's mirrors, so a
+  reconnecting parent always re-seeds and journal replay plus the
+  worker's held-seq dedup make the hand-off exact.  A parent's ``stop``
+  (or a dropped connection) ends the session and releases the lock; the
+  server keeps listening.
+
+The server's own lifecycle belongs to its supervisor (systemd/k8s/the
+loopback helper) — see ``docs/OPERATIONS.md``.
 """
 
 from __future__ import annotations
@@ -31,6 +40,7 @@ from __future__ import annotations
 import argparse
 import socket
 import sys
+import threading
 
 from repro.checkpoint.msgpack_ckpt import packb
 from repro.checkpoint.msgpack_ckpt import unpackb_np as unpackb
@@ -43,36 +53,63 @@ from repro.core.transport import (
 )
 from repro.obs.record import trace_scope
 
+#: ops whose first appearance on a fresh connection opens a concurrent
+#: read session instead of the exclusive command session
+READ_OPS = frozenset({"fetch", "ping"})
 
-def serve_session(conn: socket.socket) -> bool:
-    """One parent session: seed handshake, then the dispatch loop (the TCP
-    twin of ``server_proc.worker_main``).  Returns False if the parent
+#: how long a would-be command session waits for the exclusive lock (a
+#: crashed-but-undetected parent's session ends when its socket dies, so
+#: this only bounds pathological half-open peers)
+_COMMAND_LOCK_TIMEOUT_S = 600.0
+
+
+class _ServerState:
+    """Shared between the accept loop and every session thread."""
+
+    def __init__(self):
+        self.worker: ShardWorker | None = None
+        self.command_lock = threading.Lock()
+        self.stop = threading.Event()
+
+
+def _recv_or_report(conn: socket.socket):
+    """One frame, or ``None`` after answering a malformed/mismatched frame
+    loudly (a desynced stream cannot be trusted for params)."""
+    try:
+        return recv_frame(conn)
+    except FrameProtocolError as e:
+        try:
+            send_frame(conn, packb(["error", "frame", str(e)]), KIND_REPLY)
+        except OSError:
+            pass
+        return None
+    except (ConnectionError, OSError):
+        return None
+
+
+def serve_session(state: _ServerState, conn: socket.socket,
+                  first=None) -> bool:
+    """One command session: seed handshake, then the dispatch loop (the
+    TCP twin of ``server_proc.worker_main``).  Returns False if the parent
     asked the whole server to exit (``shutdown``), True to keep
     listening."""
-    worker = None
     while True:
-        try:
-            _, raw, trace_ctx = recv_frame(conn)
-        except FrameProtocolError as e:
-            # a malformed or version-mismatched frame is answered loudly
-            # (the parent raises it verbatim) and ends the session — a
-            # desynced stream cannot be trusted for params
-            try:
-                send_frame(conn, packb(["error", "frame", str(e)]),
-                           KIND_REPLY)
-            except OSError:
-                pass
-            return True
-        except (ConnectionError, OSError):
-            return True                      # parent went away; next session
+        if first is not None:
+            raw, trace_ctx, first = first[1], first[2], None
+        else:
+            got = _recv_or_report(conn)
+            if got is None:
+                return True                  # parent went away; next session
+            raw, trace_ctx = got[1], got[2]
         msg = unpackb(raw)
         op = msg[0]
         if op == "seed":
             # (re)build the worker from the parent's mirrors; replays that
-            # follow are deduplicated by the fresh worker's held-seq set
+            # follow are deduplicated by the fresh worker's held-seq set.
+            # Read sessions pick up the new worker on their next command.
             try:
-                worker = ShardWorker(int(msg[1]), msg[2])
-                reply = ["seeded", worker.idx]
+                state.worker = ShardWorker(int(msg[1]), msg[2])
+                reply = ["seeded", state.worker.idx]
             except BaseException as e:
                 reply = ["error", "seed", f"{type(e).__name__}: {e}"]
             send_frame(conn, packb(reply), KIND_REPLY)
@@ -80,6 +117,7 @@ def serve_session(conn: socket.socket) -> bool:
         if op == "shutdown":
             send_frame(conn, packb(["stopped", -1]), KIND_REPLY)
             return False
+        worker = state.worker
         if worker is None:
             send_frame(conn, packb(
                 ["error", op, "session not seeded: the first command of a "
@@ -103,29 +141,96 @@ def serve_session(conn: socket.socket) -> bool:
             send_frame(conn, packb(reply), KIND_REPLY)
 
 
+def serve_read_session(state: _ServerState, conn: socket.socket,
+                       first) -> None:
+    """One read-only client session: conditional fetches (and pings)
+    served concurrently with the command session and with each other.
+    Never routes through ``ShardWorker.handle`` — the dispatch path owns
+    the parent's deferred-error queue and the mutable fold state; reads
+    touch only the published snapshots (see ``ShardWorker.fetch``)."""
+    while True:
+        if first is not None:
+            raw, trace_ctx, first = first[1], first[2], None
+        else:
+            got = _recv_or_report(conn)
+            if got is None:
+                return
+            raw, trace_ctx = got[1], got[2]
+        msg = unpackb(raw)
+        op = msg[0]
+        worker = state.worker
+        try:
+            if op not in READ_OPS:
+                reply = ["error", op,
+                         "read session: only fetch/ping are allowed here "
+                         "(open a new connection starting with 'seed' for "
+                         "a command session)"]
+            elif worker is None:
+                reply = ["error", op, "server not seeded yet"]
+            elif op == "fetch":
+                with trace_scope(trace_ctx):
+                    reply = worker.fetch(msg[1],
+                                         msg[2] if len(msg) > 2 else None)
+            else:                            # ping
+                reply = ["pong", worker.idx, sorted(worker.records)]
+        except BaseException as e:
+            reply = ["error", op, f"{type(e).__name__}: {e}"]
+        try:
+            send_frame(conn, packb(reply), KIND_REPLY)
+        except OSError:
+            return
+
+
+def _session_thread(state: _ServerState, srv: socket.socket,
+                    conn: socket.socket) -> None:
+    try:
+        with conn:
+            first = _recv_or_report(conn)
+            if first is None:
+                return
+            if unpackb(first[1])[0] in READ_OPS:
+                serve_read_session(state, conn, first)
+                return
+            if not state.command_lock.acquire(
+                    timeout=_COMMAND_LOCK_TIMEOUT_S):
+                send_frame(conn, packb(
+                    ["error", "session",
+                     "another command session is active"]), KIND_REPLY)
+                return
+            try:
+                keep_going = serve_session(state, conn, first)
+            finally:
+                state.command_lock.release()
+            if not keep_going:
+                state.stop.set()
+                srv.close()                  # unblocks the accept loop
+    except (ConnectionError, OSError):
+        pass
+
+
 def serve(host: str, port: int, announce=print) -> None:
+    state = _ServerState()
     srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
     srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
     srv.bind((host, port))
-    srv.listen(1)
+    srv.listen(128)
     bound = srv.getsockname()
     announce(f"SHARD_SERVER_LISTENING host={bound[0]} port={bound[1]}",
              flush=True)
     try:
-        while True:
-            conn, peer = srv.accept()
-            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        while not state.stop.is_set():
             try:
-                keep_going = serve_session(conn)
-            finally:
-                try:
-                    conn.close()
-                except OSError:
-                    pass
-            if not keep_going:
-                return
+                conn, _peer = srv.accept()
+            except OSError:
+                break                        # listener closed by shutdown
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            threading.Thread(target=_session_thread,
+                             args=(state, srv, conn), daemon=True).start()
     finally:
-        srv.close()
+        try:
+            srv.close()
+        except OSError:
+            pass
 
 
 def main(argv=None) -> int:

@@ -24,7 +24,11 @@ from scripts.fedlint.rules.locks import (  # noqa: E402
     LockOrderRule,
 )
 from scripts.fedlint.rules.obs import ObservabilityRule  # noqa: E402
-from scripts.fedlint.rules.wire import TRANSPORT, WireDriftRule  # noqa: E402
+from scripts.fedlint.rules.wire import (  # noqa: E402
+    SERVER_PROC,
+    TRANSPORT,
+    WireDriftRule,
+)
 
 FIXTURES = REPO_ROOT / "tests" / "fixtures" / "fedlint"
 
@@ -136,7 +140,7 @@ def _wire_findings(old: str, new: str):
 
 
 def test_wire_version_bump_without_doc_update_fails():
-    findings = _wire_findings("WIRE_VERSION = 2", "WIRE_VERSION = 3")
+    findings = _wire_findings("WIRE_VERSION = 3", "WIRE_VERSION = 4")
     assert any(f.rule == "FED402" and "WIRE_VERSION" in f.message
                for f in findings)
 
@@ -154,6 +158,31 @@ def test_wire_undocumented_op_fails():
         Context(root=REPO_ROOT, overrides={TRANSPORT: text}))
     assert any(f.rule == "FED403" and "brandnewop" in f.message
                for f in findings)
+
+
+def test_wire_fetch_module_is_in_op_catalog():
+    """v3 read path: an op invented in ``core/fetch.py`` — not just the
+    transport — must trip FED403, i.e. the new module is in OP_FILES."""
+    fetch_rel = "src/repro/core/fetch.py"
+    text = (REPO_ROOT / fetch_rel).read_text() \
+        + '\n_PROBE_MSG = ["sneakyfetch", 0]\n'
+    findings = WireDriftRule().finalize(
+        Context(root=REPO_ROOT, overrides={fetch_rel: text}))
+    assert any(f.rule == "FED403" and "sneakyfetch" in f.message
+               and f.path.endswith("fetch.py") for f in findings)
+
+
+def test_wire_fetch_reply_contract_is_pinned():
+    """`fetch` must stay in ``REPLY_OPS`` in lockstep with the spec's
+    §4.7 request/reply table: dropping it from the set (while the doc
+    still documents the ``fetched`` reply) is FED403 drift."""
+    text = (REPO_ROOT / SERVER_PROC).read_text()
+    assert '"stop", "fetch"' in text
+    findings = WireDriftRule().finalize(Context(
+        root=REPO_ROOT,
+        overrides={SERVER_PROC: text.replace('"stop", "fetch"', '"stop"')}))
+    assert any(f.rule == "FED403" and "`fetch`" in f.message
+               and "REPLY_OPS" in f.message for f in findings)
 
 
 def test_wire_doc_and_impl_currently_agree():

@@ -235,6 +235,69 @@ def test_submit_path_errors_deferred_to_next_drain(init_tree):
     assert store.meta("cluster", "c0").round == 1
 
 
+# =========================================================================
+# lazy-mirror-sync read barrier                                 [satellite]
+# =========================================================================
+
+def test_lazy_sync_read_barrier_no_stale_reads(init_tree):
+    """Audit regression for the ``_sync_key`` stale-read window: a read
+    that STARTS after a drain's provisional-ack application has returned
+    must observe that fold — the dirty mark is set under ``journal_lock``
+    and the barrier checks it under the same lock, so a visible mark can
+    never be skipped.  Timed-thread check: reader threads hammer
+    ``meta()`` under ``mirror_sync_every=5`` (most acks meta-only, so the
+    barrier is what stands between the reader and a stale mirror) while
+    the writer timestamps each drain's return."""
+    from repro.obs import clock
+
+    store = ProcessShardedModelStore(init_tree, ["c0"], n_shards=1,
+                                     batch_aggregation=True,
+                                     mirror_sync_every=5, inprocess=True)
+    stop = threading.Event()
+    samples: list = []                 # (read_start_ns, observed_round)
+    errors: list = []
+
+    def reader():
+        try:
+            while not stop.is_set():
+                t0 = clock.monotonic_ns()
+                samples.append((t0, store.meta("cluster", "c0").round))
+        except BaseException as e:     # surfaced below
+            errors.append(e)
+
+    readers = [threading.Thread(target=reader) for _ in range(2)]
+    for t in readers:
+        t.start()
+    marks: list = []                   # (drain_returned_ns, folded_round)
+    rng = np.random.default_rng(11)
+    try:
+        for i in range(40):
+            store.handle_model_update("cluster", "c0", make_tree(rng),
+                                      ModelMeta(5, 1, 1),
+                                      UpdateDelta(5, 1, 1))
+            assert store.drain("cluster", "c0") == 1
+            marks.append((clock.monotonic_ns(), i + 1))
+    finally:
+        stop.set()
+        for t in readers:
+            t.join(30.0)
+            assert not t.is_alive()
+    assert not errors
+    assert store.meta("cluster", "c0").round == 40
+    store.close()
+    # linearizability: every read that started after drain i returned
+    # observed at least fold i (monotone marks -> binary-search-free scan)
+    assert len(samples) > 10           # readers actually overlapped drains
+    for t0, seen in samples:
+        floor = 0
+        for tm, r in marks:
+            if tm <= t0:
+                floor = r
+            else:
+                break
+        assert seen >= floor, (seen, floor)
+
+
 @pytest.mark.heavy
 def test_kill_worker_mid_round_respawn_replays_queue(init_tree):
     """SIGKILL both shard workers while client threads are mid-round and

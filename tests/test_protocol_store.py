@@ -139,6 +139,70 @@ def test_model_for_unknown_client_raises_keyerror():
         fed.model_for("nope")
 
 
+class _NoScan(list):
+    """A clients list that detonates on iteration/containment — proof that
+    the serving path uses the id index, not an O(N) scan."""
+
+    def __iter__(self):
+        raise AssertionError("model_for scanned the clients list")
+
+    def __contains__(self, item):
+        raise AssertionError("model_for scanned the clients list")
+
+
+def test_model_for_is_indexed_not_scanned():
+    """Regression: ``model_for`` used to linear-scan ``self.clients`` per
+    call — O(N) per inference request.  It must go through the client-id
+    dict (kept in sync by ``setup``/``join``), so serving stays O(1)."""
+    fed = make_fed()
+    fed.run(rounds=1)
+    orig = fed.clients
+    fed.clients = _NoScan(orig)
+    params, tag = fed.model_for("a0", level="local")
+    assert tag == "local" and params is not None
+    _, tag = fed.model_for("a0", level="global")
+    assert tag == "global"
+    # join() keeps the index in sync too
+    fed.clients = orig
+    fed.join(ClientSpec("late", {"loc": np.array([48.2, 16.4])}, (1.0, 10)))
+    fed.clients = _NoScan(orig)
+    assert fed.model_for("late", level="local")[1] == "local"
+
+
+def test_model_for_auto_routes_through_read_tier():
+    """Regression: the default ``level="auto"`` path delegated to
+    ``PredictEvolve.choose_inference_model``, which read the store
+    directly — bypassing the fetch client the explicit levels use.  With
+    the read tier on, every served level must go through the fetcher."""
+    fed = make_fed()
+    fed.run(rounds=1)
+    calls = []
+
+    def spy_serve(level, key=None):
+        calls.append((level, key))
+        return fed.store.params(level, key)
+
+    fed._serve_params = spy_serve
+    _, tag = fed.model_for("a0")                 # auto -> first cluster
+    assert tag.startswith("cluster:")
+    assert calls == [("cluster", tag.split(":", 1)[1])]
+    _, tag = fed.model_for("a0", level="global")
+    assert tag == "global" and calls[-1] == ("global", None)
+
+
+def test_model_for_unknown_client_error_is_truncated():
+    """Regression: the KeyError used to enumerate the ENTIRE fleet in its
+    message — megabytes of text at realistic fleet sizes.  It must show a
+    bounded prefix plus the total count."""
+    fed = make_fed(n_per_group=10)          # 20 clients
+    with pytest.raises(KeyError) as ei:
+        fed.model_for("nope")
+    msg = str(ei.value)
+    assert "20 clients total" in msg
+    assert msg.count("'a") + msg.count("'b") <= 8
+    assert "'a0'" in msg                    # still actionable
+
+
 def test_predict_evolve_join():
     fed = make_fed()
     fed.run(rounds=3)

@@ -56,6 +56,7 @@ from repro.core.aggregation import (
     plan_coalesce,
     two_level_coalesced_aggregate,
 )
+from repro.core.fetch import FetchClient
 from repro.core.protocol import Client, ClientSpec, build_update
 from repro.core.runtime_sim import AsyncSimRuntime
 from repro.core.runtime_threaded import AsyncThreadedRuntime
@@ -664,6 +665,84 @@ def test_lazy_mirror_sync_secure_round_flushes_provisional_acks():
     assert store.meta("cluster", "c0").round == 3
     assert store.effective_round("cluster", "c0") == 3
     assert store.sync_mirrors() == 0      # the sdrain reply synced it all
+
+
+# =========================================================================
+# read tier: fetch-path equivalence                            [satellite]
+# =========================================================================
+
+def _assert_fetch_matches_store(fc, store, model_lks):
+    """Every tier through the fetch client equals the store's own read,
+    BYTE for byte (same canonical encoding on both paths)."""
+    for lk in model_lks:
+        p1, m1 = fc.fetch(*lk)
+        p2, m2 = store.request_model(*lk)
+        assert m1 == m2, lk
+        assert sorted(p1) == sorted(p2)
+        for leaf in p1:
+            a, b = np.asarray(p1[leaf]), np.asarray(p2[leaf])
+            assert a.dtype == b.dtype and a.shape == b.shape
+            assert a.tobytes() == b.tobytes(), (lk, leaf)
+
+
+@pytest.mark.parametrize("kind", ["flat", "sharded", "process"])
+def test_fetch_client_parent_served_byte_identical(kind):
+    """Parent-served conditional fetches (the fallback every topology has):
+    byte-identical to ``request_model`` on first fetch, not-modified on
+    repeat, and still byte-identical after further folds move the version
+    (delta- or full-served, whichever the encoding history allows)."""
+    rng = np.random.default_rng(67)
+    init = make_tree(rng)
+    keys = sorted({cluster_of(i) for i in range(N_CLIENTS)})
+    models = [GLOBAL_KEY] + keys
+    lks = [("global", None)] + [("cluster", k) for k in keys]
+    store = make_store(kind, init)
+    replay_through_store(store, make_schedule(rng, models, n_updates=20))
+    fc = FetchClient(store)
+    assert not fc.use_workers                  # no TCP endpoints here
+    _assert_fetch_matches_store(fc, store, lks)
+    assert fc.counts["full"] == len(lks)
+    # repeat at the same versions: every fetch is a not-modified ack
+    _assert_fetch_matches_store(fc, store, lks)
+    assert fc.counts["not_modified"] == len(lks)
+    # move every version, fetch again: conditional path stays byte-exact
+    replay_through_store(store, make_schedule(rng, models, n_updates=12))
+    _assert_fetch_matches_store(fc, store, lks)
+    assert fc.counts["full"] + fc.counts["delta"] + \
+        fc.counts["not_modified"] == 3 * len(lks)
+    assert fc.counts["fallback"] == 0
+    fc.close()
+    if hasattr(store, "close"):
+        store.close()
+
+
+def test_fetch_client_respects_lazy_sync_read_barrier():
+    """``mirror_sync_every > 1``: the parent-served fetch path reads
+    through ``request_model``, so it inherits the dirty-mirror sync
+    barrier — a fetch after provisional acks observes every fold."""
+    rng = np.random.default_rng(71)
+    init = make_tree(rng)
+    store = ProcessShardedModelStore(init, ["c0"], agg_cfg=NOFAST,
+                                     n_shards=1, batch_aggregation=True,
+                                     inprocess=True, mirror_sync_every=6)
+    fc = FetchClient(store)
+    n = 4
+    for _ in range(n):
+        store.handle_model_update("cluster", "c0", make_tree(rng),
+                                  ModelMeta(5, 1, 1), UpdateDelta(5, 1, 1))
+        store.drain("cluster", "c0")           # provisional (meta-only) acks
+    p, m = fc.fetch("cluster", "c0")
+    assert m.round == n                        # barrier synced before serving
+    _assert_fetch_matches_store(fc, store, [("cluster", "c0")])
+    store.close()
+
+
+def test_fetch_client_unknown_key_raises_via_parent():
+    rng = np.random.default_rng(73)
+    store = ModelStore(make_tree(rng), ["c0"])
+    fc = FetchClient(store)
+    with pytest.raises(KeyError):
+        fc.fetch("cluster", "nope")
 
 
 # =========================================================================

@@ -21,6 +21,7 @@ import numpy as np
 import pytest
 
 from repro.core.aggregation import ModelMeta, UpdateDelta
+from repro.core.fetch import FetchClient
 from repro.core.runtime_threaded import AsyncThreadedRuntime
 from repro.core.store import GLOBAL_KEY, ModelStore, ProcessShardedModelStore
 from repro.core.transport import LoopbackShardServers
@@ -28,6 +29,7 @@ from repro.obs.record import Telemetry
 
 from test_store_equivalence import (
     NOFAST,
+    _assert_fetch_matches_store,
     apply_sequential,
     assert_trees_close,
     make_schedule,
@@ -296,3 +298,232 @@ def test_tcp_server_killed_and_supervisor_restarted(init_tree):
                 assert store.meta("cluster", key) == ref.meta
                 assert_trees_close(store.params("cluster", key), ref.params,
                                    atol=1e-4, msg=f"post-restart {key}")
+
+
+# =========================================================================
+# read tier: worker-served fetches (wire v3)                   [satellite]
+# =========================================================================
+
+@pytest.mark.slow
+def test_tcp_worker_served_fetch_byte_identical(init_tree,
+                                                tcp_loopback_hosts):
+    """Fetches served by the shard servers' read sessions are
+    byte-identical to the parent's own reads, conditional kinds engage on
+    repeat fetches, and the global model stays parent-served — all with
+    zero parent fallbacks."""
+    keys = [f"c{i}" for i in range(4)]
+    rng = np.random.default_rng(23)
+    lks = [("global", None)] + [("cluster", k) for k in keys]
+    with _mk(init_tree, tcp_loopback_hosts, keys=keys,
+             agg_cfg=NOFAST) as store:
+        for key in keys:
+            store.handle_model_update("cluster", key, make_tree(rng),
+                                      ModelMeta(5, 1, 1), UpdateDelta(5, 1, 1))
+        store.handle_model_update("global", None, make_tree(rng),
+                                  ModelMeta(5, 1, 1), UpdateDelta(5, 1, 1))
+        store.drain_all()
+        with FetchClient(store) as fc:
+            assert fc.use_workers          # TCP topology -> worker-served
+            _assert_fetch_matches_store(fc, store, lks)
+            assert fc.counts["full"] == len(lks)
+            _assert_fetch_matches_store(fc, store, lks)   # repeat: all acks
+            assert fc.counts["not_modified"] == len(lks)
+            # advance every tier, fetch again: full or delta, never stale
+            for key in keys:
+                store.handle_model_update("cluster", key, make_tree(rng),
+                                          ModelMeta(5, 1, 2),
+                                          UpdateDelta(5, 1, 1))
+            store.handle_model_update("global", None, make_tree(rng),
+                                      ModelMeta(5, 1, 2), UpdateDelta(5, 1, 1))
+            store.drain_all()
+            _assert_fetch_matches_store(fc, store, lks)
+            assert (fc.counts["full"] + fc.counts["delta"]
+                    + fc.counts["not_modified"]) == 3 * len(lks)
+            assert fc.counts["fallback"] == 0
+            assert fc.tx_bytes > 0 and fc.rx_bytes > 0
+
+
+@pytest.mark.slow
+def test_tcp_worker_fetch_fresh_under_lazy_mirror_sync(init_tree,
+                                                       tcp_loopback_hosts):
+    """Under ``mirror_sync_every > 1`` the parent's mirror lags behind the
+    worker (provisional acks defer the params).  A worker-served fetch
+    reads the worker's own fold state, so it is *fresher* than the raw
+    mirror — and exactly as fresh as the parent's barrier-protected
+    read."""
+    rng = np.random.default_rng(31)
+    with _mk(init_tree, tcp_loopback_hosts[:1], keys=["c0"], agg_cfg=NOFAST,
+             mirror_sync_every=8) as store:
+        with FetchClient(store) as fc:
+            for i in range(5):
+                store.handle_model_update("cluster", "c0", make_tree(rng),
+                                          ModelMeta(5, 1, i + 1),
+                                          UpdateDelta(5, 1, 1))
+                assert store.drain("cluster", "c0") == 1
+            # the raw mirror is stale (lazy acks), the worker is not
+            raw_round = store._records["c0"].snapshot()[1].round
+            assert raw_round < 5
+            params, meta = fc.fetch("cluster", "c0")
+            assert meta.round == 5 and fc.counts["fallback"] == 0
+            # the barrier-protected parent read agrees byte-for-byte
+            _assert_fetch_matches_store(fc, store, [("cluster", "c0")])
+
+
+@pytest.mark.slow
+def test_tcp_replica_served_fetch_and_failover(init_tree):
+    """``owner|replica`` syntax: the parent pushes folded mirrors to the
+    replica, fetch clients round-robin across both endpoints (replica
+    first), and a dead replica fails over to the owner without ever
+    touching the parent."""
+    rng = np.random.default_rng(41)
+    with LoopbackShardServers(2) as srv:
+        with _mk(init_tree, [f"{srv.hosts[0]}|{srv.hosts[1]}"],
+                 keys=["c0", "c1"], agg_cfg=NOFAST) as store:
+            eps = store.fetch_endpoints()
+            assert len(eps) == 1 and len(eps[0]) == 2   # replica + owner
+            for r in range(2):
+                for key in ("c0", "c1"):
+                    store.handle_model_update("cluster", key, make_tree(rng),
+                                              ModelMeta(5, 1, r + 1),
+                                              UpdateDelta(5, 1, 1))
+            store.drain_all()
+            stats = store.agg_stats()
+            assert stats["replicas"] == 1
+            assert stats["replica_pushes"] >= 2         # one per folded key
+            # unconditional client: every fetch ships full params, and the
+            # round-robin start alternates -> both endpoints serve bytes
+            with FetchClient(store, conditional=False) as fc:
+                for _ in range(2):                      # replica then owner
+                    _assert_fetch_matches_store(
+                        fc, store, [("cluster", "c0"), ("cluster", "c1")])
+                assert fc.counts["full"] == 4
+                assert fc.counts["fallback"] == 0
+                assert len(fc._conns) == 2              # both slots used
+                srv.kill(1)                             # replica dies
+                _assert_fetch_matches_store(
+                    fc, store, [("cluster", "c0"), ("cluster", "c1")])
+                assert fc.counts["fallback"] == 0       # owner absorbed it
+            # dead replica: pushes are dropped, accounted, not fatal.
+            # `put` is fire-and-forget, so the first push after the kill
+            # can land in the send buffer — push until the RST surfaces.
+            for r in range(6):
+                store.handle_model_update("cluster", "c0", make_tree(rng),
+                                          ModelMeta(5, 1, 3 + r),
+                                          UpdateDelta(5, 1, 1))
+                assert store.drain("cluster", "c0") == 1
+                if store.agg_stats()["replica_drops"]:
+                    break
+            assert store.agg_stats()["replica_drops"] >= 1
+
+
+@pytest.mark.slow
+def test_tcp_fetch_mid_drain_concurrent_reads(init_tree, tcp_loopback_hosts):
+    """Reader threads hammer worker-served fetches while the parent
+    drains: every observed round is monotone per key (reads are per-key
+    linearizable against folds) and the final fetch equals the store."""
+    keys = ["c0", "c1"]
+    rng = np.random.default_rng(47)
+    n_rounds = 12
+    with _mk(init_tree, tcp_loopback_hosts[:2], keys=keys,
+             agg_cfg=NOFAST) as store:
+        stop = threading.Event()
+        errors: list[str] = []
+
+        def reader():
+            with FetchClient(store) as fc:
+                last = dict.fromkeys(keys, -1)
+                while not stop.is_set():
+                    for key in keys:
+                        _, meta = fc.fetch("cluster", key)
+                        if meta.round < last[key]:
+                            errors.append(f"{key}: {meta.round} < {last[key]}")
+                            return
+                        last[key] = meta.round
+                if fc.counts["fallback"]:
+                    errors.append("reader fell back to the parent")
+
+        readers = [threading.Thread(target=reader) for _ in range(2)]
+        for t in readers:
+            t.start()
+        for r in range(n_rounds):
+            for key in keys:
+                store.handle_model_update("cluster", key, make_tree(rng),
+                                          ModelMeta(5, 1, r + 1),
+                                          UpdateDelta(5, 1, 1))
+                store.drain("cluster", key)
+        stop.set()
+        for t in readers:
+            t.join(60.0)
+            assert not t.is_alive()
+        assert errors == []
+        with FetchClient(store) as fc:
+            _assert_fetch_matches_store(
+                fc, store, [("cluster", k) for k in keys])
+            for key in keys:
+                assert fc.fetch("cluster", key)[1].round == n_rounds
+
+
+@pytest.mark.slow
+def test_tcp_secure_round_fetch_parity(init_tree, tcp_loopback_hosts):
+    """A secure full-round drain over TCP publishes worker-side: the next
+    fetch serves the post-round state byte-identically to the parent."""
+    import jax.numpy as jnp
+
+    from repro.privacy.secure_agg import PairwiseMasker
+    from repro.utils.tree import unflatten_params
+
+    mk = PairwiseMasker(seed=9, mask_scale=1.5)
+    with _mk(init_tree, tcp_loopback_hosts[:1], keys=["c0"], agg_cfg=NOFAST,
+             masker=mk) as store:
+        ids = ["m0", "m1", "m2"]
+        mkey = store.model_key("cluster", "c0")
+        for cid in ids:
+            crng = np.random.default_rng(hash((cid, "c0")) % 2**31)
+            d = jnp.asarray(crng.standard_normal(17), jnp.float32)
+            masked = unflatten_params(
+                mk.mask_delta_flat(d, cid, ids, 0, mkey, weight=10.0),
+                init_tree)
+            store.submit_secure("cluster", "c0", cid, 0, masked,
+                                UpdateDelta(10, 1, 1))
+        store.drain_secure("cluster", "c0", 0, ids)
+        with FetchClient(store) as fc:
+            _assert_fetch_matches_store(fc, store, [("cluster", "c0")])
+            assert fc.fetch("cluster", "c0")[1].round == len(ids)
+            assert fc.counts["fallback"] == 0
+
+
+@pytest.mark.slow
+def test_tcp_fetch_connection_loss_falls_back_then_resumes(init_tree):
+    """Kill the server mid-session: fetches fall back to the parent (same
+    bytes, counted).  A respawned-but-unseeded server is *also* a
+    fallback (read sessions refuse to serve before the seed).  The next
+    drain re-seeds it, after which worker-served fetches resume."""
+    rng = np.random.default_rng(53)
+    with LoopbackShardServers(1) as srv:
+        with _mk(init_tree, srv.hosts, keys=["c0"], agg_cfg=NOFAST) as store:
+            store.handle_model_update("cluster", "c0", make_tree(rng),
+                                      ModelMeta(5, 1, 1), UpdateDelta(5, 1, 1))
+            assert store.drain("cluster", "c0") == 1
+            with FetchClient(store) as fc:
+                _assert_fetch_matches_store(fc, store, [("cluster", "c0")])
+                assert fc.counts == {"full": 1, "not_modified": 0,
+                                     "delta": 0, "fallback": 0}
+                srv.kill(0)
+                # server gone -> parent serves, conditional path intact
+                _assert_fetch_matches_store(fc, store, [("cluster", "c0")])
+                assert fc.counts["fallback"] == 1
+                assert fc.counts["not_modified"] == 1   # parent honors held
+                srv.respawn(0)
+                # up but unseeded: read sessions refuse, parent serves
+                _assert_fetch_matches_store(fc, store, [("cluster", "c0")])
+                assert fc.counts["fallback"] == 2
+                # the next drain reconnects + re-seeds the worker ...
+                store.handle_model_update("cluster", "c0", make_tree(rng),
+                                          ModelMeta(5, 1, 2),
+                                          UpdateDelta(5, 1, 1))
+                assert store.drain("cluster", "c0") == 1
+                assert store.agg_stats()["respawns"] >= 1
+                # ... and worker-served fetches resume, no new fallback
+                _assert_fetch_matches_store(fc, store, [("cluster", "c0")])
+                assert fc.fetch("cluster", "c0")[1].round == 2
+                assert fc.counts["fallback"] == 2

@@ -17,7 +17,9 @@ import numpy as np
 import pytest
 
 from repro.checkpoint.msgpack_ckpt import packb, unpackb, unpackb_np
+from repro.core import fetch as fetch_mod
 from repro.core import transport
+from repro.core.fetch import apply_delta, encode_delta
 from repro.core.aggregation import AggregationConfig
 from repro.core.server_proc import (
     InprocessWorkerHandle,
@@ -55,13 +57,13 @@ def test_frame_golden_bytes_match_spec():
     big-endian length, 8B big-endian trace_ctx (0 = untraced), then the
     payload verbatim."""
     frame = pack_frame(b"hello", KIND_COMMAND)
-    assert frame == _hdr(2, 0, 5) + b"hello"
+    assert frame == _hdr(3, 0, 5) + b"hello"
     reply = pack_frame(b"", KIND_REPLY)
-    assert reply == _hdr(2, 1, 0)
+    assert reply == _hdr(3, 1, 0)
     traced = pack_frame(b"hi", KIND_COMMAND, trace_ctx=0xDEAD_BEEF)
-    assert traced == _hdr(2, 0, 2, 0xDEAD_BEEF) + b"hi"
+    assert traced == _hdr(3, 0, 2, 0xDEAD_BEEF) + b"hi"
     assert HEADER_SIZE == 16
-    assert FRAME_MAGIC == b"FC" and WIRE_VERSION == 2
+    assert FRAME_MAGIC == b"FC" and WIRE_VERSION == 3
 
 
 def test_parse_header_roundtrip():
@@ -72,27 +74,30 @@ def test_parse_header_roundtrip():
 
 def test_frame_bad_magic_rejected():
     with pytest.raises(FrameProtocolError, match="not a FedCCL frame"):
-        parse_header(b"XX" + _hdr(2, 0, 0)[2:])
+        parse_header(b"XX" + _hdr(3, 0, 0)[2:])
 
 
 def test_frame_version_mismatch_raises_clear_error():
     """A peer speaking a different wire version must raise an actionable
     error — never unpack garbage params (versioning rules in the spec).
-    A v1 peer's 8-byte header still carries magic+version first, so the
-    error fires before the short header can be misparsed."""
-    old = _hdr(1, 0, 0)
+    A v2 peer's frames share this header layout but predate the read
+    sessions and the conditional-fetch catalog, so mixing builds fails
+    here instead of at dispatch (and a v1 peer's 8-byte header still
+    carries magic+version first, so the error fires before the short
+    header can be misparsed)."""
+    old = _hdr(2, 0, 0)
     with pytest.raises(FrameVersionError) as ei:
         parse_header(old)
     msg = str(ei.value)
-    assert "version 1" in msg and "speaks 2" in msg
+    assert "version 2" in msg and "speaks 3" in msg
     assert "WIRE_PROTOCOL" in msg
 
 
 def test_frame_unknown_kind_and_oversize_rejected():
     with pytest.raises(FrameProtocolError, match="kind"):
-        parse_header(_hdr(2, 7, 0))
+        parse_header(_hdr(3, 7, 0))
     with pytest.raises(FrameProtocolError, match="sanity"):
-        parse_header(_hdr(2, 0, transport.MAX_FRAME_BYTES + 1))
+        parse_header(_hdr(3, 0, transport.MAX_FRAME_BYTES + 1))
 
 
 def test_send_recv_frame_over_socketpair():
@@ -312,6 +317,104 @@ def test_folded_seq_leaves_dedup_set():
     assert w.held == {0, 1}
     w.handle(unpackb_np(packb(["drain", "c0"])))
     assert w.held == set()
+
+
+# =========================================================================
+# read path (wire v3): conditional fetch, delta codec, mirror push
+# =========================================================================
+
+
+def test_fetch_golden_frame_and_kind_values():
+    """The v3 read-path additions pin to the spec: a fetch command frames
+    like any other command, and the ``result`` discriminators in the
+    ``fetched`` reply are the spec integers (§4.7)."""
+    payload = packb(["fetch", "c0", None])
+    frame = pack_frame(payload, KIND_COMMAND)
+    assert frame == _hdr(3, 0, len(payload)) + payload
+    assert (fetch_mod.FETCH_FULL, fetch_mod.FETCH_NOT_MODIFIED,
+            fetch_mod.FETCH_DELTA) == (0, 1, 2)
+
+
+def test_delta_codec_roundtrip_exact():
+    """``apply_delta(base, encode_delta(base, new))`` must reproduce the
+    new canonical encoding EXACTLY — a delta-served fetch is byte-identical
+    to a full fetch, or the read tier corrupts weights."""
+    rng = np.random.default_rng(7)
+    p0 = {"w": rng.standard_normal(300).astype(np.float32),
+          "b": rng.standard_normal(16).astype(np.float32)}
+    p1 = {"w": p0["w"] + 1e-3, "b": p0["b"] * 1.001}
+    base, new = packb(p0), packb(p1)
+    delta = encode_delta(base, new)
+    assert delta is not None and len(delta) < len(new)
+    assert apply_delta(base, delta) == new
+    # structure change (different encoded length) -> no delta
+    assert encode_delta(base, packb({"w": p0["w"]})) is None
+    # a delta applied over the wrong base must fail loudly, never decode
+    with pytest.raises(ValueError, match="does not match"):
+        apply_delta(base[:-1], delta)
+
+
+def test_worker_fetch_conditional_kinds():
+    """One worker, one model: unconditional fetch is FULL; re-fetch at the
+    current version is NOT_MODIFIED (no payload); after a fold, a fetch
+    holding the old version gets a DELTA that patches byte-exactly to the
+    new snapshot; an unknown key raises KeyError."""
+    rng = np.random.default_rng(3)
+    params = {"w": rng.standard_normal(400).astype(np.float32)}
+    blob = make_seed_blob([], 4, AggregationConfig(), None)
+    w = ShardWorker(0, blob)
+    w.handle(unpackb_np(packb(["ensure", "c0", params])))
+
+    op, key, kind, payload, meta_w = w.fetch("c0")
+    assert (op, key, kind) == ("fetched", "c0", fetch_mod.FETCH_FULL)
+    np.testing.assert_array_equal(unpackb_np(payload)["w"], params["w"])
+
+    op, _, kind, payload, again = w.fetch("c0", held=meta_w)
+    assert kind == fetch_mod.FETCH_NOT_MODIFIED and payload is None
+    assert again == meta_w
+
+    w.handle(unpackb_np(packb(
+        ["sub", 0, "c0", {"w": params["w"] + 0.5}, [10, 1, 1], [10, 1, 1]])))
+    w.handle(unpackb_np(packb(["drain", "c0"])))
+    op, _, kind, payload, new_meta = w.fetch("c0", held=meta_w)
+    assert kind == fetch_mod.FETCH_DELTA and new_meta != meta_w
+    held_packed = packb(params)
+    full = w.fetch("c0")[3]
+    assert apply_delta(held_packed, payload) == full
+
+    with pytest.raises(KeyError, match="does not serve"):
+        w.fetch("nope")
+
+
+def test_mirror_op_overwrites_and_serves():
+    """The fire-and-forget ``mirror`` push (read replicas): registers or
+    overwrites a model and the next fetch serves the pushed state."""
+    blob = make_seed_blob([], 4, AggregationConfig(), None)
+    w = ShardWorker(0, blob)
+    pushed = {"w": np.full(5, 2.5, np.float32)}
+    assert w.handle(unpackb_np(packb(
+        ["mirror", "c9", pushed, [30, 2, 3]]))) is None
+    op, key, kind, payload, meta_w = w.fetch("c9")
+    assert meta_w == [30, 2, 3]
+    np.testing.assert_array_equal(unpackb_np(payload)["w"], pushed["w"])
+    # a second push supersedes the first
+    w.handle(unpackb_np(packb(
+        ["mirror", "c9", {"w": np.zeros(5, np.float32)}, [40, 3, 4]])))
+    _, _, _, payload, meta_w = w.fetch("c9")
+    assert meta_w == [40, 3, 4]
+    np.testing.assert_array_equal(unpackb_np(payload)["w"], np.zeros(5))
+
+
+def test_wire_cache_serializes_once_per_version_and_keeps_history():
+    cache = fetch_mod.WireCache(history=2)
+    p = {"w": np.ones(8, np.float32)}
+    a = cache.packed_for("k", (1, 1, 1), p)
+    assert cache.packed_for("k", (1, 1, 1), p) is a       # cache hit
+    b = cache.packed_for("k", (2, 2, 2), {"w": np.zeros(8, np.float32)})
+    assert b != a
+    assert cache.base_for("k", (1, 1, 1)) is a            # retired to history
+    assert cache.base_for("k", (2, 2, 2)) is b
+    assert cache.base_for("k", (9, 9, 9)) is None
 
 
 # =========================================================================
