@@ -45,6 +45,19 @@ along for the counter-regime: with near-free jitted folds there is nothing
 to offload and the process store's transport makes it strictly slower —
 kept in the artifact so the crossover is visible, not hidden.
 
+Rebalance phase (``rebalance``): live-migration cost under load
+(docs/ELASTICITY.md §6).  The mixed storm runs once as a pre-migration
+window, then one forced ``migrate_cluster`` moves a cluster to another
+worker while background submitters race the fence, then the same storm
+runs again as the recovery window.  ``fence_pause_ms`` is the wall time
+of the migrate call itself — the only interval the two workers' rpc
+locks are held, i.e. the drain pause an operator sees — and
+``recovery_ratio`` (gated, ``scripts/bench_gate.py``) is the
+post-migration window's submits/s over the pre-migration window's:
+1.0 means the hand-off left no lasting throughput scar.  Respawns
+during the phase fail the benchmark itself — a migration that degrades
+to journal-replay recovery is a bug, not a slow run.
+
 Telemetry-overhead phase (``telemetry``): the same mixed storm on the
 process store at the largest K, telemetry off vs on (every submit traced,
 ``trace_sample_n=1`` — the worst case).  ``telemetry_overhead`` is the
@@ -303,6 +316,75 @@ def bench_fetch_storm(hosts, agg_cfg, *, n_fetchers, per_fetcher,
         store.close()
 
 
+def bench_rebalance(init, agg_cfg, k, kw):
+    """Live-migration cost under the mixed storm: a pre-migration window,
+    one forced ``migrate_cluster`` raced by background submitters, a
+    recovery window.  Reports ``fence_pause_ms`` (the migrate call's wall
+    time — the rpc-lock pause) and ``recovery_ratio`` (post/pre
+    submits/s, gated)."""
+    keys = [f"c{i}" for i in range(N_CLUSTERS)]
+    store = ProcessShardedModelStore(init, keys, agg_cfg=agg_cfg, n_shards=k,
+                                     batch_aggregation=True,
+                                     max_coalesce=MAX_COALESCE,
+                                     drain_timeout_s=180.0)
+    try:
+        pre = bench_mixed(f"rebalance_pre_{k}", store, **kw)
+
+        mig_key = keys[0]
+        src = store.shard_of(mig_key)
+        dst = (src + 1) % k
+        pool = _make_pool(np.random.default_rng(77), kw["t_params"], 4)
+
+        def background(idx):
+            # submits racing the fence: some land pre-flip on the old
+            # owner (parked + redirected), some post-flip on the new one
+            brng = np.random.default_rng(30_000 + idx)
+            for i in range(200):
+                if stop.is_set():
+                    break
+                s = int(brng.integers(20, 200))
+                store.handle_model_update(
+                    "cluster", keys[int(brng.integers(N_CLUSTERS))],
+                    pool[i % len(pool)], ModelMeta(s, 1, 1),
+                    UpdateDelta(s, 1, 1))
+
+        stop = threading.Event()
+        racers = [threading.Thread(target=background, args=(i,))
+                  for i in range(2)]
+        for t in racers:
+            t.start()
+        time.sleep(0.01)                 # let the racers reach the outbox
+        t0 = time.perf_counter()
+        epoch = store.migrate_cluster(mig_key, dst)
+        fence_pause_ms = (time.perf_counter() - t0) * 1e3
+        stop.set()
+        for t in racers:
+            t.join()
+        store.drain_all()                # fold the raced submits
+
+        post = bench_mixed(f"rebalance_post_{k}", store, **kw)
+        stats = store.agg_stats()
+        assert stats["cluster_migrations"] == 1, "exactly one forced move"
+        assert stats["respawns"] == 0, \
+            "migration degraded to journal-replay recovery"
+        assert store.shard_of(mig_key) == dst, "fence did not hold"
+        return {
+            "shards": k,
+            "migrated_key": mig_key,
+            "src": src,
+            "dst": dst,
+            "epoch": epoch,
+            "fence_pause_ms": fence_pause_ms,
+            "pre_submits_per_s": pre["submits_per_s"],
+            "post_submits_per_s": post["submits_per_s"],
+            "pre_fetches_per_s": pre["fetches_per_s"],
+            "post_fetches_per_s": post["fetches_per_s"],
+            "recovery_ratio": post["submits_per_s"] / pre["submits_per_s"],
+        }
+    finally:
+        store.close()
+
+
 def bench_telemetry_overhead(init, agg_cfg, k, kw, reps=2):
     """The mixed storm on the process store, telemetry off vs on (every
     submit traced — the worst case); the off/on submits/s ratio is the
@@ -407,6 +489,7 @@ def run(fast: bool = False, out_path: str = "BENCH_multiproc.json") -> dict:
             per_fetcher=16 if fast else 60)
 
     telemetry = bench_telemetry_overhead(init, kernel_cfg, max(ks), kw)
+    rebalance = bench_rebalance(init, kernel_cfg, max(ks), kw)
 
     report = {
         "config": {"writers": n_writers, "fetchers": n_fetchers,
@@ -419,6 +502,7 @@ def run(fast: bool = False, out_path: str = "BENCH_multiproc.json") -> dict:
         "mirror_sync": mirror_sync,
         "fetch_storm": fetch_storm,
         "telemetry": telemetry,
+        "rebalance": rebalance,
     }
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2)
@@ -463,4 +547,9 @@ if __name__ == "__main__":
     tl = rep["telemetry"]
     print(f"telemetry overhead (off/on submits/s at K{tl['shards']}): "
           f"x{tl['overhead_ratio']:.3f}")
+    rb = rep["rebalance"]
+    print(f"rebalance (K{rb['shards']}, {rb['migrated_key']} "
+          f"{rb['src']}->{rb['dst']}): fence pause "
+          f"{rb['fence_pause_ms']:.1f} ms, post-migration throughput "
+          f"x{rb['recovery_ratio']:.2f} of pre")
     print("report -> BENCH_multiproc.json")

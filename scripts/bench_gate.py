@@ -92,6 +92,21 @@ def _multiproc_metrics(report: dict) -> dict:
                 (fs[mode]["fetches_per_s"], None)
         out["multiproc/fetch_storm/not_modified_frac"] = \
             (fs["not_modified_frac"], None)
+    rb = report.get("rebalance")
+    if rb:
+        # live migration under load (docs/ELASTICITY.md §6), same run so
+        # the machine cancels out: post-migration submits/s over
+        # pre-migration (1.0 = the hand-off left no throughput scar,
+        # higher is better).  The fence pause is absolute wall time —
+        # informational, like the raw throughputs.
+        out["multiproc/rebalance/recovery_ratio"] = \
+            (rb["recovery_ratio"], True)
+        out["multiproc/rebalance/fence_pause_ms"] = \
+            (rb["fence_pause_ms"], None)
+        out["multiproc/rebalance/pre_submits_per_s"] = \
+            (rb["pre_submits_per_s"], None)
+        out["multiproc/rebalance/post_submits_per_s"] = \
+            (rb["post_submits_per_s"], None)
     tl = report.get("telemetry")
     if tl:
         # off/on submits/s within one run (machine cancels out); 1.0 =
@@ -133,7 +148,8 @@ BENCHES = [
 # catastrophic regressions this pipeline exists for (e.g. a cold-compile
 # reintroduction drops the ratio ~4x) without flaking on scheduler noise
 WIDE_TOLERANCE_PREFIXES = ("multiproc/process_vs_threaded/",
-                           "multiproc/fetch_storm/")
+                           "multiproc/fetch_storm/",
+                           "multiproc/rebalance/")
 
 # metrics that carry a documented *bound* rather than a throughput: the
 # telemetry off/on ratio is near 1.0 by construction and its baseline is

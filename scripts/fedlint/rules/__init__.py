@@ -4,6 +4,7 @@ and scripts/check_docs.py fails CI when the two drift apart."""
 from __future__ import annotations
 
 from scripts.fedlint.rules.determinism import DeterminismRule
+from scripts.fedlint.rules.elasticity import EpochRoutingRule
 from scripts.fedlint.rules.kernels import KernelTwinRule
 from scripts.fedlint.rules.locks import (
     HatchPolicyRule,
@@ -19,6 +20,7 @@ RULE_CLASSES = (
     HatchPolicyRule,
     KernelTwinRule,
     WireDriftRule,
+    EpochRoutingRule,
     DeterminismRule,
     ObservabilityRule,
 )

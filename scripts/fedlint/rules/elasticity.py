@@ -1,0 +1,79 @@
+"""Epoch-bypassing ownership routing (FED404).
+
+Elastic membership (docs/ELASTICITY.md) makes cluster→shard placement
+*mutable*: a live migration installs a ring override and bumps the
+ownership epoch, and every owner-routed operation must resolve placement
+through the override-aware ``HashRing.shard_of`` (or the stores' own
+``shard_of``, which delegates to it).  Two resolution paths silently
+bypass the override table and would route a migrated cluster back to its
+old — tombstoned — owner:
+
+* the legacy modulo map ``stable_shard(key, K)`` (kept only as the
+  documented v≤3 placement function and as a test oracle);
+* the ring's *natural* owner, ``ring.owner(key)``, which ignores
+  overrides by definition.
+
+This rule flags any **call** to either form inside the owner-routed
+modules (``src/repro/core/`` + ``src/repro/launch/``), except inside
+``HashRing`` itself (``shard_of`` legitimately falls back to ``owner``
+when no override exists).  Deliberate pre-flip/diagnostic uses carry
+``# fedlint: epoch-ok(reason)``.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from scripts.fedlint.core import Finding, Rule, SourceFile
+
+SCOPE_PREFIXES = ("src/repro/core/", "src/repro/launch/")
+
+#: the one class allowed to consult the natural owner directly
+RING_CLASS = "HashRing"
+
+HATCH = "epoch"
+
+
+class EpochRoutingRule(Rule):
+    name = "epoch-routing"
+    id_docs = {
+        "FED404": "owner-routed code resolves cluster ownership via the "
+                  "legacy modulo map or the ring's natural owner, "
+                  "bypassing migration overrides and the ownership epoch",
+    }
+
+    def applies(self, rel: str) -> bool:
+        return rel.startswith(SCOPE_PREFIXES)
+
+    def check(self, src: SourceFile) -> list[Finding]:
+        out: list[Finding] = []
+        ring_spans = [
+            (node.lineno, node.end_lineno or node.lineno)
+            for node in ast.walk(src.tree)
+            if isinstance(node, ast.ClassDef) and node.name == RING_CLASS
+        ]
+
+        def inside_ring(line: int) -> bool:
+            return any(lo <= line <= hi for lo, hi in ring_spans)
+
+        def flag(line: int, msg: str) -> None:
+            if not src.hatched(line, HATCH) and not inside_ring(line):
+                out.append(Finding(src.rel, line, "FED404", msg))
+
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            if isinstance(f, ast.Name) and f.id == "stable_shard":
+                flag(node.lineno,
+                     "`stable_shard(...)` is the frozen v<=3 modulo map; "
+                     "it ignores migration overrides — route through the "
+                     "store's `shard_of` (override-aware, epoch-bumped)")
+            elif (isinstance(f, ast.Attribute) and f.attr == "owner"
+                    and isinstance(f.value, (ast.Name, ast.Attribute))
+                    and ast.unparse(f.value).split(".")[-1] == "ring"):
+                flag(node.lineno,
+                     "`ring.owner(...)` resolves the *natural* owner and "
+                     "ignores migration overrides; use `shard_of` so a "
+                     "migrated cluster routes to its post-fence owner")
+        return sorted(set(out))

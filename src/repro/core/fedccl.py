@@ -92,6 +92,21 @@ class FedCCLConfig:
     # store.sync_mirrors() barrier, so served snapshots are never stale.
     # 1 = every reply ships params (the eager default).
     mirror_sync_every: int = 1
+    # ---- elastic membership (docs/ELASTICITY.md) --------------------------
+    # virtual nodes per shard on the consistent-hash ownership ring the
+    # sharded/process/TCP stores route cluster keys with.  More vnodes =
+    # smoother key balance across shards; the ring points are stable
+    # crc32 hashes, so placement never depends on PYTHONHASHSEED.
+    ring_vnodes: int = 64
+    # automatic rebalance policy for FedCCL.rebalance(): None = manual
+    # only (FedCCL.migrate_cluster); "load" migrates the hottest cluster
+    # off the most-enqueued shard onto the least-enqueued one whenever
+    # the hot shard carries more than rebalance_hot_ratio times the cold
+    # shard's submits (per-shard agg_stats load).
+    rebalance_policy: str | None = None
+    # hot/cold submit-count ratio that triggers a "load" rebalance; at or
+    # below the threshold rebalance() is a no-op
+    rebalance_hot_ratio: float = 2.0
     # bounded drain deadline: worker-reply waits in the process store and
     # drain-worker joins in the threaded runtime; expiries surface as
     # agg_stats()["drain_timeouts"] instead of silent partial drains
@@ -141,7 +156,7 @@ class FedCCL:
                 max_coalesce=cfg.max_coalesce, masker=self.masker,
                 drain_timeout_s=cfg.drain_timeout_s,
                 mirror_sync_every=cfg.mirror_sync_every,
-                telemetry=tel)
+                ring_vnodes=cfg.ring_vnodes, telemetry=tel)
         elif cfg.server_processes > 0:
             self.store = ProcessShardedModelStore(
                 init_params, agg_cfg=agg_cfg, n_shards=cfg.server_processes,
@@ -149,13 +164,15 @@ class FedCCL:
                 max_coalesce=cfg.max_coalesce, masker=self.masker,
                 drain_timeout_s=cfg.drain_timeout_s,
                 mirror_sync_every=cfg.mirror_sync_every,
+                ring_vnodes=cfg.ring_vnodes,
                 inprocess=(cfg.runtime == "sim"), telemetry=tel)
         elif cfg.server_shards > 0:
             self.store = ShardedModelStore(
                 init_params, agg_cfg=agg_cfg, n_shards=cfg.server_shards,
                 batch_aggregation=cfg.batch_aggregation,
                 max_coalesce=cfg.max_coalesce, masker=self.masker,
-                drain_timeout_s=cfg.drain_timeout_s, telemetry=tel)
+                drain_timeout_s=cfg.drain_timeout_s,
+                ring_vnodes=cfg.ring_vnodes, telemetry=tel)
         else:
             self.store = ModelStore(
                 init_params, agg_cfg=agg_cfg,
@@ -227,6 +244,52 @@ class FedCCL:
         close = getattr(self.store, "close", None)
         if close is not None:
             close()
+
+    # ------------------------------------------------- elastic membership
+    def migrate_cluster(self, cluster_key: str, dst_shard: int) -> int:
+        """Manually move one cluster model to another shard/worker (live —
+        no restart, no lost updates; docs/ELASTICITY.md).  Returns the new
+        ownership epoch."""
+        migrate = getattr(self.store, "migrate_cluster", None)
+        if migrate is None:
+            raise RuntimeError(
+                "this topology's store has no migrate_cluster; pick a "
+                "sharded topology (server_shards / server_processes / "
+                "server_hosts)")
+        return migrate(cluster_key, dst_shard)
+
+    def rebalance(self) -> list[tuple[str, int, int]]:
+        """Apply ``FedCCLConfig.rebalance_policy`` once; returns the
+        migrations performed as ``(cluster_key, dst_shard, epoch)``.
+
+        Policy ``"load"``: read per-shard submit counts from
+        ``agg_stats()["shard_enqueued"]``; when the hottest shard carries
+        more than ``rebalance_hot_ratio`` times the coldest shard's
+        submits, migrate the hot shard's deepest-queued cluster to the
+        cold shard.  ``None`` (the default) never migrates — rebalancing
+        stays a manual ``migrate_cluster`` call."""
+        policy = self.cfg.rebalance_policy
+        if policy is None:
+            return []
+        if policy != "load":
+            raise ValueError(f"unknown rebalance_policy {policy!r} "
+                             "(expected None or 'load')")
+        stats = self.store.agg_stats()
+        enqueued = stats.get("shard_enqueued")
+        if not enqueued or len(enqueued) < 2:
+            return []
+        hot = max(range(len(enqueued)), key=lambda i: enqueued[i])
+        cold = min(range(len(enqueued)), key=lambda i: enqueued[i])
+        if hot == cold or (enqueued[hot] <=
+                           self.cfg.rebalance_hot_ratio
+                           * max(enqueued[cold], 1)):
+            return []
+        keys = self.store.shard_cluster_keys(hot)
+        if not keys:
+            return []
+        key = max(keys, key=lambda k: self.store.pending_depth("cluster", k))
+        epoch = self.store.migrate_cluster(key, cold)
+        return [(key, cold, epoch)]
 
     # ----------------------------------------------------- Predict & Evolve
     def join(self, spec: ClientSpec) -> tuple[list[str], object]:

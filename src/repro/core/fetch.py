@@ -1,4 +1,5 @@
-"""Read-tier fetch path (wire protocol v3).
+"""Read-tier fetch path (introduced in wire protocol v3; epoch-aware
+since v4).
 
 The write tier scales by sharding folds across worker processes
 (``repro.core.server_proc``); this module is its read-side counterpart:
@@ -214,6 +215,14 @@ class FetchClient:
     has no TCP servers at all, or the key is parent-owned (the global
     model) — the fetch is served by the parent through
     ``store.fetch_wire`` (same conditional semantics, no sockets).
+
+    Elastic membership (docs/ELASTICITY.md): the endpoint map is
+    **epoch-versioned**.  Every remote fetch first compares the store's
+    ``ownership_epoch()`` against the epoch the endpoints were captured
+    at and refreshes the map on a bump, so a migrated cluster is fetched
+    from its new owner (and its replicas) instead of the stale one; a
+    ``redirect`` reply from a tombstoned old owner triggers the same
+    refresh-and-retry.
     """
 
     def __init__(self, store, *, use_workers: bool | None = None,
@@ -236,12 +245,33 @@ class FetchClient:
         self._held: dict[str, tuple[tuple, bytes, object, object]] = {}
         self._conns: dict[tuple[int, int], _ReadConn] = {}
         self._rr: dict[int, int] = {}
+        self._endpoint_epoch = self._store_epoch()
         self.tx_bytes = 0
         self.rx_bytes = 0
         self.counts = {"full": 0, "not_modified": 0, "delta": 0,
-                       "fallback": 0}
+                       "fallback": 0, "redirects": 0}
 
     # -- wiring -----------------------------------------------------
+
+    def _store_epoch(self) -> int:
+        ep = getattr(self.store, "ownership_epoch", None)
+        return int(ep()) if callable(ep) else 0
+
+    def refresh_endpoints(self):
+        """Re-read the store's endpoint map after an ownership-epoch bump
+        (a cluster migrated): swap in the fresh map, remember the epoch it
+        was captured at, and drop every cached connection — the next fetch
+        re-dials the (possibly new) owner and replica set."""
+        eps = getattr(self.store, "fetch_endpoints", None)
+        endpoints = eps() if callable(eps) else None
+        with self._lock:
+            if endpoints is not None:
+                self._endpoints = endpoints
+            self._endpoint_epoch = self._store_epoch()
+            conns, self._conns = dict(self._conns), {}
+            self._rr = {}
+        for conn in conns.values():
+            conn.close()
 
     def _conn_for(self, shard: int, slot: int) -> _ReadConn:
         ck = (shard, slot)
@@ -258,28 +288,48 @@ class FetchClient:
             conn.close()
 
     def _fetch_remote(self, key: str, held):
-        shard = self.store.shard_of(key)
-        slots = len(self._endpoints[shard])
-        start = self._rr.get(shard, 0)
-        self._rr[shard] = (start + 1) % slots
         last_err: Exception | None = None
-        for i in range(slots):
-            slot = (start + i) % slots
-            try:
-                reply, tx, rx = self._conn_for(shard, slot).rpc(
-                    ["fetch", key, held])
-            except (OSError, ConnectionError, TimeoutError) as e:
-                self._drop_conn(shard, slot)
-                last_err = e
+        for attempt in range(2):
+            # epoch check first: a migration bumps the store's ownership
+            # epoch, invalidating the captured endpoint map (the migrated
+            # cluster's owner — and its replica set — moved with it)
+            if self._store_epoch() != self._endpoint_epoch:
+                self.refresh_endpoints()
+            shard = self.store.shard_of(key)
+            slots = len(self._endpoints[shard])
+            start = self._rr.get(shard, 0)
+            self._rr[shard] = (start + 1) % slots
+            redirected = False
+            for i in range(slots):
+                slot = (start + i) % slots
+                try:
+                    reply, tx, rx = self._conn_for(shard, slot).rpc(
+                        ["fetch", key, held])
+                except (OSError, ConnectionError, TimeoutError) as e:
+                    self._drop_conn(shard, slot)
+                    last_err = e
+                    continue
+                self.tx_bytes += tx
+                self.rx_bytes += rx
+                if reply and reply[0] == "redirect":
+                    # tombstoned old owner: refresh the endpoint map and
+                    # retry once against the new owner's endpoints
+                    self.counts["redirects"] += 1
+                    last_err = ConnectionError(
+                        f"{key!r} migrated to shard {reply[2]} "
+                        f"(epoch {reply[3]})")
+                    redirected = True
+                    break
+                if reply and reply[0] == "error":
+                    # e.g. a replica that has not mirrored this key yet —
+                    # try the next endpoint, then the parent
+                    last_err = KeyError(str(reply[2:3]))
+                    continue
+                return reply[2], reply[3], reply[4]
+            if redirected and attempt == 0:
+                self.refresh_endpoints()
                 continue
-            self.tx_bytes += tx
-            self.rx_bytes += rx
-            if reply and reply[0] == "error":
-                # e.g. a replica that has not mirrored this key yet —
-                # try the next endpoint, then the parent
-                last_err = KeyError(str(reply[2:3]))
-                continue
-            return reply[2], reply[3], reply[4]
+            break
         raise FetchUnavailable(str(last_err))
 
     # -- public API -------------------------------------------------

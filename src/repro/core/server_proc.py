@@ -40,6 +40,15 @@ seq-stamped metadata otherwise; the accumulated acks ride along with the
 next params-carrying reply (or an explicit ``sync`` command — the
 ``sync_mirrors()`` barrier).  See ``docs/WIRE_PROTOCOL.md`` for the
 normative message-by-message semantics.
+
+Elastic membership (wire v4, ``docs/ELASTICITY.md``): cluster ownership
+lives on a consistent-hash ring with explicit epochs, and live migration
+ships a cluster's fold state between workers via the ``mig_export`` /
+``mig_install`` / ``mig_redirects`` commands.  Workers tombstone
+migrated-away keys and answer replying ops on them with a ``redirect``
+naming the new owner; submits that race a fence park worker-side and are
+replayed (new owner) or redirected (old owner) — held-seq dedup makes
+every such re-delivery idempotent.
 """
 
 from __future__ import annotations
@@ -62,7 +71,8 @@ from repro.obs.record import Telemetry, current_trace
 
 # commands that produce exactly one reply; everything else is fire-and-forget
 REPLY_OPS = frozenset({"drain", "drain_shard", "gmeta", "greduce", "sdrain",
-                       "sync", "ping", "obsdump", "stop", "fetch"})
+                       "sync", "ping", "obsdump", "stop", "fetch",
+                       "mig_export", "mig_install", "mig_redirects"})
 
 
 # ------------------------------------------------------------------ wire fmt
@@ -89,13 +99,17 @@ def delta_from_wire(w):
 
 def make_seed_blob(shard_records, max_coalesce: int, agg_cfg,
                    masker, mirror_sync_every: int = 1,
-                   telemetry=None) -> bytes:
+                   telemetry=None, epoch: int = 0,
+                   migrated=None) -> bytes:
     """Everything a fresh worker needs, in wire format: its owned cluster
     records, the fold config, the masker parameters (the masker must live
     worker-side — secure rounds are model-local per server process), the
-    lazy-mirror-sync cadence, and the telemetry config (``None`` = off,
+    lazy-mirror-sync cadence, the telemetry config (``None`` = off,
     else ``{"sample_n": N}`` — the worker builds its own ``Telemetry``
-    and ships it back via the ``obsdump`` command)."""
+    and ships it back via the ``obsdump`` command), the current ownership
+    ``epoch``, and the ``migrated`` tombstone map (``key -> [dst, epoch]``
+    for clusters this worker must redirect rather than serve — see
+    docs/ELASTICITY.md)."""
     return packb({
         "records": [[key, params, meta_to_wire(meta)]
                     for key, params, meta in shard_records],
@@ -105,6 +119,9 @@ def make_seed_blob(shard_records, max_coalesce: int, agg_cfg,
                    else [int(masker.seed), float(masker.mask_scale)]),
         "sync_every": int(mirror_sync_every),
         "telemetry": telemetry,
+        "epoch": int(epoch),
+        "migrated": {str(k): [int(v[0]), int(v[1])]
+                     for k, v in (migrated or {}).items()},
     })
 
 
@@ -155,6 +172,21 @@ class ShardWorker:
         for key, params, meta_w in blob["records"]:
             self._ensure(key, params, meta_from_wire(meta_w))
         self.gslice: deque = deque()       # (seq, params, meta, delta)
+        # elastic membership (docs/ELASTICITY.md): the highest ownership
+        # epoch this worker has observed, and the tombstone map for
+        # clusters migrated away — replying ops on a tombstoned key answer
+        # ["redirect", key, dst, epoch] instead of serving stale state
+        self.epoch = int(blob.get("epoch", 0))
+        self.migrated: dict[str, tuple[int, int]] = {
+            str(k): (int(v[0]), int(v[1]))
+            for k, v in (blob.get("migrated") or {}).items()}
+        # submits that raced a migration fence: messages for keys this
+        # worker does not serve (tombstoned, or not yet installed) park
+        # here in arrival order; ``mig_install`` replays the installed
+        # key's parked messages, ``mig_redirects`` hands the rest back to
+        # the parent for re-delivery to the new owner (held-seq dedup on
+        # the receiving side makes a duplicate delivery a no-op)
+        self.parked: list[tuple[str, bytes]] = []
         # replay dedup: seqs this worker currently HOLDS (queued, not yet
         # folded).  A journal replay racing messages that already arrived
         # (TCP reconnects) redelivers exactly the unacked entries, so a
@@ -197,6 +229,21 @@ class ShardWorker:
         so its replay must be re-attempted, not swallowed."""
         return seq in self.held
 
+    def _serves(self, key: str) -> bool:
+        """True if this worker currently owns ``key``'s fold state.  False
+        during a migration race: either the key was migrated away
+        (tombstoned) or it is migrating *in* and ``mig_install`` has not
+        landed yet — both park the message instead of serving it."""
+        return key in self.records and key not in self.migrated
+
+    def _park(self, key: str, msg):
+        """Hold a submit that raced a migration fence; re-serialized so
+        replay/redirect re-delivers the exact original bytes."""
+        self.parked.append((key, packb(msg)))
+        if self.tel is not None:
+            self.tel.metrics.counter("parked_submits").inc()
+        return None
+
     # --------------------------------------------------------------- dispatch
     def handle(self, msg):
         """One decoded command -> reply tuple (or None for fire-and-forget).
@@ -222,7 +269,9 @@ class ShardWorker:
                         f"batch-item: {type(e).__name__}: {e}")
             return None
         if op == "sub":
-            _, seq, key, params, meta_w, delta_w = msg
+            _, seq, key, params, meta_w, delta_w, _epoch = msg
+            if not self._serves(key):
+                return self._park(key, msg)
             if not self._is_replay_dup(int(seq)):
                 self.records[key]["pending"].append(
                     (seq, params, meta_from_wire(meta_w),
@@ -237,7 +286,9 @@ class ShardWorker:
                 self.held.add(int(seq))
             return None
         if op == "ssub":
-            _, seq, key, round_id, client_id, masked, delta_w = msg
+            _, seq, key, round_id, client_id, masked, delta_w, _epoch = msg
+            if not self._serves(key):
+                return self._park(key, msg)
             if not self._is_replay_dup(int(seq)):
                 bucket = self.records[key]["secure"].setdefault(
                     int(round_id), [])
@@ -246,15 +297,25 @@ class ShardWorker:
                 self.held.add(int(seq))
             return None
         if op == "ensure":
-            _, key, params = msg
+            _, key, params, _epoch = msg
+            if key in self.migrated:
+                return self._park(key, msg)
             self._ensure(key, params)
             return None
         if op == "fetch":
             return self.fetch(msg[1], msg[2] if len(msg) > 2 else None)
         if op == "mirror":
             _, key, params, meta_w = msg
+            if key in self.migrated:
+                return None      # stale push that raced the fence: drop
             self._mirror(key, params, meta_w)
             return None
+        if op == "mig_export":
+            return self._mig_export(msg[1], int(msg[2]), int(msg[3]))
+        if op == "mig_install":
+            return self._mig_install(msg[1], int(msg[2]), msg[3])
+        if op == "mig_redirects":
+            return self._mig_redirects()
         if op == "drain":
             return self._drain_key(msg[1])
         if op == "drain_shard":
@@ -306,7 +367,11 @@ class ShardWorker:
         tuple and the internally-locked wire cache, never the mutable fold
         state.  ``held`` is the client's ``[samples, epochs, round]``
         version or ``None``; the reply's ``result`` discriminator is
-        ``FETCH_FULL`` / ``FETCH_NOT_MODIFIED`` / ``FETCH_DELTA``."""
+        ``FETCH_FULL`` / ``FETCH_NOT_MODIFIED`` / ``FETCH_DELTA``.
+        A tombstoned key answers a redirect naming the new owner."""
+        mig = self.migrated.get(key)
+        if mig is not None:
+            return ["redirect", key, mig[0], mig[1]]
         rec = self.records.get(key)
         snap = rec.get("snap") if rec is not None else None
         if snap is None:
@@ -336,6 +401,92 @@ class ShardWorker:
         rec["params"], rec["meta"] = params, meta_from_wire(meta_w)
         self._publish(rec)
 
+    # -------------------------------------------------------------- migration
+    def _mig_export(self, key: str, epoch: int, dst: int):
+        """Ship one cluster's complete fold state to its new owner and
+        tombstone the key (docs/ELASTICITY.md §3).  A ``None`` state means
+        this worker no longer holds the record — it was respawned after
+        the ring flipped, so its fresh seed excluded the key; the parent
+        then completes the migration by reseeding the destination
+        instead."""
+        self.epoch = max(self.epoch, int(epoch))
+        rec = self.records.pop(key, None)
+        if rec is None:
+            return ["mig_state", key, None]
+        self.migrated[key] = (int(dst), int(epoch))
+        state = {
+            "params": rec["params"],
+            "meta": meta_to_wire(rec["meta"]),
+            "pending": [[seq, p, meta_to_wire(m), delta_to_wire(d)]
+                        for seq, p, m, d in rec["pending"]],
+            "secure": [[rid, [[seq, cid, masked, delta_to_wire(d)]
+                              for seq, cid, masked, d in bucket]]
+                       for rid, bucket in rec["secure"].items()],
+            "unsynced": list(rec["unsynced"]),
+            "drains": int(rec["drains"]),
+        }
+        shipped = {int(s) for s, _, _, _ in rec["pending"]}
+        for bucket in rec["secure"].values():
+            shipped.update(int(s) for s, _, _, _ in bucket)
+        self.held.difference_update(shipped)
+        return ["mig_state", key, state]
+
+    def _mig_install(self, key: str, epoch: int, state):
+        """Install a migrated cluster as the new owner.  Idempotent under
+        the parent's exchange-retry: seqs the held-dedup set already has
+        (a respawn's journal replay delivered them first) are skipped, and
+        the params overwrite equals the parent-mirror seed the respawn
+        used, so a second install changes nothing."""
+        self.epoch = max(self.epoch, int(epoch))
+        self.migrated.pop(key, None)
+        params = state["params"]
+        meta = meta_from_wire(state["meta"])
+        self._ensure(key, params, meta)
+        rec = self.records[key]
+        rec["params"], rec["meta"] = params, meta
+        self._publish(rec)
+        n_shipped = 0
+        for seq, p, m_w, d_w in state.get("pending", []):
+            if int(seq) in self.held:
+                continue
+            rec["pending"].append((seq, p, meta_from_wire(m_w),
+                                   delta_from_wire(d_w)))
+            self.held.add(int(seq))
+            n_shipped += 1
+        for rid, bucket in state.get("secure", []):
+            dst_bucket = rec["secure"].setdefault(int(rid), [])
+            for seq, cid, masked, d_w in bucket:
+                if int(seq) in self.held:
+                    continue
+                dst_bucket.append((seq, cid, masked, delta_from_wire(d_w)))
+                self.held.add(int(seq))
+                n_shipped += 1
+        rec["unsynced"].extend(int(s) for s in state.get("unsynced", []))
+        rec["drains"] = max(rec["drains"], int(state.get("drains", 0)))
+        self._replay_parked(key)
+        return ["mig_installed", key, n_shipped]
+
+    def _replay_parked(self, key: str):
+        """Re-dispatch messages parked for a key that just installed,
+        in arrival order — after the shipped pending queue, preserving
+        the submit FIFO across the migration."""
+        mine, rest = [], []
+        for k, raw in self.parked:
+            (mine if k == key else rest).append((k, raw))
+        self.parked = rest
+        for _, raw in mine:
+            self.handle(unpackb(raw))
+
+    def _mig_redirects(self):
+        """Hand back the raw messages parked for migrated-away keys so the
+        parent re-delivers them to the new owner; parked messages for keys
+        still migrating *in* stay parked."""
+        out, keep = [], []
+        for k, raw in self.parked:
+            (out if k in self.migrated else keep).append((k, raw))
+        self.parked = keep
+        return ["redirected", [raw for _, raw in out]]
+
     # ----------------------------------------------------------------- drains
     def _drain_key(self, key: str):
         """Fold every pending update for one model, ``max_coalesce`` at a
@@ -351,6 +502,9 @@ class ShardWorker:
         mirror swap stay one atomic step."""
         from repro.core.aggregation import coalesced_aggregate
 
+        mig = self.migrated.get(key)
+        if mig is not None:
+            return ["redirect", key, mig[0], mig[1]]
         rec = self.records[key]
         tel = self.tel
         folded = fast = batches = 0
@@ -456,6 +610,9 @@ class ShardWorker:
         from the worker's own masker (seed reconstruction)."""
         from repro.core.aggregation import secure_coalesced_aggregate
 
+        mig = self.migrated.get(key)
+        if mig is not None:
+            return ["redirect", key, mig[0], mig[1]]
         rec = self.records[key]
         batch = rec["secure"].pop(round_id, [])
         if not batch:

@@ -49,6 +49,7 @@ double-counting rounds.  See the class docstring for the full design.
 
 from __future__ import annotations
 
+import bisect
 import itertools
 import threading
 import zlib
@@ -82,13 +83,93 @@ GLOBAL_KEY = "__global__"
 
 
 def stable_shard(key: str, n_shards: int) -> int:
-    """Stable cluster-key -> shard assignment (crc32, never Python's
-    randomized ``hash``): a pure function of the key, reproducible across
-    threads, processes and restarts, so no ownership table exists to drift
-    out of sync with the registry."""
+    """Legacy modulo cluster-key -> shard map (crc32, never Python's
+    randomized ``hash``).  Kept for reference and the property tests that
+    contrast it with the ring: the modulo map reassigns ~all keys when K
+    changes, which is exactly why routing now goes through ``HashRing``.
+    Never consult this for live routing — ownership can move at runtime
+    (``migrate_cluster``), and only ``HashRing.shard_of`` carries the
+    overrides + epoch (docs/ELASTICITY.md; fedlint FED404)."""
     if key == GLOBAL_KEY:
         return 0
     return zlib.crc32(str(key).encode()) % n_shards
+
+
+class HashRing:
+    """Consistent-hash ring with explicit ownership epochs — the routing
+    authority shared by every sharded topology (docs/ELASTICITY.md).
+
+    Each shard owns ``vnodes`` points on a 32-bit ring at the stable crc32
+    positions of ``"s{shard}:{vnode}"`` (never Python's randomized
+    ``hash``), so the base assignment is a pure function of (key, K,
+    vnodes) — reproducible across threads, processes, restarts and
+    ``PYTHONHASHSEED``.  Growing or shrinking K moves only ~1/K of the
+    keys (the minimal-movement property the modulo map lacks; see
+    ``tests/test_hash_ring.py``).
+
+    Live migration overlays the ring with an **override table**: one
+    ``assign(key, dst)`` call atomically bumps the monotone ownership
+    ``epoch`` and records ``key -> (dst, epoch)``.  The overrides dict is
+    copy-on-write (replaced wholesale under ``_lock``, never mutated in
+    place), so the submit hot path reads routing with zero locks.  The
+    global model always routes to shard 0 and never migrates — its fold
+    is parent-owned in every topology.
+    """
+
+    def __init__(self, n_shards: int, vnodes: int = 64):
+        self.n_shards = max(int(n_shards), 1)
+        self.vnodes = max(int(vnodes), 1)
+        points = sorted(
+            (zlib.crc32(f"s{shard}:{v}".encode()), shard)
+            for shard in range(self.n_shards) for v in range(self.vnodes))
+        self._hashes = [h for h, _ in points]
+        self._points = [s for _, s in points]
+        self._lock = threading.Lock()
+        self._overrides: dict[str, tuple[int, int]] = {}  # key -> (dst, ep)
+        self.epoch = 0
+
+    def owner(self, key: str) -> int:
+        """Pure ring position of a key — ignores migration overrides.
+        Routing callers must use ``shard_of`` instead (fedlint FED404)."""
+        if key == GLOBAL_KEY:
+            return 0
+        i = bisect.bisect_right(self._hashes, zlib.crc32(str(key).encode()))
+        return self._points[i % len(self._points)]
+
+    def shard_of(self, key: str) -> int:
+        """Current owner: the override table first (lock-free copy-on-write
+        read), the ring position otherwise."""
+        if key == GLOBAL_KEY:
+            return 0
+        # fedlint: unlocked-ok(copy-on-write dict swapped wholesale under _lock)
+        ov = self._overrides.get(str(key))
+        return ov[0] if ov is not None else self.owner(key)
+
+    def assign(self, key: str, dst: int) -> int:
+        """Move a key's ownership to ``dst``; returns the bumped epoch.
+        This is the fence point of a migration: the instant the new
+        overrides dict is published, every later ``shard_of`` routes to
+        the new owner."""
+        key = str(key)
+        dst = int(dst)
+        if key == GLOBAL_KEY:
+            raise ValueError("the global model is parent-owned and never "
+                             "migrates")
+        if not 0 <= dst < self.n_shards:
+            raise ValueError(f"destination shard {dst} out of range "
+                             f"[0, {self.n_shards})")
+        with self._lock:
+            self.epoch += 1
+            updated = dict(self._overrides)
+            updated[key] = (dst, self.epoch)
+            self._overrides = updated          # atomic reference swap
+            return self.epoch
+
+    def overrides(self) -> dict:
+        """Snapshot of the override table (``{key: (dst, epoch)}``) — what
+        seed blobs ship so respawned ex-owners still answer redirects."""
+        # fedlint: unlocked-ok(copy-on-write overrides snapshot read)
+        return self._overrides
 
 
 @dataclass(frozen=True)
@@ -725,6 +806,12 @@ class ModelStore(_StoreBase):
             total += self.drain("cluster", key)
         return total
 
+    def migrate_cluster(self, cluster_key: str, dst_shard: int) -> int:
+        raise RuntimeError(
+            "the flat ModelStore has no shards to migrate between — use a "
+            "sharded topology (server_shards / server_processes / "
+            "server_hosts)")
+
     def agg_stats(self) -> dict:
         """Single-store flavor of the cross-topology ``agg_stats`` surface
         (the sharded/process/TCP flavors add shard, respawn, mirror-sync
@@ -790,13 +877,16 @@ class _Shard:
 class ShardedModelStore(_StoreBase):
     """``ModelStore`` semantics partitioned into K independent shards.
 
-    Cluster models are assigned to shards by a *stable* hash
-    (``crc32(key) % K`` — never Python's randomized ``hash``), so the
-    assignment is reproducible across processes and restarts and never needs
-    an ownership table.  Submits to different clusters touch only their
-    record's queue lock and their shard's stats lock (the registry itself is
-    copy-on-write, read lock-free); global submits are struck round-robin
-    across per-shard queue slices carrying a monotone arrival ``seq``.
+    Cluster models are assigned to shards by a consistent-hash ring
+    (``HashRing`` — stable crc32 vnode points, never Python's randomized
+    ``hash``), so the base assignment is reproducible across processes and
+    restarts, K changes move only ~1/K of the keys, and live migration
+    (``migrate_cluster``) overlays epoch-stamped ownership overrides
+    without a restart (docs/ELASTICITY.md).  Submits to different clusters
+    touch only their record's queue lock and their shard's stats lock (the
+    registry itself is copy-on-write, read lock-free; so is the ring's
+    override table); global submits are struck round-robin across
+    per-shard queue slices carrying a monotone arrival ``seq``.
 
     ``drain_global`` folds all queued global slices two-level: one
     ``plan_coalesce`` walk over the seq-sorted concatenation fixes every
@@ -817,11 +907,14 @@ class ShardedModelStore(_StoreBase):
                  agg_cfg: AggregationConfig = AggregationConfig(),
                  n_shards: int = 4, batch_aggregation: bool = False,
                  max_coalesce: int = 16, masker=None,
-                 drain_timeout_s: float = 30.0, telemetry=None):
+                 drain_timeout_s: float = 30.0, ring_vnodes: int = 64,
+                 telemetry=None):
         self.n_shards = max(int(n_shards), 1)
         super().__init__(init_params, cluster_keys, agg_cfg,
                          batch_aggregation, max_coalesce, masker,
                          drain_timeout_s, telemetry)
+        self.ring = HashRing(self.n_shards, ring_vnodes)
+        self.n_cluster_migrations = 0       # under the shared _drain_lock
         self._shards = [_Shard(i) for i in range(self.n_shards)]
         self._gseq = itertools.count()      # global-queue arrival order
         # two-level fold instrumentation (under the shared _drain_lock)
@@ -836,8 +929,36 @@ class ShardedModelStore(_StoreBase):
         return [s.stats for s in self._shards]
 
     def shard_of(self, key: str) -> int:
-        """Stable cluster-key -> shard assignment — see ``stable_shard``."""
-        return stable_shard(key, self.n_shards)
+        """Current cluster-key -> shard owner — the consistent-hash ring
+        plus any live-migration overrides (``HashRing.shard_of``)."""
+        return self.ring.shard_of(key)
+
+    def ownership_epoch(self) -> int:
+        """Monotone epoch bumped by every ``migrate_cluster`` — the
+        staleness version for routing caches (``FetchClient``)."""
+        # fedlint: unlocked-ok(monotone int; torn read returns a valid epoch)
+        return self.ring.epoch
+
+    def migrate_cluster(self, cluster_key: str, dst_shard: int) -> int:
+        """Move one cluster model to another shard; returns the new
+        ownership epoch.  Thread shards share the parent's records, so the
+        flip is pure routing: holding ``rec.lock`` fences in-flight drains
+        (drain beats take it per fold), and the next beat's
+        ``shard_cluster_keys`` sweep picks the key up on its new shard."""
+        key = self._key("cluster", cluster_key)
+        rec = self._record(key)              # unknown cluster -> KeyError
+        tel = self._tel
+        t0 = clock.monotonic_ns() if tel is not None else 0
+        with rec.lock:
+            epoch = self.ring.assign(key, int(dst_shard))
+        with self._drain_lock:
+            self.n_cluster_migrations += 1
+        if tel is not None:
+            tel.metrics.counter("cluster_migrations").inc()
+            tel.event("migrate", t0, clock.monotonic_ns() - t0,
+                      current_trace(),
+                      {"key": key, "dst": int(dst_shard), "epoch": epoch})
+        return epoch
 
     def shard_cluster_keys(self, shard: int):
         """Cluster keys owned by one shard (that shard's drain beat)."""
@@ -991,7 +1112,12 @@ class ShardedModelStore(_StoreBase):
         return total
 
     def agg_stats(self) -> dict:
-        return _sharded_agg_stats(self, self._shards)
+        with self._drain_lock:
+            migrations = self.n_cluster_migrations
+        return _sharded_agg_stats(self, self._shards,
+                                  # fedlint: unlocked-ok(monotone epoch stat)
+                                  extra={"ownership_epoch": self.ring.epoch,
+                                         "cluster_migrations": migrations})
 
 
 def _sharded_agg_stats(store, shards, extra: dict | None = None) -> dict:
@@ -1192,7 +1318,7 @@ class ProcessShardedModelStore(_StoreBase):
                  max_coalesce: int = 16, masker=None,
                  drain_timeout_s: float = 30.0, inprocess: bool = False,
                  server_hosts=None, mirror_sync_every: int = 1,
-                 telemetry=None):
+                 ring_vnodes: int = 64, telemetry=None):
         if server_hosts:
             # one worker per remote server; addresses fix the shard count.
             # Read-replica syntax: "owner:port|replica:port|..." — the
@@ -1218,6 +1344,8 @@ class ProcessShardedModelStore(_StoreBase):
                          drain_timeout_s, telemetry)
         self.inprocess = bool(inprocess) and self.server_hosts is None
         self.mirror_sync_every = max(int(mirror_sync_every), 1)
+        self.ring = HashRing(self.n_shards, ring_vnodes)
+        self.n_cluster_migrations = 0     # under the shared _drain_lock
         self._gseq = itertools.count()
         self.n_global_drains = 0
         self.n_global_partials = 0
@@ -1256,9 +1384,17 @@ class ProcessShardedModelStore(_StoreBase):
             recs.append((key, params, meta))
         tcfg = ({"sample_n": self._tel.sample_n}
                 if self._tel is not None else None)
+        # every worker learns where migrated-away keys live, so respawned
+        # ex-owners keep answering redirects instead of erroring unknown
+        migrated = {key: [dst, ep]
+                    for key, (dst, ep) in self.ring.overrides().items()
+                    if dst != shard_idx}
         return server_proc.make_seed_blob(recs, self.max_coalesce,
                                           self.agg_cfg, self.masker,
-                                          self.mirror_sync_every, tcfg)
+                                          self.mirror_sync_every, tcfg,
+                                          # fedlint: unlocked-ok(monotone epoch; seed built under rpc_lock)
+                                          epoch=self.ring.epoch,
+                                          migrated=migrated)
 
     def close(self, timeout: float | None = None):
         """Stop every worker with a bounded join (terminate/kill fallback;
@@ -1313,9 +1449,15 @@ class ProcessShardedModelStore(_StoreBase):
         return [s.stats for s in self._proc_shards]
 
     def shard_of(self, key: str) -> int:
-        """Same stable assignment as ``ShardedModelStore.shard_of`` — the
+        """Same ring assignment as ``ShardedModelStore.shard_of`` — the
         two sharded topologies are drop-in replacements for each other."""
-        return stable_shard(key, self.n_shards)
+        return self.ring.shard_of(key)
+
+    def ownership_epoch(self) -> int:
+        """Monotone epoch bumped by every ``migrate_cluster`` — the
+        staleness version for routing caches (``FetchClient``)."""
+        # fedlint: unlocked-ok(monotone int; torn read returns a valid epoch)
+        return self.ring.epoch
 
     def shard_cluster_keys(self, shard: int):
         # fedlint: unlocked-ok(copy-on-write registry snapshot read)
@@ -1335,10 +1477,16 @@ class ProcessShardedModelStore(_StoreBase):
         # command-queue FIFO makes the worker register the model before any
         # subsequently submitted update for it; a respawn between the
         # registry swap and this put re-seeds from the registry (idempotent)
-        sh = self._proc_shards[self.shard_of(key)]
-        raw = server_proc.packb(["ensure", key, seed])
-        with sh.journal_lock:
-            self._outbox_put(sh, raw)
+        while True:
+            idx = self.shard_of(key)
+            sh = self._proc_shards[idx]
+            with sh.journal_lock:
+                if self.shard_of(key) != idx:
+                    continue    # migration fenced this key mid-publish
+                raw = server_proc.packb(["ensure", key, seed,
+                                         self.ring.epoch])
+                self._outbox_put(sh, raw)
+            break
         for h in sh.replicas:       # replicas must serve the key too
             if h.alive():
                 h.put(raw)
@@ -1364,29 +1512,50 @@ class ProcessShardedModelStore(_StoreBase):
         seq = next(self._gseq)
         tel = self._tel
         trace = current_trace() if tel is not None else 0
+        t0 = clock.monotonic_ns() if tel is not None else 0
         if key == GLOBAL_KEY:
             # global tier: strike a round-robin worker slice (the two-level
-            # fold is seq-sorted, so slice assignment is semantically free)
+            # fold is seq-sorted, so slice assignment is semantically free;
+            # the global model is parent-owned and never migrates)
             sh = self._proc_shards[seq % self.n_shards]
-            kind = "gsub"
             raw = server_proc.packb(
                 ["gsub", seq, updated_params, meta_to_wire(updated_meta),
                  delta_to_wire(delta)])
+            sh.stats.count_enqueue()    # before publish — see _SubmitStats
+            with sh.journal_lock:
+                sh.journal[seq] = _JournalEntry("gsub", key, delta.rounds,
+                                                raw)
+                sh.pending_counts[key] = sh.pending_counts.get(key, 0) + 1
+                sh.pending_rounds[key] = \
+                    sh.pending_rounds.get(key, 0) + delta.rounds
+                depth = sh.pending_counts[key]
+                self._outbox_put(sh, raw)
         else:
             self._record(key)          # unknown cluster -> KeyError, as flat
-            sh = self._proc_shards[self.shard_of(key)]
-            kind = "sub"
-            raw = server_proc.packb(
-                ["sub", seq, key, updated_params, meta_to_wire(updated_meta),
-                 delta_to_wire(delta)])
-        sh.stats.count_enqueue()        # before publish — see _SubmitStats
-        t0 = clock.monotonic_ns() if tel is not None else 0
-        with sh.journal_lock:
-            sh.journal[seq] = _JournalEntry(kind, key, delta.rounds, raw)
-            sh.pending_counts[key] = sh.pending_counts.get(key, 0) + 1
-            sh.pending_rounds[key] = sh.pending_rounds.get(key, 0) + delta.rounds
-            depth = sh.pending_counts[key]
-            self._outbox_put(sh, raw)
+            meta_w = meta_to_wire(updated_meta)
+            delta_w = delta_to_wire(delta)
+            while True:
+                idx = self.shard_of(key)
+                sh = self._proc_shards[idx]
+                sh.stats.count_enqueue()  # before publish — see _SubmitStats
+                with sh.journal_lock:
+                    if self.shard_of(key) != idx:
+                        # a migration fenced this key between the route
+                        # read and the journal lock: reroute (the journal
+                        # move holds both journal locks, so entries
+                        # published here can never be missed)
+                        continue
+                    raw = server_proc.packb(
+                        ["sub", seq, key, updated_params, meta_w, delta_w,
+                         self.ring.epoch])
+                    sh.journal[seq] = _JournalEntry("sub", key, delta.rounds,
+                                                    raw)
+                    sh.pending_counts[key] = sh.pending_counts.get(key, 0) + 1
+                    sh.pending_rounds[key] = \
+                        sh.pending_rounds.get(key, 0) + delta.rounds
+                    depth = sh.pending_counts[key]
+                    self._outbox_put(sh, raw)
+                break
         sh.stats.observe_depth(depth)
         if tel is not None:
             tel.metrics.histogram("queue_depth").observe(depth)
@@ -1885,17 +2054,24 @@ class ProcessShardedModelStore(_StoreBase):
                                          round_id, masked_delta, delta)
         self._record(key)
         seq = next(self._gseq)
-        sh = self._proc_shards[self.shard_of(key)]
-        sh.stats.count_enqueue()        # before publish — see _SubmitStats
-        raw = server_proc.packb(
-            ["ssub", seq, key, int(round_id), str(client_id), masked_delta,
-             delta_to_wire(delta)])
         bucket = (key, int(round_id))
-        with sh.journal_lock:
-            sh.journal[seq] = _JournalEntry("secure", key, delta.rounds, raw)
-            sh.secure_counts[bucket] = sh.secure_counts.get(bucket, 0) + 1
-            depth = sh.secure_counts[bucket]
-            self._outbox_put(sh, raw)
+        delta_w = delta_to_wire(delta)
+        while True:
+            idx = self.shard_of(key)
+            sh = self._proc_shards[idx]
+            sh.stats.count_enqueue()    # before publish — see _SubmitStats
+            with sh.journal_lock:
+                if self.shard_of(key) != idx:
+                    continue    # migration fenced this key — reroute
+                raw = server_proc.packb(
+                    ["ssub", seq, key, int(round_id), str(client_id),
+                     masked_delta, delta_w, self.ring.epoch])
+                sh.journal[seq] = _JournalEntry("secure", key, delta.rounds,
+                                                raw)
+                sh.secure_counts[bucket] = sh.secure_counts.get(bucket, 0) + 1
+                depth = sh.secure_counts[bucket]
+                self._outbox_put(sh, raw)
+            break
         sh.stats.observe_depth(depth)
         return depth
 
@@ -1929,6 +2105,149 @@ class ProcessShardedModelStore(_StoreBase):
         return self._rpc(
             sh, server_proc.packb(["sdrain", key, int(round_id),
                                    [str(i) for i in expected_ids]]), apply)
+
+    # ---------------------------------------------------- cluster migration
+    def migrate_cluster(self, cluster_key: str, dst_shard: int) -> int:
+        """Live-migrate one cluster model to another worker; returns the
+        new ownership epoch (docs/ELASTICITY.md is the normative spec).
+
+        Protocol (under both workers' rpc locks, index order): sync any
+        provisional acks so the journal holds exactly the worker's pending
+        seqs, **fence** by flipping the ring override (new submits route
+        and journal to the new owner from that instant), flush the old
+        owner's outbox (pre-fence stragglers reach it ahead of the export
+        — command-queue FIFO), move the key's journal entries + counters
+        to the new owner's shard, then ``mig_export`` (the old worker pops
+        the record, ships params + pending + secure buckets and tombstones
+        the key) and ``mig_install`` (the new worker installs, skipping
+        seqs its held-dedup already has — the idempotence that makes every
+        crash-retry safe).  Finally ``mig_redirects`` collects messages
+        the old worker parked for the migrated key (submits that raced
+        the fence) and re-delivers them to the new owner, where held-seq
+        dedup drops any duplicate.  Any failure after the journal move
+        degrades to ``_respawn(dst)``: the parent mirror + moved journal
+        are the source of truth, so a fresh seed + replay completes the
+        migration."""
+        key = self._key("cluster", cluster_key)
+        rec = self._record(key)              # unknown cluster -> KeyError
+        dst_i = int(dst_shard)
+        if not 0 <= dst_i < self.n_shards:
+            raise ValueError(f"destination shard {dst_i} out of range "
+                             f"[0, {self.n_shards})")
+        src_i = self.shard_of(key)
+        if src_i == dst_i:
+            # fedlint: unlocked-ok(monotone int; no-op returns current epoch)
+            return self.ring.epoch           # already owned by dst: no-op
+        src, dst = self._proc_shards[src_i], self._proc_shards[dst_i]
+        first, second = (src, dst) if src_i < dst_i else (dst, src)
+        tel = self._tel
+        t0 = clock.monotonic_ns() if tel is not None else 0
+        with first.rpc_lock, second.rpc_lock:
+            if tel is None:
+                epoch = self._migrate_locked(key, rec, src, dst)
+            else:
+                with tel.span("migrate", current_trace(),
+                              {"key": key, "src": src_i, "dst": dst_i}):
+                    epoch = self._migrate_locked(key, rec, src, dst)
+        with self._drain_lock:
+            self.n_cluster_migrations += 1
+        if tel is not None:
+            tel.metrics.counter("cluster_migrations").inc()
+            tel.event("migrate", t0, clock.monotonic_ns() - t0,
+                      current_trace(),
+                      {"key": key, "src": src_i, "dst": dst_i,
+                       "epoch": epoch})
+        return epoch
+
+    def _migrate_locked(self, key: str, rec: ModelRecord, src: _ProcShard,
+                        dst: _ProcShard) -> int:
+        """The fence -> ship -> ack -> replay body of ``migrate_cluster``.
+        Caller holds both shards' rpc locks (index order)."""
+        # 1. flush provisional (lazy-sync) acks: afterwards the journal
+        # holds exactly the seqs the src worker still queues for this key,
+        # so the export blob and the moved journal describe the same set
+        if self.mirror_sync_every > 1:
+            with src.journal_lock:
+                dirty = key in src.dirty
+            if dirty:
+                self._sync_shard(src)
+        # 2. fence + flip: from this instant every submit routes (and
+        # journals) to dst, stamped with the bumped epoch
+        epoch = self.ring.assign(key, dst.idx)
+        # 3. pre-fence stragglers in the outbox reach the src worker ahead
+        # of the export (command-queue FIFO)
+        with src.journal_lock:
+            self._flush_outbox(src)
+        # 4. move the key's journal entries + pending counters to dst: the
+        # journal is the crash-replay source of truth, so after this step
+        # a dst respawn alone completes the migration
+        a, b = (src, dst) if src.idx < dst.idx else (dst, src)
+        with a.journal_lock, b.journal_lock:
+            for seq in [s for s, e in src.journal.items() if e.key == key]:
+                dst.journal[seq] = src.journal.pop(seq)
+            if key in src.pending_counts:
+                dst.pending_counts[key] = dst.pending_counts.get(key, 0) + \
+                    src.pending_counts.pop(key)
+                dst.pending_rounds[key] = dst.pending_rounds.get(key, 0) + \
+                    src.pending_rounds.pop(key, 0)
+            for bkt in [b for b in src.secure_counts if b[0] == key]:
+                dst.secure_counts[bkt] = dst.secure_counts.get(bkt, 0) + \
+                    src.secure_counts.pop(bkt)
+            if key in src.dirty:          # empty after step 1; defensive
+                src.dirty.discard(key)
+                dst.dirty.add(key)
+            d = src.deferred.pop(key, None)
+            if d is not None:
+                dd = dst.deferred.setdefault(key, [0, 0, 0])
+                for i in range(3):
+                    dd[i] += d[i]
+        # 5. export: src pops the record, ships its state, tombstones the
+        # key.  A None blob means src was respawned mid-export (its fresh
+        # seed, post-flip, excludes the key) — fall back to reseeding dst,
+        # whose seed blob now includes the key from the parent mirror and
+        # whose journal replay delivers the moved entries.
+        try:
+            reply = self._exchange(src, server_proc.packb(
+                ["mig_export", key, epoch, dst.idx]))
+            self._check_error(src, reply)
+            state = reply[2]
+        except BaseException:
+            # a deferred submit-path error surfaced on the export: clear
+            # BOTH workers to the journaled truth before re-raising, so
+            # the half-moved key cannot be folded twice
+            self._respawn(src)
+            self._respawn(dst)
+            raise
+        if state is None:
+            self._respawn(dst)
+        else:
+            try:
+                reply = self._exchange(dst, server_proc.packb(
+                    ["mig_install", key, epoch, state]))
+                self._check_error(dst, reply)
+            except BaseException:
+                # journal + mirror are authoritative; a fresh dst seed +
+                # replay completes the migration
+                self._respawn(dst)
+        # 6. re-deliver submits the src worker parked for migrated keys
+        # (stragglers that raced the fence); dst's held-seq dedup makes a
+        # duplicate delivery (e.g. one also covered by a replay) a no-op
+        try:
+            reply = self._exchange(src, server_proc.packb(["mig_redirects"]))
+            self._check_error(src, reply)
+            redirected = reply[1]
+        except BaseException:
+            redirected = []   # a respawned src parked nothing; any moved
+            #                   entries were already delivered by replay
+        if redirected:
+            with dst.journal_lock:
+                for raw in redirected:
+                    self._outbox_put(dst, raw)
+        # 7. the new owner's read replicas serve the key from the parent
+        # mirror until the next fold pushes a fresher one
+        params, meta = rec.snapshot()
+        self._push_replicas(dst, key, params, meta_to_wire(meta))
+        return epoch
 
     # ------------------------------------------------------------- inspection
     def _count_drain_timeout(self, shard: int | None = None):
@@ -2003,5 +2322,7 @@ class ProcessShardedModelStore(_StoreBase):
                      "replica_pushes": sum(sh.replica_pushes
                                            for sh in self._proc_shards),
                      "replica_drops": sum(sh.replica_drops
-                                          for sh in self._proc_shards)}
+                                          for sh in self._proc_shards),
+                     "ownership_epoch": self.ring.epoch,
+                     "cluster_migrations": self.n_cluster_migrations}
         return _sharded_agg_stats(self, self._proc_shards, extra)

@@ -25,7 +25,7 @@ Frame layout (all integers big-endian):
 
     offset  size  field
     0       2     magic      b"FC"
-    2       1     version    0x03 (see the versioning rules in the spec)
+    2       1     version    0x04 (see the versioning rules in the spec)
     3       1     kind       0x00 command (parent->worker),
                              0x01 reply   (worker->parent)
     4       4     length     payload byte length (u32)
@@ -62,7 +62,7 @@ from repro.obs import clock
 from repro.obs.record import current_trace
 
 FRAME_MAGIC = b"FC"
-WIRE_VERSION = 3
+WIRE_VERSION = 4
 KIND_COMMAND = 0x00
 KIND_REPLY = 0x01
 _HEADER = struct.Struct(">2sBBIQ")      # magic, version, kind, length,

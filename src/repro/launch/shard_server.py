@@ -17,7 +17,7 @@ On startup the server prints one machine-readable line::
     SHARD_SERVER_LISTENING host=0.0.0.0 port=9701
 
 (the loopback spawner in tests/benchmarks parses it to learn the ephemeral
-port).  Wire v3 classifies each connection by its FIRST command:
+port).  Since wire v3 each connection is classified by its FIRST command:
 
 * ``fetch`` / ``ping`` opens a **read session** — any number run
   concurrently, serving conditional model fetches straight off the
@@ -30,6 +30,12 @@ port).  Wire v3 classifies each connection by its FIRST command:
   worker's held-seq dedup make the hand-off exact.  A parent's ``stop``
   (or a dropped connection) ends the session and releases the lock; the
   server keeps listening.
+
+Elastic membership (wire v4): the migration commands (``mig_export`` /
+``mig_install`` / ``mig_redirects``) ride the ordinary command session —
+the generic dispatch already pairs their replies — and a fetch for a
+migrated-away cluster answers a ``redirect`` naming the new owner
+(``docs/ELASTICITY.md``).
 
 The server's own lifecycle belongs to its supervisor (systemd/k8s/the
 loopback helper) — see ``docs/OPERATIONS.md``.

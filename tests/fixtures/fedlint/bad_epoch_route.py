@@ -1,0 +1,35 @@
+"""Golden-bad fixture for the epoch-routing rule (FED404).
+
+Scanned by tests only (the CLI walker skips ``fixtures``); every finding
+below is asserted by ``tests/test_fedlint.py`` with the fixture mounted
+at a ``src/repro/core/`` path.
+"""
+
+
+def stable_shard(key, n_shards):
+    return hash(key) % n_shards
+
+
+class HashRing:
+    def owner(self, key):
+        return 0
+
+    def shard_of(self, key):
+        return self.owner(key)                # inside HashRing: allowed
+
+
+class BadRouter:
+    def __init__(self, ring, n_shards):
+        self.ring = ring
+        self.n_shards = n_shards
+
+    def route_submit(self, key):
+        return stable_shard(key, self.n_shards)   # FED404: modulo map
+
+    def route_fetch(self, key):
+        return self.ring.owner(key)               # FED404: natural owner
+
+    def route_diagnostic(self, key):
+        # fedlint: epoch-ok(pre-migration placement shown in a debug dump)
+        natural = self.ring.owner(key)            # hatched: not a finding
+        return natural

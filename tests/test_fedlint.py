@@ -17,6 +17,7 @@ if str(REPO_ROOT) not in sys.path:
 from scripts.fedlint.core import Context, SourceFile  # noqa: E402
 from scripts.fedlint.rules import REGISTRY, rule_ids  # noqa: E402
 from scripts.fedlint.rules.determinism import DeterminismRule  # noqa: E402
+from scripts.fedlint.rules.elasticity import EpochRoutingRule  # noqa: E402
 from scripts.fedlint.rules.kernels import KernelTwinRule  # noqa: E402
 from scripts.fedlint.rules.locks import (  # noqa: E402
     HatchPolicyRule,
@@ -140,7 +141,7 @@ def _wire_findings(old: str, new: str):
 
 
 def test_wire_version_bump_without_doc_update_fails():
-    findings = _wire_findings("WIRE_VERSION = 3", "WIRE_VERSION = 4")
+    findings = _wire_findings("WIRE_VERSION = 4", "WIRE_VERSION = 5")
     assert any(f.rule == "FED402" and "WIRE_VERSION" in f.message
                for f in findings)
 
@@ -185,8 +186,64 @@ def test_wire_fetch_reply_contract_is_pinned():
                and "REPLY_OPS" in f.message for f in findings)
 
 
+def test_wire_migration_reply_contract_is_pinned():
+    """The v4 migration ops answer on the command session; dropping one
+    from ``REPLY_OPS`` while the spec's §4.8 table still documents its
+    reply is FED403 drift."""
+    text = (REPO_ROOT / SERVER_PROC).read_text()
+    assert '"mig_export"' in text
+    findings = WireDriftRule().finalize(Context(
+        root=REPO_ROOT,
+        overrides={SERVER_PROC: text.replace('"mig_export", ', '')}))
+    assert any(f.rule == "FED403" and "`mig_export`" in f.message
+               and "REPLY_OPS" in f.message for f in findings)
+
+
 def test_wire_doc_and_impl_currently_agree():
     assert WireDriftRule().finalize(Context(root=REPO_ROOT)) == []
+
+
+# =========================================================================
+# epoch routing (FED404)
+# =========================================================================
+
+
+def test_epoch_routing_fixture_findings():
+    src = SourceFile(FIXTURES / "bad_epoch_route.py",
+                     rel="src/repro/core/bad_epoch_route.py")
+    got = _ids(EpochRoutingRule().check(src))
+    assert got == [
+        ("FED404", 27),     # stable_shard modulo map
+        ("FED404", 30),     # ring natural owner
+    ]
+
+
+def test_epoch_routing_ring_internal_and_hatch_suppressed():
+    src = SourceFile(FIXTURES / "bad_epoch_route.py",
+                     rel="src/repro/core/bad_epoch_route.py")
+    flagged = {f.line for f in EpochRoutingRule().check(src)}
+    text = src.text.splitlines()
+    ring_internal = next(i for i, ln in enumerate(text, 1)
+                         if "inside HashRing: allowed" in ln)
+    hatched = next(i for i, ln in enumerate(text, 1)
+                   if "hatched: not a finding" in ln)
+    assert ring_internal not in flagged and hatched not in flagged
+
+
+def test_epoch_routing_rule_scope():
+    rule = EpochRoutingRule()
+    assert rule.applies("src/repro/core/store.py")
+    assert rule.applies("src/repro/launch/shard_server.py")
+    assert not rule.applies("tests/test_store_equivalence.py")
+    assert not rule.applies("src/repro/models/lstm.py")
+
+
+def test_epoch_routing_live_tree_clean():
+    rule = EpochRoutingRule()
+    for rel in ("src/repro/core/store.py", "src/repro/core/server_proc.py",
+                "src/repro/core/fetch.py", "src/repro/core/fedccl.py",
+                "src/repro/launch/shard_server.py"):
+        assert rule.check(SourceFile(REPO_ROOT / rel, rel=rel)) == []
 
 
 # =========================================================================

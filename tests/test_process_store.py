@@ -12,7 +12,11 @@ file spawns the actual worker processes and checks what only they can show:
   * crash recovery: a shard worker SIGKILLed mid-round is respawned and its
     journaled queue replayed without losing updates or double-counting
     ``effective_round`` (heavy), and a stuck (SIGSTOPped) worker surfaces a
-    counted drain timeout instead of a silent partial drain (heavy).
+    counted drain timeout instead of a silent partial drain (heavy),
+  * live cluster migration (``docs/ELASTICITY.md``): a cluster moved with a
+    pending queue folds it exactly once on the new owner (fast), and a
+    migration raced by concurrent submitters whose destination worker is
+    SIGKILLed right after the hand-off still loses nothing (heavy).
 """
 
 import os
@@ -296,6 +300,149 @@ def test_lazy_sync_read_barrier_no_stale_reads(init_tree):
             else:
                 break
         assert seen >= floor, (seen, floor)
+
+
+# =========================================================================
+# live cluster migration                                        [satellite]
+# =========================================================================
+
+def test_inprocess_migration_ships_pending_and_folds_once(init_tree):
+    """Fast deterministic twin of the heavy migration test: a cluster is
+    migrated while updates are still queued — the shipped queue folds
+    exactly once on the new owner, post-fence submits route there, and
+    every tier matches the unsharded reference fold."""
+    keys = ["c0", "c1"]
+    store = ProcessShardedModelStore(init_tree, keys, n_shards=2,
+                                     batch_aggregation=True, max_coalesce=4,
+                                     inprocess=True)
+    flat = ModelStore(init_tree, keys, batch_aggregation=True, max_coalesce=4)
+
+    rng = np.random.default_rng(17)
+
+    def push(key, n):
+        for _ in range(n):
+            tree = make_tree(rng)
+            for s in (store, flat):
+                s.handle_model_update("cluster", key, tree,
+                                      ModelMeta(5, 1, 1), UpdateDelta(5, 1, 1))
+
+    push("c0", 6)
+    push("c1", 3)
+    src = store.shard_of("c0")
+    dst = (src + 1) % 2
+    assert store.ownership_epoch() == 0
+    assert store.migrate_cluster("c0", dst) == 1     # fence bumps the epoch
+    assert store.shard_of("c0") == dst
+    assert store.ownership_epoch() == 1
+    push("c0", 2)                       # post-fence: routes to the new owner
+    assert store.pending_depth("cluster", "c0") == 8     # nothing dropped
+    assert store.drain_all() == flat.drain_all() == 11   # ...folded once
+    stats = store.agg_stats()
+    assert stats["cluster_migrations"] == 1
+    assert stats["ownership_epoch"] == 1
+    assert stats["respawns"] == 0       # clean hand-off, no journal fallback
+    assert stats["updates"] == stats["enqueued"] == 11
+    for key in keys:
+        assert store.pending_depth("cluster", key) == 0
+        assert store.meta("cluster", key) == flat.meta("cluster", key), key
+        assert store.effective_round("cluster", key) == \
+            store.meta("cluster", key).round
+        assert_trees_close(store.params("cluster", key),
+                           flat.params("cluster", key), msg=f"migrated {key}")
+    # migrating back is just another fence: epoch 2, same fold
+    assert store.migrate_cluster("c0", src) == 2
+    assert store.shard_of("c0") == src
+    push("c0", 1)
+    assert store.drain("cluster", "c0") == flat.drain("cluster", "c0") == 1
+    assert store.meta("cluster", "c0") == flat.meta("cluster", "c0")
+    store.close()
+
+
+@pytest.mark.heavy
+def test_kill_new_owner_right_after_migration_under_load(init_tree):
+    """Acceptance check for ``docs/ELASTICITY.md``: a cluster migrated
+    under concurrent load loses no updates and double-counts no
+    ``effective_round`` — even when the *new* owner is SIGKILLed right
+    after the hand-off.  The moved journal is the recovery source of
+    truth: the respawned destination re-seeds (ownership epoch and
+    tombstones ride the seed blob) and replays the shipped queue."""
+    keys = [f"k{i}" for i in range(6)]
+    n_threads, per_thread = 4, 20
+    with ProcessShardedModelStore(init_tree, keys, agg_cfg=NOFAST,
+                                  n_shards=2, batch_aggregation=True,
+                                  max_coalesce=5,
+                                  drain_timeout_s=60.0) as store:
+        store.drain_all()                   # both workers warm
+        per_model = {m: [] for m in [GLOBAL_KEY] + keys}
+        record_lock = threading.Lock()
+        mig_key = keys[0]
+        mig_dst = (store.shard_of(mig_key) + 1) % 2
+        mig_errors: list = []
+
+        def submitter(t):
+            trng = np.random.default_rng(600 + t)
+            for i in range(per_thread):
+                s = int(trng.integers(1, 80))
+                tree = make_tree(np.random.default_rng(11_000 + t * 997 + i))
+                key = keys[int(trng.integers(len(keys)))]
+                store.handle_model_update("cluster", key, tree,
+                                          ModelMeta(s, 1, 1),
+                                          UpdateDelta(s, 1, 1))
+                store.handle_model_update("global", None, tree,
+                                          ModelMeta(s, 1, 1),
+                                          UpdateDelta(s, 1, 1))
+                with record_lock:
+                    per_model[key].append((tree, ModelMeta(s, 1, 1),
+                                           UpdateDelta(s, 1, 1)))
+                    per_model[GLOBAL_KEY].append((tree, ModelMeta(s, 1, 1),
+                                                  UpdateDelta(s, 1, 1)))
+                time.sleep(1e-3)
+
+        def migrator():
+            try:
+                time.sleep(0.05)
+                epoch = store.migrate_cluster(mig_key, mig_dst)
+                if epoch != 1:
+                    raise AssertionError(f"unexpected epoch {epoch}")
+                store._debug_kill_worker(mig_dst)    # kill the new owner
+            except BaseException as e:               # surfaced below
+                mig_errors.append(e)
+
+        rt = AsyncThreadedRuntime([], store, drain_poll=1e-3,
+                                  join_timeout=120.0)
+        stop = threading.Event()
+        rt._start_drain_workers(stop)
+        threads = [threading.Thread(target=submitter, args=(t,))
+                   for t in range(n_threads)] + \
+                  [threading.Thread(target=migrator)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(120.0)
+            assert not t.is_alive()
+        rt._join_drain_workers(stop)
+        assert not rt.errors and not mig_errors
+
+        total = n_threads * per_thread * 2
+        stats = store.agg_stats()
+        assert stats["cluster_migrations"] == 1
+        assert stats["ownership_epoch"] == 1
+        assert stats["respawns"] >= 1
+        assert store.shard_of(mig_key) == mig_dst    # the fence held
+        assert store.n_enqueued == total
+        assert store.n_updates == total     # replay lost nothing...
+        rounds = store.meta("global").round + \
+            sum(store.meta("cluster", k).round for k in keys)
+        assert rounds == total              # ...and double-counted nothing
+        for lk in [("global", None)] + [("cluster", k) for k in keys]:
+            assert store.effective_round(*lk) == store.meta(*lk).round
+            assert store.pending_depth(*lk) == 0
+        for m, ups in per_model.items():
+            lk = ("global", None) if m == GLOBAL_KEY else ("cluster", m)
+            ref = coalesced_aggregate(init_tree, ModelMeta(), ups, NOFAST)
+            assert store.meta(*lk) == ref.meta, m
+            assert_trees_close(store.params(*lk), ref.params, atol=1e-4,
+                               msg=f"post-migration {m}")
 
 
 @pytest.mark.heavy

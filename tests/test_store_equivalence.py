@@ -38,6 +38,7 @@ Path-parity notes baked into the schedules:
 import itertools
 import threading
 import time
+import zlib
 
 import jax.numpy as jnp
 import numpy as np
@@ -205,6 +206,160 @@ def test_effective_round_parity_flat_vs_sharded():
         assert flat.effective_round(*lk) == proc.effective_round(*lk)
         assert flat.meta(*lk).round == sharded.meta(*lk).round
         assert flat.meta(*lk).round == proc.meta(*lk).round
+
+
+# =========================================================================
+# mid-schedule cluster migration is invisible to the fold (wire v4)
+# =========================================================================
+
+
+def _make_migratable(kind, init, keys, hosts=None, masker=None):
+    """A 4-shard store of the requested topology (migration needs >= 2
+    shards; the flat store has no placement to migrate)."""
+    if kind == "sharded":
+        return ShardedModelStore(init, keys, agg_cfg=NOFAST, n_shards=4,
+                                 batch_aggregation=True, max_coalesce=5,
+                                 masker=masker)
+    if kind == "process":
+        return ProcessShardedModelStore(init, keys, agg_cfg=NOFAST,
+                                        n_shards=4, batch_aggregation=True,
+                                        max_coalesce=5, masker=masker,
+                                        inprocess=True)
+    return ProcessShardedModelStore(init, keys, agg_cfg=NOFAST,
+                                    batch_aggregation=True, max_coalesce=5,
+                                    masker=masker, server_hosts=hosts,
+                                    drain_timeout_s=60.0)
+
+
+def _replay_with_migration(store, events, migrate_at, migrations,
+                           drain_rng=None, drain_prob=0.3):
+    """``replay_through_store`` with ``migrate_cluster`` calls injected
+    before the event at index ``migrate_at`` — mid-stream, so the moving
+    cluster ships a live pending queue."""
+    for idx, (m, p, um, d) in enumerate(events):
+        if idx == migrate_at:
+            for key, dst in migrations:
+                store.migrate_cluster(key, dst)
+        level, key = ("global", None) if m == GLOBAL_KEY else ("cluster", m)
+        store.handle_model_update(level, key, p, um, d)
+        if drain_rng is not None and drain_rng.random() < drain_prob:
+            if drain_rng.random() < 0.5:
+                store.drain(level, key)
+            else:
+                store.drain_all()
+    store.drain_all()
+
+
+def _assert_migration_invisible(kind, hosts=None):
+    """docs/ELASTICITY.md §3 equivalence invariant: the same schedule with
+    a mid-stream migration produces BYTE-identical tier weights, metadata,
+    staleness and submit accounting to the schedule without it.  The two
+    runs are serial (a TCP shard server admits one command session at a
+    time, so two live stores against the loopback fleet would contend)."""
+    rng = np.random.default_rng(23)
+    init = make_tree(rng)
+    keys = [f"c{i}" for i in range(6)]
+    models = [GLOBAL_KEY] + keys
+    events = make_schedule(rng, models, n_updates=80)
+    # move the busiest cluster, mid-stream, to a different shard
+    mkey = max(keys, key=lambda k: sum(1 for m, *_ in events if m == k))
+
+    def run(migrate):
+        store = _make_migratable(kind, init, keys, hosts=hosts)
+        try:
+            if migrate:
+                dst = (store.shard_of(mkey) + 1) % 4
+                assert store.ownership_epoch() == 0
+                _replay_with_migration(store, events, len(events) // 2,
+                                       [(mkey, dst)],
+                                       np.random.default_rng(99))
+                assert store.shard_of(mkey) == dst
+                assert store.ownership_epoch() == 1
+            else:
+                replay_through_store(store, events,
+                                     np.random.default_rng(99))
+            snap = {}
+            for m in models:
+                lk = ("global", None) if m == GLOBAL_KEY else ("cluster", m)
+                snap[m] = (store.meta(*lk), store.effective_round(*lk),
+                           {leaf: np.asarray(store.params(*lk)[leaf])
+                            for leaf in init})
+            assert store.pending_depth("cluster", mkey) == 0
+            return snap, store.agg_stats()
+        finally:
+            if kind == "tcp":
+                store.close()
+
+    base_snap, bs = run(False)
+    mig_snap, ms = run(True)
+    for m in models:
+        assert mig_snap[m][0] == base_snap[m][0], m       # metadata
+        assert mig_snap[m][1] == base_snap[m][1], m       # staleness ref
+        for leaf in init:
+            np.testing.assert_array_equal(
+                mig_snap[m][2][leaf], base_snap[m][2][leaf],
+                err_msg=f"{kind} {m} leaf {leaf!r}")
+    for stat in ("updates", "enqueued", "fast_path_frac"):
+        assert bs[stat] == ms[stat], stat
+    assert bs["cluster_migrations"] == 0
+    assert ms["cluster_migrations"] == 1 and ms["ownership_epoch"] == 1
+    assert ms.get("respawns", 0) == 0          # clean protocol, no crashes
+
+
+@pytest.mark.parametrize("kind", ["sharded", "process"])
+def test_migration_mid_schedule_byte_identical(kind):
+    _assert_migration_invisible(kind)
+
+
+@pytest.mark.slow
+def test_migration_mid_schedule_byte_identical_tcp(tcp_loopback_hosts):
+    _assert_migration_invisible("tcp", hosts=tcp_loopback_hosts)
+
+
+@pytest.mark.parametrize("kind", ["sharded", "process"])
+def test_migration_mid_secure_round_preserves_masked_fold(kind):
+    """Migrating a cluster BETWEEN its secure submits and its secure drain
+    ships the masked round bucket to the new owner, which must fold it
+    bit-identically (masks cancel only in that one fused sum — a dropped
+    or doubled masked update would leave mask residue in the weights)."""
+    from repro.utils.tree import unflatten_params
+
+    rng = np.random.default_rng(29)
+    init = make_tree(rng)
+    keys = [f"c{i}" for i in range(4)]
+    ids = [f"m{j}" for j in range(3)]
+
+    def drive(migrate):
+        mk = PairwiseMasker(seed=2, mask_scale=1.5)
+        store = _make_migratable(kind, init, keys, masker=mk)
+        for key in keys:
+            mkey = store.model_key("cluster", key)
+            for cid in ids:
+                crng = np.random.default_rng(
+                    zlib.crc32(f"{cid}:{key}".encode()))
+                d = jnp.asarray(crng.standard_normal(17), jnp.float32)
+                masked = unflatten_params(
+                    mk.mask_delta_flat(d, cid, ids, 0, mkey, weight=10.0),
+                    init)
+                store.submit_secure("cluster", key, cid, 0, masked,
+                                    UpdateDelta(10, 1, 1))
+        if migrate:
+            for key in keys[:2]:
+                store.migrate_cluster(key, (store.shard_of(key) + 2) % 4)
+        for key in keys:
+            store.drain_secure("cluster", key, 0, ids)
+        return store
+
+    plain, moved = drive(False), drive(True)
+    assert moved.n_secure_rounds == plain.n_secure_rounds
+    assert moved.agg_stats()["cluster_migrations"] == 2
+    for key in keys:
+        assert moved.meta("cluster", key) == plain.meta("cluster", key)
+        mp, pp = moved.params("cluster", key), plain.params("cluster", key)
+        for leaf in init:
+            np.testing.assert_array_equal(
+                np.asarray(mp[leaf]), np.asarray(pp[leaf]),
+                err_msg=f"{kind} secure {key} leaf {leaf!r}")
 
 
 # =========================================================================

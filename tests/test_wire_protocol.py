@@ -57,13 +57,13 @@ def test_frame_golden_bytes_match_spec():
     big-endian length, 8B big-endian trace_ctx (0 = untraced), then the
     payload verbatim."""
     frame = pack_frame(b"hello", KIND_COMMAND)
-    assert frame == _hdr(3, 0, 5) + b"hello"
+    assert frame == _hdr(4, 0, 5) + b"hello"
     reply = pack_frame(b"", KIND_REPLY)
-    assert reply == _hdr(3, 1, 0)
+    assert reply == _hdr(4, 1, 0)
     traced = pack_frame(b"hi", KIND_COMMAND, trace_ctx=0xDEAD_BEEF)
-    assert traced == _hdr(3, 0, 2, 0xDEAD_BEEF) + b"hi"
+    assert traced == _hdr(4, 0, 2, 0xDEAD_BEEF) + b"hi"
     assert HEADER_SIZE == 16
-    assert FRAME_MAGIC == b"FC" and WIRE_VERSION == 3
+    assert FRAME_MAGIC == b"FC" and WIRE_VERSION == 4
 
 
 def test_parse_header_roundtrip():
@@ -74,30 +74,31 @@ def test_parse_header_roundtrip():
 
 def test_frame_bad_magic_rejected():
     with pytest.raises(FrameProtocolError, match="not a FedCCL frame"):
-        parse_header(b"XX" + _hdr(3, 0, 0)[2:])
+        parse_header(b"XX" + _hdr(4, 0, 0)[2:])
 
 
 def test_frame_version_mismatch_raises_clear_error():
     """A peer speaking a different wire version must raise an actionable
     error — never unpack garbage params (versioning rules in the spec).
-    A v2 peer's frames share this header layout but predate the read
-    sessions and the conditional-fetch catalog, so mixing builds fails
-    here instead of at dispatch (and a v1 peer's 8-byte header still
-    carries magic+version first, so the error fires before the short
-    header can be misparsed)."""
+    A v2/v3 peer's frames share this header layout but predate the
+    widened v4 submit shapes (trailing epoch on sub/ssub/ensure) and the
+    migration op family, so mixing builds fails here instead of
+    unpacking fields into the wrong positions at dispatch (and a v1
+    peer's 8-byte header still carries magic+version first, so the error
+    fires before the short header can be misparsed)."""
     old = _hdr(2, 0, 0)
     with pytest.raises(FrameVersionError) as ei:
         parse_header(old)
     msg = str(ei.value)
-    assert "version 2" in msg and "speaks 3" in msg
+    assert "version 2" in msg and "speaks 4" in msg
     assert "WIRE_PROTOCOL" in msg
 
 
 def test_frame_unknown_kind_and_oversize_rejected():
     with pytest.raises(FrameProtocolError, match="kind"):
-        parse_header(_hdr(3, 7, 0))
+        parse_header(_hdr(4, 7, 0))
     with pytest.raises(FrameProtocolError, match="sanity"):
-        parse_header(_hdr(3, 0, transport.MAX_FRAME_BYTES + 1))
+        parse_header(_hdr(4, 0, transport.MAX_FRAME_BYTES + 1))
 
 
 def test_send_recv_frame_over_socketpair():
@@ -244,14 +245,14 @@ def _worker(**kw):
                           kw.get("sync_every", 1))
     w = ShardWorker(0, blob)
     w.handle(unpackb_np(packb(["ensure", "c0",
-                               {"w": np.ones(3, np.float32)}])))
+                               {"w": np.ones(3, np.float32)}, 0])))
     return w
 
 
-def _sub(seq, s=10):
-    return unpackb_np(packb(["sub", seq, "c0",
+def _sub(seq, s=10, key="c0", epoch=0):
+    return unpackb_np(packb(["sub", seq, key,
                              {"w": np.full(3, float(seq), np.float32)},
-                             [s, 1, 1], [s, 1, 1]]))
+                             [s, 1, 1], [s, 1, 1], epoch]))
 
 
 def test_worker_drops_replayed_duplicate_seqs():
@@ -271,12 +272,14 @@ def test_worker_drops_replayed_duplicate_seqs():
 def test_failed_submit_seq_stays_replayable():
     """A submit that errors never entered worker state, so its seq must
     stay replayable (the deferred-error path re-attempts it after the
-    parent respawns/reseeds)."""
+    parent respawns/reseeds).  The poison is a malformed meta (too few
+    fields) on a key the worker serves — an *unknown* key no longer
+    errors since v4, it parks as a possible migration race."""
     w = _worker()
-    bad = unpackb_np(packb(["sub", 5, "nope",
+    bad = unpackb_np(packb(["sub", 5, "c0",
                             {"w": np.ones(3, np.float32)},
-                            [1, 1, 1], [1, 1, 1]]))
-    with pytest.raises(KeyError):
+                            [1, 1], [1, 1, 1], 0]))
+    with pytest.raises(IndexError):
         w.handle(bad)
     assert 5 not in w.held
     w.handle(_sub(0))          # out-of-order lower seq still accepted
@@ -330,7 +333,7 @@ def test_fetch_golden_frame_and_kind_values():
     ``fetched`` reply are the spec integers (§4.7)."""
     payload = packb(["fetch", "c0", None])
     frame = pack_frame(payload, KIND_COMMAND)
-    assert frame == _hdr(3, 0, len(payload)) + payload
+    assert frame == _hdr(4, 0, len(payload)) + payload
     assert (fetch_mod.FETCH_FULL, fetch_mod.FETCH_NOT_MODIFIED,
             fetch_mod.FETCH_DELTA) == (0, 1, 2)
 
@@ -363,7 +366,7 @@ def test_worker_fetch_conditional_kinds():
     params = {"w": rng.standard_normal(400).astype(np.float32)}
     blob = make_seed_blob([], 4, AggregationConfig(), None)
     w = ShardWorker(0, blob)
-    w.handle(unpackb_np(packb(["ensure", "c0", params])))
+    w.handle(unpackb_np(packb(["ensure", "c0", params, 0])))
 
     op, key, kind, payload, meta_w = w.fetch("c0")
     assert (op, key, kind) == ("fetched", "c0", fetch_mod.FETCH_FULL)
@@ -374,7 +377,8 @@ def test_worker_fetch_conditional_kinds():
     assert again == meta_w
 
     w.handle(unpackb_np(packb(
-        ["sub", 0, "c0", {"w": params["w"] + 0.5}, [10, 1, 1], [10, 1, 1]])))
+        ["sub", 0, "c0", {"w": params["w"] + 0.5},
+         [10, 1, 1], [10, 1, 1], 0])))
     w.handle(unpackb_np(packb(["drain", "c0"])))
     op, _, kind, payload, new_meta = w.fetch("c0", held=meta_w)
     assert kind == fetch_mod.FETCH_DELTA and new_meta != meta_w
@@ -415,6 +419,122 @@ def test_wire_cache_serializes_once_per_version_and_keeps_history():
     assert cache.base_for("k", (1, 1, 1)) is a            # retired to history
     assert cache.base_for("k", (2, 2, 2)) is b
     assert cache.base_for("k", (9, 9, 9)) is None
+
+
+# =========================================================================
+# cluster migration (wire v4): golden frames, export/install, redirects
+# =========================================================================
+
+
+def _mig_worker():
+    """A worker serving c0 with two pending submits (seqs 0, 1)."""
+    w = _worker()
+    for seq in (0, 1):
+        w.handle(_sub(seq))
+    return w
+
+
+def test_migration_golden_frames_match_spec():
+    """The §4.8 op family frames like any other v4 command — golden
+    bytes pin the shapes the spec tables document."""
+    for payload in (packb(["mig_export", "c0", 3, 1]),
+                    packb(["mig_install", "c0", 3, None]),
+                    packb(["mig_redirects"])):
+        frame = pack_frame(payload, KIND_COMMAND)
+        assert frame == _hdr(4, 0, len(payload)) + payload
+
+
+def test_export_tombstones_key_and_ships_state():
+    w = _mig_worker()
+    op, key, state = w.handle(unpackb_np(packb(["mig_export", "c0", 1, 1])))
+    assert (op, key) == ("mig_state", "c0")
+    assert [s for s, *_ in state["pending"]] == [0, 1]
+    assert "c0" not in w.records and w.migrated["c0"] == (1, 1)
+    assert w.held == set()          # shipped seqs leave the dedup set
+    # a key this worker no longer holds (post-fence respawn) -> null state
+    assert w.handle(unpackb_np(packb(["mig_export", "nope", 1, 1]))) == \
+        ["mig_state", "nope", None]
+
+
+def test_install_registers_state_and_retry_is_idempotent():
+    w = _mig_worker()
+    state = w.handle(unpackb_np(packb(["mig_export", "c0", 1, 1])))[2]
+    dst = ShardWorker(1, make_seed_blob([], 4, AggregationConfig(), None))
+    reply = dst.handle(unpackb_np(packb(["mig_install", "c0", 1, state])))
+    assert reply == ["mig_installed", "c0", 2]
+    assert len(dst.records["c0"]["pending"]) == 2 and dst.held == {0, 1}
+    # exchange-retry after a lost reply: held seqs skip, nothing doubles
+    again = dst.handle(unpackb_np(packb(["mig_install", "c0", 1, state])))
+    assert again == ["mig_installed", "c0", 0]
+    assert len(dst.records["c0"]["pending"]) == 2
+    # the new owner folds exactly the shipped updates
+    drained = dst.handle(unpackb_np(packb(["drain", "c0"])))
+    assert drained[0] == "drained" and drained[2] == 2
+    assert dst.records["c0"]["meta"].round == 2
+
+
+def test_tombstoned_key_redirects_every_replying_op():
+    """fetch / drain / sdrain on a migrated-away key answer the §4.8
+    redirect naming the new owner and fence epoch — never stale state,
+    never a silent drop."""
+    w = _mig_worker()
+    w.handle(unpackb_np(packb(["mig_export", "c0", 5, 2])))
+    redirect = ["redirect", "c0", 2, 5]
+    assert w.handle(unpackb_np(packb(["fetch", "c0", None]))) == redirect
+    assert w.handle(unpackb_np(packb(["drain", "c0"]))) == redirect
+    assert w.handle(unpackb_np(packb(["sdrain", "c0", 0, []]))) == redirect
+
+
+def test_straggler_sub_parks_then_redirects():
+    """A submit that raced the fence (sent pre-flip, delivered
+    post-export) parks on the old owner; ``mig_redirects`` hands it back
+    for re-delivery — no loss, no error."""
+    w = _mig_worker()
+    w.handle(unpackb_np(packb(["mig_export", "c0", 1, 1])))
+    assert w.handle(_sub(7, epoch=0)) is None        # parked, not served
+    assert len(w.parked) == 1 and 7 not in w.held
+    op, raws = w.handle(unpackb_np(packb(["mig_redirects"])))
+    assert op == "redirected" and len(raws) == 1
+    replayed = unpackb_np(raws[0])
+    assert replayed[0] == "sub" and replayed[1] == 7
+    assert w.parked == []
+
+
+def test_sub_racing_install_parks_then_replays_in_fifo_order():
+    """The destination parks submits arriving before ``mig_install``,
+    then replays them AFTER the shipped pending queue — the submit FIFO
+    survives the migration."""
+    w = _mig_worker()
+    state = w.handle(unpackb_np(packb(["mig_export", "c0", 1, 1])))[2]
+    dst = ShardWorker(1, make_seed_blob([], 4, AggregationConfig(), None))
+    assert dst.handle(_sub(9, epoch=1)) is None      # early: parked
+    assert dst.parked and "c0" not in dst.records
+    dst.handle(unpackb_np(packb(["mig_install", "c0", 1, state])))
+    assert dst.parked == []                          # replayed
+    assert [s for s, *_ in dst.records["c0"]["pending"]] == [0, 1, 9]
+
+
+def test_mirror_push_racing_fence_is_dropped():
+    """A stale replica-style mirror push for a tombstoned key must not
+    resurrect the record on the old owner."""
+    w = _mig_worker()
+    w.handle(unpackb_np(packb(["mig_export", "c0", 1, 1])))
+    assert w.handle(unpackb_np(packb(
+        ["mirror", "c0", {"w": np.zeros(3, np.float32)},
+         [99, 9, 9]]))) is None
+    assert "c0" not in w.records and "c0" in w.migrated
+
+
+def test_seed_blob_carries_epoch_and_tombstones():
+    """A respawned worker must come up post-fence: the seed blob ships
+    the ownership epoch and the tombstone map, so a re-seed can never
+    resurrect a pre-fence ownership view."""
+    blob = make_seed_blob([], 4, AggregationConfig(), None,
+                          epoch=3, migrated={"c0": (2, 3)})
+    w = ShardWorker(0, blob)
+    assert w.epoch == 3 and w.migrated == {"c0": (2, 3)}
+    assert w.handle(unpackb_np(packb(["fetch", "c0", None]))) == \
+        ["redirect", "c0", 2, 3]
 
 
 # =========================================================================
@@ -478,7 +598,7 @@ def test_tcp_handle_frames_are_spec_frames():
     blob = make_seed_blob([], 4, AggregationConfig(), None)
     h = transport.TcpWorkerHandle(0, blob, srv.getsockname(),
                                   connect_timeout=10.0)
-    h.put(packb(["ensure", "c0", {"w": np.ones(2, np.float32)}]))
+    h.put(packb(["ensure", "c0", {"w": np.ones(2, np.float32)}, 0]))
     t.join(10.0)
     srv.close()
     h.discard()
@@ -496,7 +616,7 @@ def test_handle_tx_bytes_exact_under_concurrent_puts():
     Every sent byte must be accounted exactly, no lost increments."""
     blob = make_seed_blob([], 4, AggregationConfig(), None)
     h = InprocessWorkerHandle(0, blob)
-    ensure = packb(["ensure", "c0", {"w": np.ones(3, np.float32)}])
+    ensure = packb(["ensure", "c0", {"w": np.ones(3, np.float32)}, 0])
     ping = packb(["ping"])
     n_putters, per_thread = 8, 40
     barrier = threading.Barrier(n_putters + 1)
