@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   sharded_store_*         sharded-store submit throughput (-> BENCH_sharded.json)
   multiproc_store_*       threaded-K vs process-K serving mix (-> BENCH_multiproc.json)
   privatize_* / secure_*  privacy subsystem overhead (-> BENCH_privacy.json)
+  scenario_*              trace-driven scenario replays (-> BENCH_scenarios.json)
   fed_round_*             Algorithm 1 protocol round timing
   dryrun_*                harness §Roofline rows (if artifacts exist)
 
@@ -65,6 +66,12 @@ def main() -> None:
 
     mrep = multiproc_store.run(fast=fast)
     rows += multiproc_store.csv_rows(mrep)
+
+    # ---- trace-driven scenarios (-> BENCH_scenarios.json) -------------------
+    from benchmarks import scenarios
+
+    screp = scenarios.run(fast=fast)
+    rows += scenarios.csv_rows(screp)
 
     # ---- protocol round timing (Algorithm 1) --------------------------------
     from benchmarks import protocol_timing

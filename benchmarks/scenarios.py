@@ -1,0 +1,117 @@
+"""Scenario-engine benchmark — trace-driven federation replays as a
+performance artifact (-> BENCH_scenarios.json).
+
+Two phases, both pure ``repro.scenario`` runs (docs/SCENARIOS.md):
+
+  diurnal_churn   the flagship 10^5-client day (diurnal availability +
+                  churn + stragglers) replayed against the ``single``
+                  and ``sharded`` topologies in one process, so the
+                  machine cancels out of the gated ratio
+                  (``sharded_vs_single_submits``).  The integrity SLOs
+                  (zero lost updates, monotone effective_round) are
+                  asserted inside the benchmark itself — an SLO break
+                  fails the run, it is never just a slow number.  The
+                  staleness tail (``staleness_p95``, in rounds) is
+                  deterministic for a fixed trace + topology (seeded
+                  RNG, synchronous drains), so the gate pins it as a
+                  lower-is-better metric at the default tolerance.
+
+  drift_ewc       the seasonal concept-drift scenario at lam=0 and
+                  lam>0 with one seed: trajectories are bit-identical
+                  up to the season boundary, so the EWC anchors are a
+                  shared season-A reference and ``retention_ratio``
+                  (baseline drift from the anchor over EWC drift, > 1
+                  when the fused Pallas kernel is pulling its weight)
+                  is a deterministic, gateable number.  ``kernel_calls``
+                  rides along informationally — it proves the
+                  ``ewc_update`` kernel is actually on the path.
+
+``REPRO_BENCH_FAST=1`` (or ``fast=True``) shrinks the population for CI;
+the shapes and assertions are identical.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.scenario import diurnal_churn, drift_ewc, run_scenario
+
+
+def _integrity(rep):
+    rep.assert_slo(lost_updates=0, effective_round_regressions=0,
+                   drain_timeouts=0)
+    return rep
+
+
+def run(fast: bool = False, out_path: str = "BENCH_scenarios.json") -> dict:
+    n, ticks = (20_000, 12) if fast else (100_000, 24)
+
+    rows = []
+    per_topology = {}
+    for topology in ("single", "sharded"):
+        rep = _integrity(run_scenario(diurnal_churn(n, ticks, seed=3),
+                                      topology=topology, n_shards=4))
+        row = rep.summary()
+        rows.append(row)
+        per_topology[topology] = row
+
+    drift_n, drift_ticks = (2_000, 32) if fast else (5_000, 32)
+    base = _integrity(run_scenario(
+        drift_ewc(drift_n, drift_ticks, period=drift_ticks,
+                  ewc_lambda=0.0, seed=13), topology="single"))
+    ewc = _integrity(run_scenario(
+        drift_ewc(drift_n, drift_ticks, period=drift_ticks,
+                  ewc_lambda=25.0, seed=13), topology="single"))
+    assert ewc.ewc["kernel_calls"] > 0, "EWC kernel never called"
+    d_base = sum(float(np.linalg.norm(base.ewc["final_params"][k] - a))
+                 for k, a in ewc.ewc["anchors"].items())
+    d_ewc = sum(float(np.linalg.norm(ewc.ewc["final_params"][k] - a))
+                for k, a in ewc.ewc["anchors"].items())
+
+    report = {
+        "config": {"n_clients": n, "n_ticks": ticks, "fast": bool(fast),
+                   "drift_n_clients": drift_n, "drift_n_ticks": drift_ticks},
+        "rows": rows,
+        "sharded_vs_single_submits":
+            per_topology["sharded"]["submits_per_s"]
+            / per_topology["single"]["submits_per_s"],
+        "staleness_p95": per_topology["sharded"]["slo_staleness_p95"],
+        "drift": {
+            "kernel_calls": ewc.ewc["kernel_calls"],
+            "penalty_last": ewc.ewc["penalty_last"],
+            "anchor_drift_baseline": d_base,
+            "anchor_drift_ewc": d_ewc,
+            "retention_ratio": d_base / max(d_ewc, 1e-9),
+        },
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
+
+
+def csv_rows(report: dict):
+    rows = [(f"scenario_{r['name']}_{r['topology']}_submits_per_s",
+             0.0, f"submits_per_s={r['submits_per_s']:.0f}")
+            for r in report["rows"]]
+    rows.append(("scenario_sharded_vs_single", 0.0,
+                 f"ratio={report['sharded_vs_single_submits']:.2f}"))
+    d = report["drift"]
+    rows.append(("scenario_drift_retention", 0.0,
+                 f"ratio={d['retention_ratio']:.2f},"
+                 f"kernel_calls={d['kernel_calls']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    rep = run(fast=os.environ.get("REPRO_BENCH_FAST", "0") == "1")
+    for r in rep["rows"]:
+        print(f"{r['name']}/{r['topology']}: "
+              f"{r['submits_per_s']:.0f} submits/s, "
+              f"staleness p95 {r.get('slo_staleness_p95')}")
+    print(f"sharded_vs_single: {rep['sharded_vs_single_submits']:.2f}")
+    print(f"drift retention: {rep['drift']['retention_ratio']:.2f} "
+          f"({rep['drift']['kernel_calls']} kernel calls)")
+    print("report -> BENCH_scenarios.json")

@@ -135,11 +135,34 @@ def _privacy_metrics(report: dict) -> dict:
     return out
 
 
+def _scenarios_metrics(report: dict) -> dict:
+    # trace-driven scenario runs (benchmarks/scenarios.py).  Integrity
+    # SLOs (zero lost updates, monotone rounds) are asserted inside the
+    # benchmark, so only performance-shaped verdicts appear here: the
+    # same-run sharded/single throughput ratio (machine cancels out),
+    # the deterministic staleness tail, and the EWC retention ratio.
+    out = {
+        "scenarios/sharded_vs_single_submits":
+            (report["sharded_vs_single_submits"], True),
+        "scenarios/diurnal_churn/staleness_p95":
+            (report["staleness_p95"], False),
+        "scenarios/drift_ewc/retention_ratio":
+            (report["drift"]["retention_ratio"], True),
+        "scenarios/drift_ewc/kernel_calls":
+            (report["drift"]["kernel_calls"], None),
+    }
+    for r in report["rows"]:
+        out[f"scenarios/{r['name']}/{r['topology']}/submits_per_s"] = \
+            (r["submits_per_s"], None)
+    return out
+
+
 BENCHES = [
     # (module name, artifact file name, extractor)
     ("sharded_store", "BENCH_sharded.json", _sharded_metrics),
     ("multiproc_store", "BENCH_multiproc.json", _multiproc_metrics),
     ("privacy_overhead", "BENCH_privacy.json", _privacy_metrics),
+    ("scenarios", "BENCH_scenarios.json", _scenarios_metrics),
 ]
 
 # metrics whose run-to-run spread exceeds the default tolerance even as a
@@ -149,7 +172,9 @@ BENCHES = [
 # reintroduction drops the ratio ~4x) without flaking on scheduler noise
 WIDE_TOLERANCE_PREFIXES = ("multiproc/process_vs_threaded/",
                            "multiproc/fetch_storm/",
-                           "multiproc/rebalance/")
+                           "multiproc/rebalance/",
+                           "scenarios/sharded_vs_single_submits",
+                           "scenarios/drift_ewc/retention_ratio")
 
 # metrics that carry a documented *bound* rather than a throughput: the
 # telemetry off/on ratio is near 1.0 by construction and its baseline is

@@ -69,3 +69,27 @@ def fisher_diag_update(fisher, grads, decay: float = 0.95):
 
 def make_anchor(params, fisher=None, lam: float = 1.0) -> EWCState:
     return EWCState(anchor=jax.tree.map(lambda x: x, params), fisher=fisher, lam=lam)
+
+
+def ewc_adjusted_gradient(grads, params, state: EWCState, *,
+                          interpret=None):
+    """Fused task-gradient + EWC-penalty-gradient via the
+    ``repro.kernels.ewc_update`` Pallas twin — the kernel entry point the
+    drift scenario (``repro.scenario``) trains through.
+
+    ``grads``/``params`` and ``state.anchor``/``state.fisher`` are flat
+    1-D arrays (flatten a pytree with ``jax.flatten_util.ravel_pytree``
+    first if needed).  Returns ``(adjusted_grads, penalty)`` where
+    ``adjusted_grads = grads + lam * F * (params - anchor)`` and
+    ``penalty = (lam/2) * sum F (params - anchor)^2`` — the closed forms
+    of :func:`ewc_penalty_and_grad`, computed in one fused pass."""
+    from repro.kernels.ewc_update.ops import ewc_penalty_grad_flat
+
+    g, pen = ewc_penalty_grad_flat(
+        jnp.float32(state.lam), jnp.asarray(grads, jnp.float32),
+        jnp.asarray(params, jnp.float32),
+        jnp.asarray(state.anchor, jnp.float32),
+        None if state.fisher is None
+        else jnp.asarray(state.fisher, jnp.float32),
+        interpret=interpret)
+    return g, pen

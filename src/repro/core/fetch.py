@@ -249,7 +249,8 @@ class FetchClient:
         self.tx_bytes = 0
         self.rx_bytes = 0
         self.counts = {"full": 0, "not_modified": 0, "delta": 0,
-                       "fallback": 0, "redirects": 0}
+                       "fallback": 0, "redirects": 0,
+                       "endpoint_refreshes": 0}
 
     # -- wiring -----------------------------------------------------
 
@@ -257,21 +258,37 @@ class FetchClient:
         ep = getattr(self.store, "ownership_epoch", None)
         return int(ep()) if callable(ep) else 0
 
-    def refresh_endpoints(self):
+    def refresh_endpoints(self, observed_epoch: int | None = None) -> bool:
         """Re-read the store's endpoint map after an ownership-epoch bump
         (a cluster migrated): swap in the fresh map, remember the epoch it
         was captured at, and drop every cached connection — the next fetch
-        re-dials the (possibly new) owner and replica set."""
+        re-dials the (possibly new) owner and replica set.
+
+        ``observed_epoch`` de-duplicates refresh storms: a caller passes
+        the endpoint epoch it found stale, and the refresh is skipped when
+        another thread already replaced that map (dropping freshly-dialed
+        connections again would just thrash).  Returns whether a refresh
+        actually happened; ``counts["endpoint_refreshes"]`` tallies them."""
+        with self._lock:
+            if (observed_epoch is not None
+                    and self._endpoint_epoch != observed_epoch):
+                return False
         eps = getattr(self.store, "fetch_endpoints", None)
         endpoints = eps() if callable(eps) else None
+        epoch = self._store_epoch()
         with self._lock:
+            if (observed_epoch is not None
+                    and self._endpoint_epoch != observed_epoch):
+                return False    # raced: another caller already refreshed
             if endpoints is not None:
                 self._endpoints = endpoints
-            self._endpoint_epoch = self._store_epoch()
+            self._endpoint_epoch = epoch
+            self.counts["endpoint_refreshes"] += 1
             conns, self._conns = dict(self._conns), {}
             self._rr = {}
         for conn in conns.values():
             conn.close()
+        return True
 
     def _conn_for(self, shard: int, slot: int) -> _ReadConn:
         ck = (shard, slot)
@@ -292,9 +309,13 @@ class FetchClient:
         for attempt in range(2):
             # epoch check first: a migration bumps the store's ownership
             # epoch, invalidating the captured endpoint map (the migrated
-            # cluster's owner — and its replica set — moved with it)
-            if self._store_epoch() != self._endpoint_epoch:
-                self.refresh_endpoints()
+            # cluster's owner — and its replica set — moved with it).
+            # Passing the epoch we found stale de-duplicates the refresh
+            # across concurrent fetchers that all noticed the same bump.
+            captured = self._endpoint_epoch
+            if self._store_epoch() != captured:
+                self.refresh_endpoints(observed_epoch=captured)
+                captured = self._endpoint_epoch     # epoch of the map in use
             shard = self.store.shard_of(key)
             slots = len(self._endpoints[shard])
             start = self._rr.get(shard, 0)
@@ -327,7 +348,7 @@ class FetchClient:
                     continue
                 return reply[2], reply[3], reply[4]
             if redirected and attempt == 0:
-                self.refresh_endpoints()
+                self.refresh_endpoints(observed_epoch=captured)
                 continue
             break
         raise FetchUnavailable(str(last_err))

@@ -35,6 +35,23 @@ class PredictEvolve:
     def __init__(self, spaces: list[ClusterSpace], store: ModelStore):
         self.spaces = spaces
         self.store = store
+        # client_id -> {space name: (insert index, features)}.  A client that
+        # leaves and later re-joins with unchanged features must NOT be
+        # re-inserted: duplicate points count toward min_samples density, so
+        # repeated joins would self-promote an isolated (NOISE) client into a
+        # phantom singleton cluster.  Re-read the stored row's current label
+        # instead (it may legitimately have changed via merges).
+        self._seen: dict[str, dict[str, tuple[int, np.ndarray]]] = {}
+
+    def _insert(self, space: ClusterSpace, client_id: str,
+                feats: np.ndarray) -> int:
+        prior = self._seen.get(client_id, {}).get(space.name)
+        if prior is not None and np.array_equal(prior[1], feats):
+            return int(space.clusterer.labels[prior[0]])
+        label = space.clusterer.insert(feats)
+        idx = len(space.clusterer.labels) - 1
+        self._seen.setdefault(client_id, {})[space.name] = (idx, feats)
+        return label
 
     # ------------------------------------------------------------- bootstrap
     def bootstrap(self, specs: list[ClientSpec]) -> dict[str, list[str]]:
@@ -42,13 +59,17 @@ class PredictEvolve:
         Returns client_id -> cluster keys."""
         assignments: dict[str, list[str]] = {s.client_id: [] for s in specs}
         for space in self.spaces:
+            idx = {}
             for spec in specs:
-                label = space.clusterer.insert(
-                    np.asarray(spec.static_features[space.name], np.float64))
+                feats = np.asarray(spec.static_features[space.name],
+                                   np.float64)
+                self._insert(space, spec.client_id, feats)
+                idx[spec.client_id] = \
+                    self._seen[spec.client_id][space.name][0]
                 # labels can merge/shift as later points arrive; re-read after
             # final labels after all inserts
-            for i, spec in enumerate(specs):
-                label = int(space.clusterer.labels[i])
+            for spec in specs:
+                label = int(space.clusterer.labels[idx[spec.client_id]])
                 key = space.key(label)
                 if key is not None:
                     assignments[spec.client_id].append(key)
@@ -61,7 +82,8 @@ class PredictEvolve:
         (first cluster model if any, else global)."""
         keys = []
         for space in self.spaces:
-            label = space.clusterer.insert(
+            label = self._insert(
+                space, spec.client_id,
                 np.asarray(spec.static_features[space.name], np.float64))
             key = space.key(label)
             if key is not None:

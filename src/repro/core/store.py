@@ -448,6 +448,12 @@ class _SubmitStats:
         with self.lock:
             self.n_enqueued += 1
 
+    def count_enqueue_many(self, n: int):
+        # batched flavor of count_enqueue: same count-before-publish rule,
+        # one lock round trip for the whole batch (submit_many hot path)
+        with self.lock:
+            self.n_enqueued += n
+
     def observe_depth(self, depth: int):
         with self.lock:
             if depth > self.max_queue_depth:
@@ -653,6 +659,60 @@ class _StoreBase(_RegistryBase):
         return self._enqueue_record(
             self._key(level, cluster_key),
             PendingUpdate(updated_params, updated_meta, delta))
+
+    def submit_many(self, level: str, cluster_key: str | None,
+                    updates) -> int:
+        """Batched submit entry point for replay drivers (the scenario
+        engine, ``repro.scenario``): ``updates`` is an iterable of
+        ``(params, meta, delta)`` triples that all target one model.
+
+        In batched mode the whole list is appended under a single
+        queue-lock/stats round trip per destination queue (the per-client
+        protocol overhead — one lock pair, one telemetry touch per update —
+        is what dominates at 10^5 simulated clients; the fold semantics are
+        identical to N ``enqueue_update`` calls in the same order).  In
+        direct mode it degrades to sequential ``_handle_update`` calls.
+        Returns the deepest queue touched (0 for the direct path)."""
+        ups = updates if isinstance(updates, list) else list(updates)
+        if not ups:
+            return 0
+        tel = self._tel
+        t0 = clock.monotonic_ns() if tel is not None else 0
+        if self.batch_aggregation:
+            depth = self._enqueue_many(level, cluster_key, ups)
+        else:
+            for p, m, d in ups:
+                self._handle_update(level, cluster_key, p, m, d)
+            depth = 0
+        if tel is not None:
+            tel.metrics.histogram("submit_batch").observe(len(ups))
+            tel.event("submit_many", t0, clock.monotonic_ns() - t0,
+                      current_trace(), {"level": level, "n": len(ups)})
+        return depth
+
+    def _enqueue_many(self, level: str, cluster_key: str | None,
+                      ups) -> int:
+        """Flavor hook behind ``submit_many``: publish a list of
+        ``(params, meta, delta)`` triples to the destination queue(s).
+        The base path covers every record-queued key (flat store, and the
+        sharded store's cluster tier — ``_submit_stats`` routes the batch
+        to the owning shard's sink)."""
+        return self._enqueue_record_many(
+            self._key(level, cluster_key),
+            [PendingUpdate(p, m, d) for p, m, d in ups])
+
+    def _enqueue_record_many(self, key: str, pend: list) -> int:
+        rec = self._record(key)
+        st = self._submit_stats(key)
+        st.count_enqueue_many(len(pend))   # before publish — see _SubmitStats
+        with rec.pending_lock:
+            rec.pending.extend(pend)
+            depth = len(rec.pending)
+        st.observe_depth(depth)
+        tel = self._tel
+        if tel is not None:
+            tel.metrics.histogram("queue_depth").observe(depth)
+        return depth
 
     def pending_depth(self, level: str, cluster_key: str | None = None) -> int:
         rec = self._record(self._key(level, cluster_key))
@@ -989,6 +1049,33 @@ class ShardedModelStore(_StoreBase):
             tel.metrics.histogram("queue_depth").observe(depth)
             tel.event("enqueue", t0, clock.monotonic_ns() - t0,
                       current_trace(), {"key": GLOBAL_KEY, "depth": depth})
+        return depth
+
+    def _enqueue_many(self, level: str, cluster_key: str | None,
+                      ups) -> int:
+        key = self._key(level, cluster_key)
+        if key != GLOBAL_KEY:
+            return super()._enqueue_many(level, cluster_key, ups)
+        # global tier: scatter the batch round-robin across shard slices in
+        # one pass, preserving arrival seq order (the two-level fold sorts
+        # by seq, so the fold is identical to N single enqueues)
+        per: list[list] = [[] for _ in range(self.n_shards)]
+        for p, m, d in ups:
+            seq = next(self._gseq)
+            per[seq % self.n_shards].append((seq, PendingUpdate(p, m, d)))
+        tel = self._tel
+        depth = 0
+        for sh, items in zip(self._shards, per, strict=True):
+            if not items:
+                continue
+            sh.stats.count_enqueue_many(len(items))  # before publish
+            with sh.lock:
+                sh.global_pending.extend(items)
+                d2 = len(sh.global_pending)
+            sh.stats.observe_depth(d2)
+            depth = max(depth, d2)
+            if tel is not None:
+                tel.metrics.histogram("queue_depth").observe(d2)
         return depth
 
     def pending_depth(self, level: str, cluster_key: str | None = None) -> int:
@@ -1567,6 +1654,16 @@ class ProcessShardedModelStore(_StoreBase):
                 # update may carry another call's trace context
                 args["seq"] = seq
             tel.event("enqueue", t0, clock.monotonic_ns() - t0, trace, args)
+        return depth
+
+    def _enqueue_many(self, level: str, cluster_key: str | None,
+                      ups) -> int:
+        # every update must be journaled individually (respawn replay is
+        # per-entry), so the batch win here is the outbox: FLUSH_N submits
+        # coalesce into one wire frame regardless of entry point
+        depth = 0
+        for p, m, d in ups:
+            depth = self.enqueue_update(level, cluster_key, p, m, d)
         return depth
 
     def pending_depth(self, level: str, cluster_key: str | None = None) -> int:

@@ -133,6 +133,54 @@ def merge_metric_dumps(a: dict, b: dict) -> dict:
     return out
 
 
+def diff_hist_dumps(after: dict, before: dict) -> dict:
+    """Histogram dump covering only what ``after`` observed beyond
+    ``before`` (bucket counts are monotone, so bucket-wise subtraction is
+    exact; ``max`` is the after-side max — a histogram cannot un-observe
+    its peak, so a window's max is an upper bound, never an undercount)."""
+    return {
+        "buckets": [x - y for x, y in zip(after["buckets"],
+                                          before["buckets"], strict=True)],
+        "count": after["count"] - before["count"],
+        "sum": after["sum"] - before["sum"],
+        "max": after["max"],
+    }
+
+
+def diff_metric_dumps(after: dict, before: dict) -> dict:
+    """Scenario-scoped window over two registry dumps of the SAME site(s):
+    counters and histogram buckets subtract (both monotone), gauges keep
+    the after-side value (last-write-wins instruments have no delta).
+    Instruments that first appear in ``after`` pass through unchanged."""
+    out = {"counters": {}, "gauges": dict(after["gauges"]),
+           "histograms": {}}
+    for name, v in after["counters"].items():
+        out["counters"][name] = v - before["counters"].get(name, 0)
+    for name, h in after["histograms"].items():
+        b = before["histograms"].get(name)
+        out["histograms"][name] = dict(h) if b is None \
+            else diff_hist_dumps(h, b)
+    return out
+
+
+class MetricsWindow:
+    """Scenario-scoped metric window: snapshot a dump source at open, diff
+    against it at close — so per-scenario SLO verdicts (repro.scenario)
+    reflect only that scenario's traffic even when the store (and its
+    registry) is reused across runs in one process.
+
+    ``source`` is any zero-arg callable returning a registry dump (a bound
+    ``MetricsRegistry.dump``, or a closure merging multi-site dumps with
+    :func:`merge_metric_dumps`)."""
+
+    def __init__(self, source):
+        self._source = source
+        self._open = source()
+
+    def diff(self) -> dict:
+        return diff_metric_dumps(self._source(), self._open)
+
+
 class MetricsRegistry:
     """Name -> instrument, create-on-first-use (thread-safe)."""
 

@@ -113,3 +113,93 @@ def test_dbscan_labels_well_formed(points):
     assert used == list(range(len(used)))
     # core points are never noise
     assert not np.any((labels == NOISE) & db.core_)
+
+
+# ------------------------------------------------- churn (rejoin) dedup
+
+def _pe(eps=1.1, min_samples=3):
+    from repro.core.predict_evolve import ClusterSpace, PredictEvolve
+    from repro.core.store import ModelStore
+
+    store = ModelStore({"w": np.zeros(4, np.float32)}, [])
+    space = ClusterSpace("loc", IncrementalDBSCAN(eps=eps,
+                                                  min_samples=min_samples))
+    return PredictEvolve([space], store), space
+
+
+def _spec(cid, xy):
+    from repro.core.protocol import ClientSpec
+
+    return ClientSpec(cid, {"loc": np.asarray(xy, np.float64)}, dataset=None)
+
+
+def test_rejoining_client_keeps_cluster_assignment():
+    """Churn regression: a client that departs and returns (join -> leave
+    -> join with unchanged features) gets the same cluster back and does
+    not distort the clustering with duplicate points."""
+    pe, space = _pe()
+    for i, xy in enumerate([[0.0, 0.0], [0.5, 0.0], [1.0, 0.0]]):
+        pe.join(_spec(f"c{i}", xy))
+    keys0, _ = pe.join(_spec("c1", [0.5, 0.0]))   # returning client
+    assert keys0 == ["loc:0"]
+    n_points = len(space.clusterer.labels)
+    keys1, _ = pe.join(_spec("c1", [0.5, 0.0]))   # ...and again
+    assert keys1 == keys0
+    assert len(space.clusterer.labels) == n_points   # no duplicate inserts
+
+
+def test_rejoining_noise_client_stays_noise():
+    """The drift the dedup fixes: duplicate inserts count toward
+    min_samples density, so an isolated client re-joining enough times
+    used to self-promote into a phantom singleton cluster."""
+    pe, space = _pe(min_samples=3)
+    pe.join(_spec("far", [100.0, 100.0]))
+    for _ in range(4):                     # churn: leave + rejoin repeatedly
+        keys, _ = pe.join(_spec("far", [100.0, 100.0]))
+        assert keys == []                  # still NOISE, global model only
+    assert space.clusterer.n_clusters == 0
+    assert len(space.clusterer.labels) == 1
+
+
+def test_rejoin_with_changed_features_reinserts():
+    """A returning client whose static features changed (panel moved,
+    meter re-sited) is a genuinely new point and must be re-clustered."""
+    pe, space = _pe()
+    keys, _ = pe.join(_spec("m", [50.0, 50.0]))
+    assert keys == []
+    for i, xy in enumerate([[0.0, 0.0], [0.5, 0.0], [1.0, 0.0]]):
+        pe.join(_spec(f"c{i}", xy))
+    keys, _ = pe.join(_spec("m", [0.25, 0.0]))    # re-sited into the blob
+    assert keys == ["loc:0"]
+
+
+def test_rejoined_client_sees_merged_label():
+    """Dedup must re-read the stored row's *current* label: merges that
+    happened while the client was away are reflected on rejoin."""
+    pe, space = _pe(eps=1.1)
+    for i, xy in enumerate([[0.0, 0], [0.5, 0], [1.0, 0],
+                            [3.0, 0], [3.5, 0], [4.0, 0]]):
+        pe.join(_spec(f"c{i}", xy))
+    assert space.clusterer.n_clusters == 2
+    keys_before, _ = pe.join(_spec("c3", [3.0, 0]))
+    pe.join(_spec("bridge", [2.0, 0.0]))          # merges the two clusters
+    assert space.clusterer.n_clusters == 1
+    left, _ = pe.join(_spec("c0", [0.0, 0]))
+    right, _ = pe.join(_spec("c3", [3.0, 0]))
+    # the dedup re-reads current labels: both sides of the former split
+    # now resolve to the same (merged) cluster key
+    assert left == right and len(left) == 1
+
+
+def test_bootstrap_then_join_does_not_reinsert():
+    """A bootstrapped client later calling join() (e.g. reconnect after
+    the bootstrap wave) rides the dedup cache too."""
+    pe, space = _pe()
+    specs = [_spec(f"c{i}", xy)
+             for i, xy in enumerate([[0.0, 0], [0.5, 0], [1.0, 0]])]
+    assignments = pe.bootstrap(specs)
+    assert all(v == ["loc:0"] for v in assignments.values())
+    n_points = len(space.clusterer.labels)
+    keys, _ = pe.join(specs[0])
+    assert keys == ["loc:0"]
+    assert len(space.clusterer.labels) == n_points

@@ -1,0 +1,136 @@
+"""FetchClient endpoint-refresh dedup (redirect storms).
+
+A cluster migration bumps the store's ownership epoch; every in-flight
+fetcher notices and used to trigger its *own* endpoint refresh — each one
+dropping every freshly-dialed read connection (a refresh storm that
+thrashes connections without changing the map).  ``refresh_endpoints``
+now takes the epoch the caller observed as stale and refreshes at most
+once per epoch bump; these tests pin that down both at the unit level
+(fake store, real threads) and over real TCP shard servers.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.aggregation import AggregationConfig, ModelMeta, UpdateDelta
+from repro.core.fetch import FetchClient
+from repro.core.store import ProcessShardedModelStore
+
+NOFAST = AggregationConfig(sequential_fast_path=False)
+
+
+@pytest.fixture
+def init_tree():
+    from test_store_equivalence import make_tree
+
+    return make_tree(np.random.default_rng(0))
+
+
+class _FakeStore:
+    """Just enough surface for FetchClient wiring (no sockets)."""
+
+    def __init__(self):
+        self.epoch = 0
+        self.endpoint_reads = 0
+        self._lock = threading.Lock()
+
+    def ownership_epoch(self):
+        return self.epoch
+
+    def fetch_endpoints(self):
+        with self._lock:
+            self.endpoint_reads += 1
+        return {0: [("127.0.0.1", 1)]}
+
+    def model_key(self, level, cluster_key=None):
+        return "g" if level == "global" else f"c:{cluster_key}"
+
+
+def test_refresh_dedup_under_concurrency():
+    """N threads all observing the same stale epoch produce exactly ONE
+    refresh; an unconditional refresh still always runs."""
+    store = _FakeStore()
+    fc = FetchClient(store)
+    assert fc.counts["endpoint_refreshes"] == 0
+    store.epoch = 1                      # a migration happened
+    results = []
+    barrier = threading.Barrier(16)
+
+    def storm():
+        barrier.wait()
+        results.append(fc.refresh_endpoints(observed_epoch=0))
+
+    threads = [threading.Thread(target=storm) for _ in range(16)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(30.0)
+        assert not t.is_alive()
+    assert sum(results) == 1             # one winner, fifteen dedups
+    assert fc.counts["endpoint_refreshes"] == 1
+    # a later caller still holding the old epoch is a no-op too
+    assert fc.refresh_endpoints(observed_epoch=0) is False
+    # unconditional refresh (no observed epoch) is never deduped
+    assert fc.refresh_endpoints() is True
+    assert fc.counts["endpoint_refreshes"] == 2
+
+
+def test_refresh_skips_when_epoch_already_current():
+    store = _FakeStore()
+    fc = FetchClient(store)
+    reads0 = store.endpoint_reads
+    # observed == current endpoint epoch -> refresh DOES run (the caller
+    # is reporting the live epoch stale against a newer store epoch)
+    store.epoch = 3
+    assert fc.refresh_endpoints(observed_epoch=0) is True
+    # stale observation after the swap -> skipped without re-reading
+    assert fc.refresh_endpoints(observed_epoch=0) is False
+    assert store.endpoint_reads == reads0 + 1
+
+
+@pytest.mark.slow
+def test_tcp_redirect_storm_refreshes_once(init_tree, tcp_loopback_hosts):
+    """Real shard servers: migrate a cluster, then hammer the migrated
+    key from many threads.  Every fetch must serve the right bytes from
+    the new owner, with the endpoint map rebuilt a bounded number of
+    times — not once per fetcher."""
+    from test_store_equivalence import make_tree
+
+    rng = np.random.default_rng(4)
+    store = ProcessShardedModelStore(
+        init_tree, ["c0", "c1"], server_hosts=tcp_loopback_hosts[:2],
+        batch_aggregation=True, max_coalesce=5, agg_cfg=NOFAST)
+    with store:
+        store.handle_model_update("cluster", "c0", make_tree(rng),
+                                  ModelMeta(5, 1, 1), UpdateDelta(5, 1, 1))
+        assert store.drain("cluster", "c0") == 1
+        with FetchClient(store) as fc:
+            p0, m0 = fc.fetch("cluster", "c0")
+            assert m0.round == 1 and fc.counts["endpoint_refreshes"] == 0
+            src = store.shard_of("c0")
+            store.migrate_cluster("c0", (src + 1) % 2)
+            errors = []
+            barrier = threading.Barrier(12)
+
+            def fetcher():
+                barrier.wait()
+                try:
+                    for _ in range(4):
+                        _, meta = fc.fetch("cluster", "c0")
+                        assert meta.round == 1
+                except BaseException as e:       # surfaced below
+                    errors.append(e)
+
+            threads = [threading.Thread(target=fetcher) for _ in range(12)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join(60.0)
+                assert not t.is_alive()
+            assert not errors
+            # the storm saw ONE epoch bump: the dedup caps map rebuilds
+            # far below the 48 fetches that all noticed it
+            assert 1 <= fc.counts["endpoint_refreshes"] <= 3
+            assert fc.counts["fallback"] == 0

@@ -1,0 +1,175 @@
+"""Scenario engine tests (docs/SCENARIOS.md): trace-driven federation
+runs with SLO assertions.
+
+The flagship here is :func:`test_hundred_k_diurnal_churn_sharded` — a
+10^5-client day of diurnal availability + churn + stragglers replayed
+against the sharded store in the fast tier, asserting the integrity and
+staleness SLOs.  The population is flat numpy (the engine's design), so
+the wall-clock cost is the *server's*: tens of thousands of submits
+through the batched queue path.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.transport import LoopbackShardServers
+from repro.scenario import (
+    PRESETS,
+    diurnal_churn,
+    drift_ewc,
+    flash_crowd_burst,
+    regional_outage,
+    run_scenario,
+)
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+# ------------------------------------------------------------ acceptance
+
+def test_hundred_k_diurnal_churn_sharded():
+    """10^5 clients, 24 ticks, sharded topology: zero lost updates, no
+    effective-round regressions, bounded staleness tail.  Must stay well
+    inside the fast tier (the engine budget is ~60 s; typical runs are
+    under 5 s)."""
+    rep = run_scenario(diurnal_churn(100_000, 24, seed=3),
+                       topology="sharded", n_shards=4)
+    assert rep.population_peak == 100_000
+    assert rep.submitted > 1_000 and rep.fetched > 1_000
+    assert rep.wall_s < 60.0
+    rep.assert_slo(lost_updates=0, effective_round_regressions=0,
+                   drain_timeouts=0, staleness_p95=4096)
+    # staleness was actually measured, not vacuously absent
+    assert rep.slo["staleness_p95"] > 0
+    assert len(rep.ticks) == 24
+    row = rep.summary()
+    assert row["slo_lost_updates"] == 0 and row["submits_per_s"] > 0
+
+
+def test_scenario_runs_are_deterministic():
+    """Same preset + seed -> identical submit/fetch tallies and identical
+    per-tick logs (the SLO gate depends on this to be debuggable)."""
+    a = run_scenario(flash_crowd_burst(3_000, 8, n_clusters=4, seed=9),
+                     topology="single")
+    b = run_scenario(flash_crowd_burst(3_000, 8, n_clusters=4, seed=9),
+                     topology="single")
+    assert a.submitted == b.submitted and a.fetched == b.fetched
+    assert a.ticks == b.ticks
+    assert a.slo["lost_updates"] == b.slo["lost_updates"] == 0
+
+
+# ------------------------------------------------------- topology smokes
+
+@pytest.mark.parametrize("topology", ["single", "sharded"])
+def test_smoke_inmemory_topologies(topology):
+    rep = run_scenario(regional_outage(4_000, 10, n_clusters=4, seed=5),
+                       topology=topology, n_shards=2)
+    assert rep.submitted > 0 and rep.fetched > 0
+    rep.assert_slo(lost_updates=0, effective_round_regressions=0,
+                   drain_timeouts=0)
+
+
+def test_smoke_process_topology():
+    rep = run_scenario(flash_crowd_burst(2_000, 6, n_clusters=4, seed=5),
+                       topology="process", n_shards=2)
+    assert rep.submitted > 0
+    assert rep.stats.get("respawns", 0) == 0
+    rep.assert_slo(lost_updates=0, effective_round_regressions=0)
+
+
+def test_smoke_tcp_topology(tcp_loopback_hosts):
+    rep = run_scenario(flash_crowd_burst(2_000, 6, n_clusters=4, seed=5),
+                       topology="tcp", hosts=tcp_loopback_hosts)
+    assert rep.submitted > 0
+    rep.assert_slo(lost_updates=0, effective_round_regressions=0)
+
+
+def test_presets_registry_complete():
+    assert set(PRESETS) == {"diurnal_churn", "flash_crowd",
+                            "region_outage", "drift_ewc"}
+
+
+# -------------------------------------------------------- drift + kernel
+
+def test_drift_scenario_ewc_kernel_reduces_forgetting():
+    """Concept-drift ablation: lam=0 vs lam>0 with the same seed share a
+    bit-identical trajectory up to the season boundary (EWC states only
+    exist after anchoring), so the anchor params are a common season-A
+    reference.  The EWC run must (a) actually call the fused kernel with
+    a non-zero penalty and (b) end season B closer to the season-A
+    anchor than the no-EWC baseline — retention, not just wiring."""
+    mk = lambda lam: run_scenario(
+        drift_ewc(2_000, 32, period=32, ewc_lambda=lam, seed=13),
+        topology="single")
+    base, ewc = mk(0.0), mk(25.0)
+    assert base.ewc["kernel_calls"] == 0
+    assert ewc.ewc["kernel_calls"] > 0
+    assert ewc.ewc["penalty_last"] > 0.0
+    assert ewc.ewc["season"] == 1               # the boundary was crossed
+    anchors = ewc.ewc["anchors"]
+    assert anchors                               # clusters were anchored
+    d_base = d_ewc = 0.0
+    for key, anchor in anchors.items():
+        d_base += float(np.linalg.norm(base.ewc["final_params"][key] - anchor))
+        d_ewc += float(np.linalg.norm(ewc.ewc["final_params"][key] - anchor))
+    assert d_ewc < d_base, (
+        f"EWC run drifted further from the season-A anchor than the "
+        f"baseline: {d_ewc:.4f} >= {d_base:.4f}")
+    base.assert_slo(lost_updates=0, effective_round_regressions=0)
+    ewc.assert_slo(lost_updates=0, effective_round_regressions=0)
+
+
+def test_dp_scenario_reports_epsilon_budget():
+    rep = run_scenario(
+        flash_crowd_burst(1_000, 6, n_clusters=4, seed=7,
+                          dp_noise_multiplier=1.2),
+        topology="single")
+    assert rep.slo["epsilon"] is not None and rep.slo["epsilon"] > 0
+    rep.assert_slo(lost_updates=0, epsilon=50.0)
+
+
+def test_assert_slo_reports_all_violations():
+    rep = run_scenario(flash_crowd_burst(1_000, 4, n_clusters=2, seed=1),
+                       topology="single")
+    with pytest.raises(AssertionError) as ei:
+        rep.assert_slo(submitted_nonsense=1, queue_depth_max=-1)
+    msg = str(ei.value)
+    assert "submitted_nonsense" in msg and "queue_depth_max" in msg
+
+
+# ---------------------------------------------------------------- chaos
+
+def _chaos_inject(store, rep, *, kill: bool):
+    """Mid-storm rebalance (+ optional crash): migrate the hottest
+    cluster to the next shard, then sever the destination worker."""
+    dst = (store.shard_of("c0") + 1) % store.n_shards
+    store.migrate_cluster("c0", dst)
+    if kill:
+        store._debug_kill_worker(dst)
+
+
+@pytest.mark.heavy
+@pytest.mark.parametrize("topology", ["sharded", "process", "tcp"])
+def test_chaos_outage_migration_worker_kill(topology):
+    """The satellite chaos scenario: a region outage storm overlaid with
+    a mid-storm cluster migration and (process/tcp) a worker kill.  Zero
+    lost updates and monotone effective_round must hold on every sharded
+    topology — journal replay + respawn + migration epochs are exactly
+    the machinery under test."""
+    scen = regional_outage(5_000, 16, n_clusters=8, seed=11)
+    kill = topology != "sharded"
+    inject = {6: lambda store, rep: _chaos_inject(store, rep, kill=kill)}
+    if topology == "tcp":
+        # also SIGKILL a *server process* mid-run; the supervisor restart
+        # on the same port lets the parent's journaled reconnect re-seed
+        with LoopbackShardServers(2) as srv:
+            inject[10] = lambda store, rep: (srv.kill(0), srv.respawn(0))
+            rep = run_scenario(scen, topology="tcp", hosts=srv.hosts,
+                               inject=inject)
+    else:
+        rep = run_scenario(scen, topology=topology, n_shards=2,
+                           inject=inject)
+    assert rep.stats["cluster_migrations"] >= 1
+    if kill:
+        assert rep.stats["respawns"] >= 1
+    rep.assert_slo(lost_updates=0, effective_round_regressions=0)

@@ -508,7 +508,8 @@ def test_tcp_fetch_connection_loss_falls_back_then_resumes(init_tree):
                 _assert_fetch_matches_store(fc, store, [("cluster", "c0")])
                 assert fc.counts == {"full": 1, "not_modified": 0,
                                      "delta": 0, "fallback": 0,
-                                     "redirects": 0}
+                                     "redirects": 0,
+                                     "endpoint_refreshes": 0}
                 srv.kill(0)
                 # server gone -> parent serves, conditional path intact
                 _assert_fetch_matches_store(fc, store, [("cluster", "c0")])
